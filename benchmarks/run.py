@@ -1,0 +1,79 @@
+"""Benchmark harness — one section per paper table/figure, plus the
+dry-run roofline table.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run [--reps N] [--only table5,...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=200,
+                    help="search repetitions (paper: 1000)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table5,fig")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as T
+
+    sections = {
+        "table4": lambda: T.table4_random_steps(args.reps),
+        "table5": lambda: T.table5_profile_vs_random(args.reps),
+        "table6": lambda: T.table6_hw_portability(max(args.reps * 3 // 4, 20)),
+        "table7": lambda: T.table7_input_portability(max(args.reps * 3 // 4, 20)),
+        "fig": lambda: T.fig_convergence(max(args.reps * 3 // 10, 10)),
+        "table8": lambda: T.table8_starchart(max(args.reps // 5, 10)),
+        "table9": lambda: T.table9_cross_hw_starchart(max(args.reps // 5, 10)),
+        "basin": lambda: T.table_basin_hopping(max(args.reps * 3 // 10, 10)),
+        "roofline": _roofline_section,
+    }
+    wanted = args.only.split(",") if args.only else list(sections)
+    t0 = time.time()
+    table4 = None
+    for name in wanted:
+        t = time.time()
+        if name == "table5" and table4 is not None:
+            T.table5_profile_vs_random(args.reps, t4=table4)
+        elif name == "table4":
+            table4 = sections[name]()
+        else:
+            sections[name]()
+        print(f"[{name}: {time.time() - t:.1f}s]")
+    print(f"\nTotal: {time.time() - t0:.1f}s")
+
+
+def _roofline_section():
+    """§Roofline summary from the dry-run record (see EXPERIMENTS.md)."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "dryrun_results.jsonl")
+    if not os.path.exists(path):
+        print("\n## Roofline: dryrun_results.jsonl missing — run "
+              "scripts_run_dryrun_all.sh first")
+        return
+    print("\n## Roofline (single-pod 16x16, per step; from the dry-run "
+          "compiled artifacts)")
+    hdr = (f"{'arch':24s}{'shape':12s}{'compute':>10}{'memory':>10}"
+           f"{'collect':>10}{'bound':>12}{'useful':>8}")
+    print(hdr)
+    best = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("status") != "ok" or r.get("mesh") != "single":
+            continue
+        best[(r["arch"], r["shape"])] = r
+    for (arch, shape), r in sorted(best.items()):
+        rf = r["roofline"]
+        print(f"{arch:24s}{shape:12s}"
+              f"{rf['compute_s']*1e3:9.1f}ms{rf['memory_s']*1e3:9.1f}ms"
+              f"{rf['collective_s']*1e3:9.1f}ms"
+              f"{rf['dominant']:>12}"
+              f"{rf['useful_flops_ratio']:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""End-to-end driver: train the reduced qwen1.5 config for a few hundred
+steps on CPU with checkpointing (the full-size path is identical — swap
+--smoke for a real mesh).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    args = ap.parse_args()
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+        "--ckpt-dir", "/tmp/repro_train_ckpt", "--ckpt-every", "50",
+    ]
+    raise SystemExit(subprocess.call(cmd, env={"PYTHONPATH": "src",
+                                               "PATH": "/usr/bin:/bin",
+                                               "HOME": "/root"}))
+
+
+if __name__ == "__main__":
+    main()

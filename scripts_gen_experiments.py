@@ -1,0 +1,75 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+sweep records (baseline + optimized)."""
+import json
+import sys
+
+
+def load(path):
+    recs = {}
+    try:
+        for line in open(path):
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r.get("mesh"))] = r
+    except FileNotFoundError:
+        pass
+    return recs
+
+
+def gib(x):
+    return f"{x / 2**30:.2f}"
+
+
+def main():
+    base = load("dryrun_results.jsonl")
+    opt = load("dryrun_results_opt.jsonl")
+
+    print("### Dry-run table (per device; single = 16x16/256 chips, "
+          "multi = 2x16x16/512 chips)\n")
+    print("| arch | shape | mesh | status | args GiB | temp GiB | "
+          "GFLOP/dev | coll GB/chip | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(base):
+        r = base[key]
+        if r["status"] == "skipped":
+            print(f"| {key[0]} | {key[1]} | {key[2]} | SKIP ({r['reason'][:40]}) "
+                  f"| – | – | – | – | – |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {key[0]} | {key[1]} | {key[2]} | {r['status']} "
+                  f"| – | – | – | – | – |")
+            continue
+        rf = r["roofline"]
+        print(f"| {key[0]} | {key[1]} | {key[2]} | ok "
+              f"| {gib(r['memory']['argument_bytes'])} "
+              f"| {gib(r['memory']['temp_bytes'])} "
+              f"| {rf['flops'] / rf['chips'] / 1e9:.0f} "
+              f"| {rf['collective_bytes'] / 1e9:.2f} "
+              f"| {r['compile_s']} |")
+
+    print("\n### Roofline table — BASELINE vs OPTIMIZED (single-pod, "
+          "per step, seconds)\n")
+    print("| arch | shape | compute | memory | collective | bound | "
+          "useful | opt compute | opt memory | opt coll | opt useful |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(base):
+        if key[2] != "single":
+            continue
+        r = base[key]
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        o = opt.get(key)
+        of = o["roofline"] if o and o.get("status") == "ok" else None
+        opt_cells = (
+            f"| {of['compute_s']:.2f} | {of['memory_s']:.2f} "
+            f"| {of['collective_s']:.2f} | {of['useful_flops_ratio']:.2f} |"
+            if of else "| – | – | – | – |")
+        print(f"| {key[0]} | {key[1]} "
+              f"| {rf['compute_s']:.2f} | {rf['memory_s']:.2f} "
+              f"| {rf['collective_s']:.2f} | {rf['dominant']} "
+              f"| {rf['useful_flops_ratio']:.2f} "
+              + opt_cells)
+
+
+if __name__ == "__main__":
+    main()

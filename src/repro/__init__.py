@@ -1,0 +1,8 @@
+"""repro: profile-counter-guided autotuning for a multi-pod JAX/TPU framework.
+
+Reproduction of Filipovič et al. (2021), "Using hardware performance counters
+to speed up autotuning convergence on GPUs", adapted to TPU and integrated as
+a first-class feature of a JAX training/serving framework.  See README.md.
+"""
+
+__version__ = "1.0.0"

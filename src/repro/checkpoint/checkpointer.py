@@ -1,0 +1,137 @@
+"""Mesh-agnostic checkpointing: atomic, async, keep-last-k, elastic restore.
+
+Checkpoints are written as host numpy arrays keyed by pytree path — no mesh
+or sharding information is baked in, so a checkpoint saved on a 16x16 mesh
+restores onto 2x16x16, 4x4, or a single host (elastic up/down-scaling).
+Writes go to a temp directory and are atomically renamed; a background
+thread does the serialization so the train loop only blocks on device→host
+transfer of the sharded leaves it owns.
+
+This is the fault-tolerance unit: on failure the launcher re-execs and
+``restore_latest`` resumes from the last complete step (see launch/train.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=()) -> List[Tuple[str, Any]]:
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], prefix + (str(k),)))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.extend(_flatten(getattr(tree, k), prefix + (k,)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(_flatten(v, prefix + (str(i),)))
+    else:
+        out.append(("/".join(prefix), tree))
+    return out
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray], prefix=()):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(template[k], flat, prefix + (str(k),))
+                for k in template}
+    if hasattr(template, "_fields"):
+        return type(template)(*(
+            _unflatten_into(getattr(template, k), flat, prefix + (k,))
+            for k in template._fields))
+    if isinstance(template, (list, tuple)):
+        return type(template)(
+            _unflatten_into(v, flat, prefix + (str(i),))
+            for i, v in enumerate(template))
+    key = "/".join(prefix)
+    if key not in flat:
+        raise KeyError(f"checkpoint missing leaf {key!r}")
+    return flat[key]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -------------------------------------------------------------------
+    def save(self, step: int, state) -> None:
+        """Device→host transfer now; serialization possibly in background."""
+        flat = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat}
+        self.wait()  # one in-flight write at a time
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host: Dict[str, np.ndarray]) -> None:
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in host.items()})
+        meta = {"step": step, "leaves": sorted(host),
+                "format": 1}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template, shardings=None):
+        """Restore onto any mesh: ``shardings`` (matching the template tree)
+        places each leaf; None keeps host arrays / default placement."""
+        path = os.path.join(self.directory, f"step_{step:010d}", "arrays.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        state = _unflatten_into(template, flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return state
+
+    def restore_latest(self, template, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, template, shardings)

@@ -1,0 +1,43 @@
+"""Core: the paper's contribution — profile-counter-guided tuning-space search.
+
+Public API:
+    TuningParameter, TuningSpace          — generic tuning spaces
+    CounterSet, PC_OPS, PC_STRESS         — TPU counter taxonomy
+    HardwareSpec, SPECS                   — virtual TPU testbed
+    analyze / compute_delta_pc            — expert system
+    DecisionTreeModel / QuadraticRegressionModel / ExactCounterModel
+    ProfileBasedSearcher (+ baselines)    — Algorithm 1
+    autotune / train_model / run_search_experiment
+"""
+from repro.core.bottleneck import analyze
+from repro.core.counters import PC_OPS, PC_STRESS, CounterSet
+from repro.core.evaluate import (CostModelEvaluator, RecordedSpace,
+                                 ReplayEvaluator, record_space)
+from repro.core.hwspec import PORTABILITY_SET, PRODUCTION, SPECS, HardwareSpec
+from repro.core.model import (DecisionTreeModel, ExactCounterModel,
+                              QuadraticRegressionModel,
+                              deliberate_training_sample)
+from repro.core.reaction import compute_delta_pc
+from repro.core.searcher import (BasinHoppingSearcher, ProfileBasedSearcher,
+                                 ProfileLocalSearcher, RandomSearcher,
+                                 StarchartSearcher)
+from repro.core.tuner import (SearchStats, TuneResult, autotune,
+                              convergence_curve, run_search_experiment,
+                              steps_to_well_performing, train_model,
+                              train_model_deliberate)
+from repro.core.tuning_space import (Config, TuningParameter, TuningSpace,
+                                     powers_of_two)
+
+__all__ = [
+    "analyze", "autotune", "compute_delta_pc", "convergence_curve",
+    "record_space", "run_search_experiment", "steps_to_well_performing",
+    "train_model", "train_model_deliberate", "deliberate_training_sample",
+    "powers_of_two",
+    "BasinHoppingSearcher", "Config", "CostModelEvaluator", "CounterSet",
+    "DecisionTreeModel", "ExactCounterModel", "HardwareSpec", "PC_OPS",
+    "PC_STRESS", "PORTABILITY_SET", "PRODUCTION", "ProfileBasedSearcher",
+    "ProfileLocalSearcher", "QuadraticRegressionModel",
+    "RandomSearcher", "RecordedSpace",
+    "ReplayEvaluator", "SPECS", "SearchStats", "StarchartSearcher",
+    "TuneResult", "TuningParameter", "TuningSpace",
+]

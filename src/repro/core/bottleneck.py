@@ -1,0 +1,103 @@
+"""Expert system, part 1: performance counters → bottleneck vector B.
+
+Faithful adaptation of paper §3.5.1 (Eqs. 6–14) with the TPU counter mapping
+of DESIGN.md §2.  Bottleneck values live in [0, 1]: 0 = subsystem unstressed,
+1 = at theoretical peak.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import counters as C
+from repro.core.counters import CounterSet
+
+# Bottleneck keys
+B_HBM_READ = "b_hbm_read"
+B_HBM_WRITE = "b_hbm_write"
+B_VMEM_READ = "b_vmem_read"
+B_VMEM_WRITE = "b_vmem_write"
+B_CMEM = "b_cmem"
+B_SPILL = "b_spill"
+B_ICI = "b_ici"
+B_MXU = "b_mxu"
+B_VPU = "b_vpu"
+B_TRANS = "b_trans"
+B_ISSUE = "b_issue"
+B_CORE = "b_core"      # paper b_sm (Eq. 13)
+B_PARAL = "b_paral"    # paper Eq. 14
+
+ALL_BOTTLENECKS = (
+    B_HBM_READ, B_HBM_WRITE, B_VMEM_READ, B_VMEM_WRITE, B_CMEM, B_SPILL,
+    B_ICI, B_MXU, B_VPU, B_TRANS, B_ISSUE, B_CORE, B_PARAL,
+)
+
+# Paper Eq. 14 uses cores*5 GPU threads; TPU needs ~4 programs/core in flight
+# to keep double-buffered DMA pipelines busy (DESIGN.md §2).
+PROGRAMS_PER_CORE = 4
+
+
+def _rw_split(read: float, write: float, util: float) -> tuple:
+    tot = read + write
+    if tot <= 0.0:
+        return 0.0, 0.0
+    return read / tot * util, write / tot * util
+
+
+def analyze(pc: CounterSet, cores: int) -> Dict[str, float]:
+    """Compute the bottleneck vector B from one profiled sample.
+
+    ``cores`` is the TensorCore count of the *autotuning* hardware (the
+    bottleneck component always analyzes the device the kernel actually ran
+    on — paper §3.3).
+    """
+    b: Dict[str, float] = {k: 0.0 for k in ALL_BOTTLENECKS}
+
+    # --- memory subsystems (Eqs. 6-7 pattern) ---------------------------------
+    b[B_HBM_READ], b[B_HBM_WRITE] = _rw_split(
+        pc.op(C.HBM_RD), pc.op(C.HBM_WR), pc.st(C.HBM_U)
+    )
+    b[B_VMEM_READ], b[B_VMEM_WRITE] = _rw_split(
+        pc.op(C.VMEM_RD), pc.op(C.VMEM_WR), pc.st(C.VMEM_U)
+    )
+    # texture-cache analog: read-only scalar/const path — utilization as-is
+    b[B_CMEM] = pc.st(C.CMEM_U)
+
+    # --- spill (local memory, Eq. 8) ------------------------------------------
+    mem_bytes = pc.op(C.HBM_RD) + pc.op(C.HBM_WR) + pc.op(C.SPILL_B)
+    spill_frac = pc.op(C.SPILL_B) / mem_bytes if mem_bytes > 0 else 0.0
+    b[B_SPILL] = spill_frac * max(pc.st(C.HBM_U), pc.st(C.VMEM_U), pc.st(C.CMEM_U))
+
+    # --- interconnect (TPU-specific; no GPU analog) ---------------------------
+    b[B_ICI] = pc.st(C.ICI_U)
+
+    # --- instruction utilizations (Eqs. 9-11) ---------------------------------
+    # ins_fitted: total issued compute ops corrected by lane efficiency
+    # (LANE_E is the warp-execution-efficiency analog: tile padding waste).
+    issued = pc.op(C.ISSUE_OPS)
+    if issued <= 0.0:
+        issued = pc.op(C.MXU_FLOPS) + pc.op(C.VPU_OPS) + pc.op(C.TRANS_OPS)
+    lane_e = max(pc.st(C.LANE_E, 1.0), 1e-6)
+    ins_fitted = issued / lane_e if issued > 0 else 1.0
+
+    # dual-issue rule (paper: Volta issues int and fp separately -> /50%):
+    # TPU issues MXU and VPU on separate pipes, ISSUE_U==0.5 is one full pipe.
+    ins_util = min(1.0, pc.st(C.ISSUE_U) / 0.5)
+
+    frac_mxu = pc.op(C.MXU_FLOPS) / ins_fitted if ins_fitted > 0 else 0.0
+    frac_vpu = pc.op(C.VPU_OPS) / ins_fitted if ins_fitted > 0 else 0.0
+    frac_trans = pc.op(C.TRANS_OPS) / ins_fitted if ins_fitted > 0 else 0.0
+    b[B_MXU] = min(1.0, frac_mxu) * ins_util
+    b[B_VPU] = min(1.0, frac_vpu) * ins_util
+    b[B_TRANS] = min(1.0, frac_trans) * ins_util
+
+    # --- issue-slot starvation (Eq. 12) ----------------------------------------
+    util_max = min(1.0, max(frac_mxu, frac_vpu, frac_trans))
+    b[B_ISSUE] = util_max * (1.0 - pc.st(C.ISSUE_U))
+
+    # --- parallelism (Eqs. 13-14) -----------------------------------------------
+    b[B_CORE] = 1.0 - pc.st(C.CORE_E)
+    target = cores * PROGRAMS_PER_CORE
+    grid = pc.op(C.GRID, 1.0)
+    b[B_PARAL] = max(0.0, (target - grid) / target)
+
+    return b

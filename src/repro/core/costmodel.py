@@ -1,0 +1,129 @@
+"""Analytic TPU execution model: PC_ops × HardwareSpec → runtime + PC_stress.
+
+Plays the role of the physical devices in the paper's evaluation (§4.1 replays
+recorded tuning spaces 1000x instead of re-running kernels; our recorded
+spaces are produced by this model from statically-derived counters of real
+Pallas kernels, validated for correctness in interpret mode).
+
+The model implements the first-order TPU execution structure:
+  * MXU and VPU issue on separate pipelines (dual issue — Volta analogy §3.5.1),
+    transcendentals share the VPU's slow path;
+  * per-program working set must fit VMEM; 2x (double buffering) is needed to
+    overlap DMA with compute, otherwise DMA serializes with compute;
+  * working set beyond VMEM capacity spills to HBM (read+write round trip) —
+    the local-memory analog (paper Eq. 8);
+  * fewer grid programs than cores leaves cores idle; fewer than
+    LATENCY_HIDING_PROGRAMS per core fails to hide launch/DMA latency;
+  * tile-padding lane waste derates MXU throughput (warp-efficiency analog);
+  * inter-chip collectives occupy the ICI independently and overlap with
+    compute only when double-buffered.
+
+This is exactly the role of ``f : TP x I x GPU -> PC`` in the paper (Eq. 2):
+hardware-dependent.  The *static* counter derivation in each kernel's
+``space.py`` is ``g : TP x I -> PC`` (Eq. 3) — hardware-independent.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.core import counters as C
+from repro.core.hwspec import HardwareSpec
+
+# Programs per core needed to hide DMA/launch latency (paper Eq. 14 uses 5
+# threads/core on GPUs; TPU double-buffered DMA pipelines need ~4 in flight).
+LATENCY_HIDING_PROGRAMS = 4
+
+
+def execute(ops: Dict[str, float], hw: HardwareSpec) -> C.CounterSet:
+    """Run the analytic machine: ops counters -> (runtime, stress counters).
+
+    ``ops`` are kernel totals (bytes / flops / program counts) as produced by a
+    kernel's workload model or by XLA cost analysis.  ``SPILL_B`` may be 0 in
+    the portable view; the true spill for *this* hardware's VMEM capacity is
+    recomputed here (cache-capacity effect, paper §3.1 imprecision note).
+    """
+    grid = max(1.0, float(ops.get(C.GRID, 1.0)))
+    ws = float(ops.get(C.VMEM_WS, 0.0))
+    lane_e = _lane_efficiency(ops)
+
+    # --- hardware-true spill (overrides portable estimate) -------------------
+    spill_per_prog = max(0.0, ws - hw.vmem_bytes)
+    spill_bytes = max(float(ops.get(C.SPILL_B, 0.0)), 2.0 * spill_per_prog * grid)
+
+    # --- core-level parallel efficiency --------------------------------------
+    cores = float(hw.cores)
+    if grid < cores:
+        core_e = grid / cores
+    else:
+        waves = math.ceil(grid / cores)
+        core_e = grid / (waves * cores)  # tail-wave imbalance
+
+    # --- pipe times (totals over the whole kernel) ---------------------------
+    eff_mxu = hw.mxu_flops * core_e * max(lane_e, 1e-3)
+    t_mxu = float(ops.get(C.MXU_FLOPS, 0.0)) / eff_mxu
+    t_vpu = float(ops.get(C.VPU_OPS, 0.0)) / (hw.vpu_flops * core_e)
+    t_trans = float(ops.get(C.TRANS_OPS, 0.0)) / (hw.trans_flops * core_e)
+    t_hbm = (
+        float(ops.get(C.HBM_RD, 0.0))
+        + float(ops.get(C.HBM_WR, 0.0))
+        + spill_bytes
+    ) / hw.hbm_bw
+    t_vmem = (
+        float(ops.get(C.VMEM_RD, 0.0)) + float(ops.get(C.VMEM_WR, 0.0))
+    ) / hw.vmem_bw
+    t_cmem = float(ops.get(C.CMEM_RD, 0.0)) / hw.cmem_bw
+    t_ici = float(ops.get(C.ICI_B, 0.0)) / hw.ici_chip_bw
+
+    t_exec = max(t_mxu, t_vpu + t_trans)          # dual-issue pipes
+    t_mem = max(t_hbm, t_vmem, t_cmem)
+
+    # --- overlap structure ----------------------------------------------------
+    double_buffered = ws > 0 and 2.0 * ws <= hw.vmem_bytes
+    programs_per_core = grid / cores
+    latency_hidden = programs_per_core >= LATENCY_HIDING_PROGRAMS
+
+    t_launch = hw.launch_latency * grid / max(1.0, min(grid, cores))
+    if double_buffered:
+        t_body = max(t_exec, t_mem, t_ici)
+    else:
+        # DMA cannot overlap compute; collectives still use their own fabric.
+        t_body = t_exec + t_mem + max(0.0, t_ici - t_exec - t_mem)
+        t_body = max(t_body, t_ici)
+    if not latency_hidden:
+        # exposed per-program latency
+        t_launch += hw.launch_latency * max(
+            0.0, LATENCY_HIDING_PROGRAMS - programs_per_core
+        )
+    runtime = t_body + t_launch
+    runtime = max(runtime, 1e-9)
+
+    # --- stress counters -------------------------------------------------------
+    stress = {
+        C.HBM_U: min(1.0, t_hbm / runtime),
+        C.VMEM_U: min(1.0, t_vmem / runtime),
+        C.CMEM_U: min(1.0, t_cmem / runtime),
+        C.ICI_U: min(1.0, t_ici / runtime),
+        C.MXU_U: min(1.0, t_mxu / runtime),
+        C.VPU_U: min(1.0, t_vpu / runtime),
+        C.TRANS_U: min(1.0, t_trans / runtime),
+        # dual pipe: 1.0 == both pipes saturated; 0.5 == one pipe saturated
+        C.ISSUE_U: min(1.0, (min(1.0, t_mxu / runtime) + min(1.0, (t_vpu + t_trans) / runtime)) / 2.0),
+        C.CORE_E: core_e,
+        C.LANE_E: lane_e,
+        C.VMEM_OCC: min(1.0, ws / hw.vmem_bytes) if hw.vmem_bytes else 0.0,
+    }
+    ops_out = {k: float(v) for k, v in ops.items() if k in C.PC_OPS}
+    ops_out[C.SPILL_B] = spill_bytes
+    return C.CounterSet(ops=ops_out, stress=stress, runtime=runtime)
+
+
+def _lane_efficiency(ops: Dict[str, float]) -> float:
+    """Useful-lane fraction; kernels report it via a pseudo-counter convention.
+
+    Workload models fold padding waste into LANE_E by storing it under
+    ``VMEM_WS`` metadata-free channels is ugly; instead they put the effective
+    value in ops['LANE_E_HINT'] if present (kept out of PC_OPS — purely a
+    model input).
+    """
+    return float(ops.get("LANE_E_HINT", 1.0))

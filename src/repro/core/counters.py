@@ -1,0 +1,94 @@
+"""TPU performance-counter taxonomy (paper §3.1, Table 1 — adapted).
+
+The paper splits NVIDIA counters into ``PC_ops`` (operation counts; the
+TP→PC_ops relation is portable across hardware and inputs, Eqs. 3–5) and
+``PC_stress`` (subsystem utilizations; hardware/input dependent, measured live).
+
+On TPU there is no CUPTI; every Ops counter is statically derivable from the
+compiled artifact / BlockSpec arithmetic (see DESIGN.md §2 for the mapping
+table).  Stress counters are produced by the execution model (or, on real
+hardware, by the profiler) — they describe *how loaded* each subsystem was.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# --- PC_ops: hardware/input-portable operation counts -------------------------
+# bytes moved HBM -> VMEM (analog of dram_read_transactions)
+HBM_RD = "HBM_RD"
+# bytes moved VMEM -> HBM (analog of dram_write_transactions)
+HBM_WR = "HBM_WR"
+# VMEM<->VREG traffic bytes (analog of l2 transactions)
+VMEM_RD = "VMEM_RD"
+VMEM_WR = "VMEM_WR"
+# scalar/const memory reads (analog of tex_cache_transactions)
+CMEM_RD = "CMEM_RD"
+# spill bytes: VMEM oversubscription spilling to HBM (analog local_memory_overhead)
+SPILL_B = "SPILL_B"
+# MXU matrix fused ops (analog inst_fp_32)
+MXU_FLOPS = "MXU_FLOPS"
+# vector (VPU) elementwise ops (analog inst_integer / misc)
+VPU_OPS = "VPU_OPS"
+# transcendental ops: exp/rsqrt/log — slow path on VPU (analog inst_fp special)
+TRANS_OPS = "TRANS_OPS"
+# total issued ops (analog inst_executed)
+ISSUE_OPS = "ISSUE_OPS"
+# number of grid programs (parallelism; analog of thread count / Δpc_global)
+GRID = "GRID"
+# inter-chip collective bytes crossing ICI (no GPU analog; TPU-specific)
+ICI_B = "ICI_B"
+# working-set bytes held in VMEM per program (occupancy input)
+VMEM_WS = "VMEM_WS"
+
+PC_OPS = (
+    HBM_RD, HBM_WR, VMEM_RD, VMEM_WR, CMEM_RD, SPILL_B,
+    MXU_FLOPS, VPU_OPS, TRANS_OPS, ISSUE_OPS, GRID, ICI_B, VMEM_WS,
+)
+
+# --- PC_stress: live utilizations in [0, 1] -----------------------------------
+HBM_U = "HBM_U"        # HBM bandwidth utilization
+VMEM_U = "VMEM_U"      # VMEM bandwidth utilization
+CMEM_U = "CMEM_U"      # scalar/const memory utilization (tex analog)
+ICI_U = "ICI_U"        # interconnect utilization
+MXU_U = "MXU_U"        # matrix unit utilization
+VPU_U = "VPU_U"        # vector unit utilization
+TRANS_U = "TRANS_U"    # transcendental path utilization
+ISSUE_U = "ISSUE_U"    # issue-slot utilization (MXU+VPU dual pipe)
+CORE_E = "CORE_E"      # fraction of cores with >=1 program (sm_efficiency analog)
+LANE_E = "LANE_E"      # useful-lane fraction, tile padding waste (warp_e analog)
+VMEM_OCC = "VMEM_OCC"  # VMEM occupancy: working set / capacity
+
+PC_STRESS = (
+    HBM_U, VMEM_U, CMEM_U, ICI_U, MXU_U, VPU_U, TRANS_U, ISSUE_U,
+    CORE_E, LANE_E, VMEM_OCC,
+)
+
+ALL_COUNTERS = PC_OPS + PC_STRESS
+
+
+@dataclasses.dataclass
+class CounterSet:
+    """One profiled sample: ops counts + stress utilizations + runtime."""
+
+    ops: Dict[str, float]
+    stress: Dict[str, float]
+    runtime: float  # seconds
+
+    def __post_init__(self):
+        for k in self.ops:
+            if k not in PC_OPS:
+                raise KeyError(f"unknown PC_ops counter {k!r}")
+        for k in self.stress:
+            if k not in PC_STRESS:
+                raise KeyError(f"unknown PC_stress counter {k!r}")
+
+    def op(self, name: str, default: float = 0.0) -> float:
+        return float(self.ops.get(name, default))
+
+    def st(self, name: str, default: float = 0.0) -> float:
+        return float(self.stress.get(name, default))
+
+
+def zero_ops() -> Dict[str, float]:
+    return {k: 0.0 for k in PC_OPS}

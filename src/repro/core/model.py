@@ -1,0 +1,267 @@
+"""Models of the TP → PC_ops relation (paper §3.4).
+
+Two model families, both implemented from scratch on numpy:
+
+* ``DecisionTreeModel`` (§3.4.2): regression trees built top-down greedily
+  (ID3-style with Standard Deviation Reduction == MSE split criterion).  A
+  candidate set of trees with varying structural hyperparameters is trained on
+  a random 50% of the explored space, evaluated on the other 50%, and the tree
+  with the lowest MAE (ties broken by RMSE) is selected — per counter.
+
+* ``QuadraticRegressionModel`` (§3.4.1): per binary-parameter subspace,
+  least-squares fit over main effects, pairwise interactions and quadratic
+  terms of the non-binary parameters.  Training points are sampled
+  deliberately: 2-3 values per non-binary parameter.
+
+Models are trained once (on any hardware/input — the portability thesis) and
+predict all PC_ops counters for unseen configurations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import counters as C
+from repro.core.tuning_space import TuningSpace
+
+# Counters the models learn (the portable PC_ops set).  GRID and VMEM_WS are
+# included: they are statically known, making the model's job easy for them —
+# the paper likewise feeds thread counts through the model path.
+MODELED_COUNTERS: Tuple[str, ...] = C.PC_OPS
+
+
+class TPPCModel:
+    """Interface: predict PC_ops for a configuration index / dict."""
+
+    def predict(self, cfg: Dict) -> Dict[str, float]:
+        raise NotImplementedError
+
+    def predict_many(self, cfgs: Sequence[Dict]) -> List[Dict[str, float]]:
+        return [self.predict(c) for c in cfgs]
+
+
+# =============================================================================
+# Decision tree regression (from scratch)
+# =============================================================================
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    left: Optional["_Node"] = None
+    right: Optional["_Node"] = None
+    value: float = 0.0
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.left is None
+
+
+def _build_tree(
+    X: np.ndarray,
+    y: np.ndarray,
+    depth: int,
+    max_depth: int,
+    min_samples: int,
+) -> _Node:
+    node = _Node(value=float(y.mean()) if y.size else 0.0)
+    if depth >= max_depth or y.size < 2 * min_samples or np.all(y == y[0]):
+        return node
+    best = None  # (sse, feature, threshold)
+    base_sse = float(((y - y.mean()) ** 2).sum())
+    for f in range(X.shape[1]):
+        vals = np.unique(X[:, f])
+        if vals.size < 2:
+            continue
+        # candidate thresholds between consecutive values
+        for t in (vals[:-1] + vals[1:]) / 2.0:
+            lm = X[:, f] <= t
+            nl = int(lm.sum())
+            if nl < min_samples or y.size - nl < min_samples:
+                continue
+            yl, yr = y[lm], y[~lm]
+            sse = float(((yl - yl.mean()) ** 2).sum() + ((yr - yr.mean()) ** 2).sum())
+            if best is None or sse < best[0]:
+                best = (sse, f, float(t))
+    if best is None or best[0] >= base_sse - 1e-12:
+        return node
+    _, f, t = best
+    lm = X[:, f] <= t
+    node.feature, node.threshold = f, t
+    node.left = _build_tree(X[lm], y[lm], depth + 1, max_depth, min_samples)
+    node.right = _build_tree(X[~lm], y[~lm], depth + 1, max_depth, min_samples)
+    return node
+
+
+def _tree_predict(node: _Node, x: np.ndarray) -> float:
+    while not node.is_leaf:
+        node = node.left if x[node.feature] <= node.threshold else node.right
+    return node.value
+
+
+# Candidate structural hyperparameters ("we also alter parent nodes" §3.4.2).
+_TREE_CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (4, 2), (6, 2), (8, 1), (10, 1), (12, 1), (16, 1),
+)
+
+
+class DecisionTreeModel(TPPCModel):
+    """One selected regression tree per PC_ops counter (§3.4.2)."""
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        cfgs: Sequence[Dict],
+        counters: Sequence[Dict[str, float]],
+        rng: Optional[np.random.Generator] = None,
+        counters_to_model: Sequence[str] = MODELED_COUNTERS,
+    ):
+        rng = rng or np.random.default_rng(0)
+        self.space = space
+        X = np.array([space.vectorize(c) for c in cfgs], dtype=np.float64)
+        n = X.shape[0]
+        self.trees: Dict[str, _Node] = {}
+        self.scale: Dict[str, float] = {}
+        perm = rng.permutation(n)
+        half = max(1, n // 2)
+        tr, te = perm[:half], perm[half:]
+        if te.size == 0:
+            te = tr
+        for name in counters_to_model:
+            y = np.array([float(cs.get(name, 0.0)) for cs in counters])
+            # scale to O(1) for numerically comparable MAE across counters
+            scale = float(np.abs(y).max()) or 1.0
+            ys = y / scale
+            best = None  # (mae, rmse, tree)
+            for max_depth, min_samples in _TREE_CANDIDATES:
+                tree = _build_tree(X[tr], ys[tr], 0, max_depth, min_samples)
+                pred = np.array([_tree_predict(tree, x) for x in X[te]])
+                err = pred - ys[te]
+                mae = float(np.abs(err).mean())
+                rmse = float(np.sqrt((err**2).mean()))
+                if best is None or (mae, rmse) < (best[0], best[1]):
+                    best = (mae, rmse, tree)
+            self.trees[name] = best[2]
+            self.scale[name] = scale
+
+    def predict(self, cfg: Dict) -> Dict[str, float]:
+        x = np.asarray(self.space.vectorize(cfg), dtype=np.float64)
+        return {
+            name: _tree_predict(tree, x) * self.scale[name]
+            for name, tree in self.trees.items()
+        }
+
+
+# =============================================================================
+# Least-squares quadratic regression per binary subspace (§3.4.1)
+# =============================================================================
+def _poly_features(v: np.ndarray) -> np.ndarray:
+    """[1, x_i, x_i^2, x_i*x_j] feature expansion."""
+    feats = [1.0]
+    k = v.size
+    feats.extend(v.tolist())
+    feats.extend((v**2).tolist())
+    for i in range(k):
+        for j in range(i + 1, k):
+            feats.append(v[i] * v[j])
+    return np.asarray(feats)
+
+
+class QuadraticRegressionModel(TPPCModel):
+    """Least-squares non-linear regression per binary subspace (§3.4.1)."""
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        cfgs: Sequence[Dict],
+        counters: Sequence[Dict[str, float]],
+        counters_to_model: Sequence[str] = MODELED_COUNTERS,
+    ):
+        self.space = space
+        self.counter_names = tuple(counters_to_model)
+        nb = space.nonbinary_parameters
+        self._nb_names = [p.name for p in nb]
+        # group samples by binary subspace
+        groups: Dict[Tuple, List[int]] = {}
+        for i, cfg in enumerate(cfgs):
+            groups.setdefault(space.subspace_key(cfg), []).append(i)
+        self.coefs: Dict[Tuple, Dict[str, np.ndarray]] = {}
+        self._fallback: Dict[str, float] = {
+            name: float(
+                np.mean([cs.get(name, 0.0) for cs in counters]) if counters else 0.0
+            )
+            for name in counters_to_model
+        }
+        for key, idxs in groups.items():
+            Xf = np.stack(
+                [_poly_features(self._nb_vector(cfgs[i])) for i in idxs]
+            )
+            per_counter: Dict[str, np.ndarray] = {}
+            for name in counters_to_model:
+                y = np.array([float(counters[i].get(name, 0.0)) for i in idxs])
+                coef, *_ = np.linalg.lstsq(Xf, y, rcond=None)
+                per_counter[name] = coef
+            self.coefs[key] = per_counter
+
+    def _nb_vector(self, cfg: Dict) -> np.ndarray:
+        full = dict(zip([p.name for p in self.space.parameters],
+                        self.space.vectorize(cfg)))
+        return np.asarray([full[n] for n in self._nb_names], dtype=np.float64)
+
+    def predict(self, cfg: Dict) -> Dict[str, float]:
+        key = self.space.subspace_key(cfg)
+        if key not in self.coefs:
+            return dict(self._fallback)
+        feats = _poly_features(self._nb_vector(cfg))
+        return {
+            name: float(feats @ coef)
+            for name, coef in self.coefs[key].items()
+        }
+
+
+# =============================================================================
+# Exact "model": reads recorded counters (paper §4.3 — eliminates model error)
+# =============================================================================
+class ExactCounterModel(TPPCModel):
+    """Replays exhaustively-measured PC_ops (no ML prediction error)."""
+
+    def __init__(self, space: TuningSpace, counters: Sequence[Dict[str, float]]):
+        self.space = space
+        self._by_index = [dict(cs) for cs in counters]
+
+    def predict(self, cfg: Dict) -> Dict[str, float]:
+        return self._by_index[self.space.index_of(cfg)]
+
+    def predict_index(self, idx: int) -> Dict[str, float]:
+        return self._by_index[idx]
+
+
+def deliberate_training_sample(
+    space: TuningSpace, values_per_param: int = 3,
+    rng: Optional[np.random.Generator] = None,
+) -> List[int]:
+    """§3.4.1 sampling: 2-3 values per non-binary parameter, all binary combos.
+
+    Returns indices into the space.  Keeps total combinations low while
+    sampling each subspace evenly despite constraints.
+    """
+    rng = rng or np.random.default_rng(0)
+    keep: Dict[str, set] = {}
+    for p in space.nonbinary_parameters:
+        vals = list(p.values)
+        if len(vals) <= values_per_param:
+            keep[p.name] = set(vals)
+        else:
+            # endpoints (+ middle when 3 values wanted) — even coverage
+            picks = {vals[0], vals[-1]}
+            if values_per_param >= 3:
+                picks.add(vals[len(vals) // 2])
+            while len(picks) < values_per_param:
+                picks.add(vals[int(rng.integers(len(vals)))])
+            keep[p.name] = picks
+    out = []
+    for i, cfg in enumerate(space):
+        if all(cfg[n] in keep[n] for n in keep):
+            out.append(i)
+    return out

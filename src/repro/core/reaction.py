@@ -1,0 +1,63 @@
+"""Expert system, part 2: bottlenecks → ΔPC_ops (paper §3.5.2, Eq. 15).
+
+Produces the required-change vector ΔPC_ops over PC_ops counters, each in
+[-1, 1]: negative = decrease this counter, positive = increase, 0 = no change.
+
+``inst_reaction`` thresholds instruction-related reactions: instructions have
+low latency and only become a real bottleneck under high stress (paper sets
+0.7 by default, 0.5 when the user declares the problem instruction-bound).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import bottleneck as B
+from repro.core import counters as C
+
+INST_REACTION_DEFAULT = 0.7
+INST_REACTION_COMPUTE_BOUND = 0.5
+
+
+def _inst_delta(b_val: float, inst_reaction: float) -> float:
+    """Eq. 15: thresholded reaction to an instruction bottleneck."""
+    if b_val <= inst_reaction:
+        return 0.0
+    return -(b_val - inst_reaction) / (1.0 - inst_reaction)
+
+
+def compute_delta_pc(
+    b: Dict[str, float], inst_reaction: float = INST_REACTION_DEFAULT
+) -> Dict[str, float]:
+    """Map the bottleneck vector to required PC_ops changes.
+
+    Memory-subsystem reactions are the inverted bottleneck values
+    (straightforward per §3.5.2); instruction reactions are thresholded
+    (Eq. 15); parallelism reactions are positive (more programs wanted).
+    The paper emits Δpc_SM_E and Δpc_global(threads); both map to our GRID
+    pseudo-counter (grid programs are the TPU parallelism unit and are
+    statically known, so the "model prediction" of GRID is exact).
+    """
+    delta: Dict[str, float] = {k: 0.0 for k in C.PC_OPS}
+
+    # memory subsystems — straight inversion
+    delta[C.HBM_RD] = -b[B.B_HBM_READ]
+    delta[C.HBM_WR] = -b[B.B_HBM_WRITE]
+    delta[C.VMEM_RD] = -b[B.B_VMEM_READ]
+    delta[C.VMEM_WR] = -b[B.B_VMEM_WRITE]
+    delta[C.CMEM_RD] = -b[B.B_CMEM]
+    delta[C.SPILL_B] = -b[B.B_SPILL]
+    # spilling is caused by per-program working set: also push VMEM_WS down
+    delta[C.VMEM_WS] = -b[B.B_SPILL]
+    delta[C.ICI_B] = -b[B.B_ICI]
+
+    # instruction-related — thresholded (Eq. 15)
+    delta[C.MXU_FLOPS] = _inst_delta(b[B.B_MXU], inst_reaction)
+    delta[C.VPU_OPS] = _inst_delta(b[B.B_VPU], inst_reaction)
+    delta[C.TRANS_OPS] = _inst_delta(b[B.B_TRANS], inst_reaction)
+    delta[C.ISSUE_OPS] = _inst_delta(b[B.B_ISSUE], inst_reaction)
+
+    # parallelism — positive reaction (paper: Δpc_SM_E = b_sm, Δpc_global =
+    # b_paral); GRID absorbs both, saturating at 1.
+    delta[C.GRID] = min(1.0, b[B.B_CORE] + b[B.B_PARAL])
+
+    return delta

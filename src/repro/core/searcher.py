@@ -1,0 +1,358 @@
+"""Tuning-space searchers.
+
+* ``ProfileBasedSearcher`` — the paper's contribution (Algorithm 1): biased
+  weighted-random search navigated by performance counters, a portable
+  TP→PC_ops model, and the bottleneck/ΔPC expert system.
+* ``RandomSearcher`` — the paper's primary baseline.
+* ``BasinHoppingSearcher`` — Kernel-Tuner-style global+local optimization
+  (paper §4.7 comparison target).
+* ``StarchartSearcher`` — recursive-partitioning surrogate model search
+  (paper §4.8 comparison target).
+
+All searchers drive an evaluator (``measure``/``profile``) so empirical tests
+are counted identically — the paper's primary metric.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import bottleneck, reaction, scoring
+from repro.core.model import TPPCModel, _build_tree, _tree_predict
+from repro.core.tuning_space import TuningSpace
+
+
+class Searcher:
+    name = "base"
+
+    def search(self, ev, max_steps: int) -> None:
+        raise NotImplementedError
+
+
+class RandomSearcher(Searcher):
+    """Uniform random search without replacement."""
+
+    name = "random"
+
+    def __init__(self, space: TuningSpace, seed: int = 0):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+
+    def search(self, ev, max_steps: int) -> None:
+        order = self.rng.permutation(len(self.space))
+        for idx in order[:max_steps]:
+            ev.measure(int(idx))
+
+
+class ProfileBasedSearcher(Searcher):
+    """Algorithm 1: profile, detect bottlenecks, react, score, biased step.
+
+    Parameters
+    ----------
+    model : TPPCModel — portable TP→PC_ops model (may come from a different
+        GPU/input — §3.1/§4.4/§4.5 — or be an ExactCounterModel for §4.3).
+    cores : TensorCore count of the *autotuning* hardware (bottleneck analysis
+        runs on the architecture being tuned — §3.3).
+    n : un-profiled benchmark runs between profiled runs (default 5, §3.7).
+    inst_reaction : instruction-bottleneck threshold (0.7 default, §3.5.2).
+    """
+
+    name = "profile"
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        model: TPPCModel,
+        cores: int,
+        n: int = 5,
+        inst_reaction: float = reaction.INST_REACTION_DEFAULT,
+        seed: int = 0,
+    ):
+        self.space = space
+        self.model = model
+        self.cores = cores
+        self.n = n
+        self.inst_reaction = inst_reaction
+        self.rng = np.random.default_rng(seed)
+        # model predictions are config-indexed and reused across iterations
+        self._pred_cache: Dict[int, Dict[str, float]] = {}
+
+    def _predict(self, idx: int) -> Dict[str, float]:
+        if idx not in self._pred_cache:
+            self._pred_cache[idx] = self.model.predict(self.space[idx])
+        return self._pred_cache[idx]
+
+    def search(self, ev, max_steps: int) -> None:
+        size = len(self.space)
+        c_profile = int(self.rng.integers(size))
+        while ev.steps < max_steps and not ev.exhausted():
+            # line 3: empirical measurement with performance counters
+            pc = ev.profile(c_profile)
+            t = pc.runtime
+            # line 4: bottleneck analysis (on the autotuning architecture)
+            b = bottleneck.analyze(pc, cores=self.cores)
+            # line 5: required counter changes
+            delta_pc = reaction.compute_delta_pc(b, self.inst_reaction)
+            # lines 6-14: score all unexplored configurations via the model
+            pc_prof = self._predict(c_profile)
+            raw = np.zeros(size)
+            mask = np.zeros(size, dtype=bool)
+            for k in range(size):
+                if k in ev.evaluated:
+                    continue
+                mask[k] = True
+                raw[k] = scoring.score_configuration(
+                    delta_pc, pc_prof, self._predict(k)
+                )
+            if not mask.any():
+                return
+            weights = scoring.normalize_scores(raw)
+            # lines 16-25: n biased un-profiled steps
+            for _ in range(self.n):
+                if ev.steps >= max_steps or not mask.any():
+                    break
+                sel = scoring.weighted_choice(weights, self.rng, mask)
+                t_new = ev.measure(sel)
+                mask[sel] = False
+                if t_new <= t:
+                    c_profile, t = sel, t_new
+            if ev.exhausted():
+                return
+
+
+class BasinHoppingSearcher(Searcher):
+    """Kernel-Tuner-inspired Basin Hopping: greedy local descent over
+    1-parameter neighbourhoods + random perturbation hops with Metropolis
+    acceptance.  (Kernel Tuner wraps scipy.basinhopping over a normalized
+    encoding; this is the discrete equivalent used for §4.7.)
+    """
+
+    name = "basin_hopping"
+
+    def __init__(self, space: TuningSpace, seed: int = 0, temperature: float = 1.0):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+        self.temperature = temperature
+        # neighbour lists are O(N^2) to build; cache lazily per index
+        self._nbrs: Dict[int, list] = {}
+        self._known: Dict[int, float] = {}
+
+    def _neighbours(self, idx: int) -> list:
+        if idx not in self._nbrs:
+            self._nbrs[idx] = self.space.neighbours(idx)
+        return self._nbrs[idx]
+
+    def _measure(self, ev, idx: int) -> float:
+        if idx not in self._known:
+            self._known[idx] = ev.measure(idx)
+        return self._known[idx]
+
+    def _local_descent(self, ev, start: int, max_steps: int) -> tuple:
+        cur = start
+        cur_t = self._measure(ev, cur)
+        improved = True
+        while improved and ev.steps < max_steps:
+            improved = False
+            nbrs = [n for n in self._neighbours(cur) if n not in ev.evaluated]
+            self.rng.shuffle(nbrs)
+            for nb in nbrs:
+                if ev.steps >= max_steps:
+                    break
+                t = self._measure(ev, nb)
+                if t < cur_t:
+                    cur, cur_t = nb, t
+                    improved = True
+                    break  # first-improvement greedy
+        return cur, cur_t
+
+    def _perturb(self, idx: int) -> int:
+        """Hop: randomly change a fraction of parameters, snap into space."""
+        base = dict(self.space[idx])
+        names = [p.name for p in self.space.parameters]
+        k = max(1, len(names) // 3)
+        for name in self.rng.choice(names, size=k, replace=False):
+            p = next(q for q in self.space.parameters if q.name == name)
+            base[name] = p.values[int(self.rng.integers(len(p.values)))]
+        try:
+            return self.space.index_of(base)
+        except KeyError:  # violated a constraint — random fallback
+            return int(self.rng.integers(len(self.space)))
+
+    def search(self, ev, max_steps: int) -> None:
+        cur = int(self.rng.integers(len(self.space)))
+        cur, cur_t = self._local_descent(ev, cur, max_steps)
+        while ev.steps < max_steps and not ev.exhausted():
+            cand = self._perturb(cur)
+            if cand in ev.evaluated:
+                unexplored = [i for i in range(len(self.space))
+                              if i not in ev.evaluated]
+                if not unexplored:
+                    return
+                cand = int(self.rng.choice(unexplored))
+            cand, cand_t = self._local_descent(ev, cand, max_steps)
+            # Metropolis acceptance on the hop
+            if cand_t < cur_t or self.rng.random() < np.exp(
+                -(cand_t - cur_t) / (self.temperature * max(cur_t, 1e-12))
+            ):
+                cur, cur_t = cand, cand_t
+
+
+class StarchartSearcher(Searcher):
+    """Starchart protocol (§4.8.1): train a runtime regression tree from
+    random samples until median relative prediction error < 15% (or 200
+    training points), then walk the space in predicted-best order.
+
+    Both training and validation measurements are empirical tests and are
+    counted (the paper's "model build" column includes them).
+    """
+
+    name = "starchart"
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        seed: int = 0,
+        n_validation: int = 200,
+        max_train: int = 200,
+        target_med_err: float = 0.15,
+    ):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+        self.n_validation = n_validation
+        self.max_train = max_train
+        self.target_med_err = target_med_err
+        self.model_build_steps = 0
+
+    def search(self, ev, max_steps: int) -> None:
+        size = len(self.space)
+        X = np.array([self.space.vectorize(c) for c in self.space])
+        order = self.rng.permutation(size)
+        n_val = min(self.n_validation, max(1, size // 4))
+        val_idx = order[:n_val]
+        pool = order[n_val:]
+        y_val = np.array([ev.measure(int(i)) for i in val_idx])
+
+        train_idx: list = []
+        y_train: list = []
+        tree = None
+        batch = 20
+        while ev.steps < max_steps and len(train_idx) < min(self.max_train,
+                                                            len(pool)):
+            take = pool[len(train_idx): len(train_idx) + batch]
+            if take.size == 0:
+                break
+            for i in take:
+                train_idx.append(int(i))
+                y_train.append(ev.measure(int(i)))
+            tree = _build_tree(
+                X[np.array(train_idx)], np.asarray(y_train), 0, 12, 1
+            )
+            pred = np.array([_tree_predict(tree, X[i]) for i in val_idx])
+            rel_err = np.abs(pred - y_val) / np.maximum(y_val, 1e-12)
+            if float(np.median(rel_err)) < self.target_med_err:
+                break
+        self.model_build_steps = ev.steps
+        if tree is None:
+            return
+        # prediction-ordered walk over the unexplored space
+        pred_all = np.array([_tree_predict(tree, x) for x in X])
+        for idx in np.argsort(pred_all):
+            if ev.steps >= max_steps:
+                return
+            if int(idx) in ev.evaluated:
+                continue
+            ev.measure(int(idx))
+
+
+class ProfileLocalSearcher(Searcher):
+    """Beyond-paper extension (paper §3.9.1 future work): use the score as a
+    GRADIENT ESTIMATE for a local searcher, combined with the global biased
+    sampling to escape local optima.
+
+    Each iteration profiles c_profile as in Algorithm 1, but the n unprofiled
+    steps are split: the first are taken greedily from the best-scoring
+    NEIGHBOURS of c_profile (1-parameter moves — following the estimated
+    gradient of the performance function), the rest fall back to the global
+    score-biased sample.  Mirrors Kernel Tuner's global+local findings [40]
+    with the gradient supplied by the counter model instead of runtime
+    probes.
+    """
+
+    name = "profile_local"
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        model: TPPCModel,
+        cores: int,
+        n: int = 5,
+        local_frac: float = 0.6,
+        inst_reaction: float = reaction.INST_REACTION_DEFAULT,
+        seed: int = 0,
+    ):
+        self.space = space
+        self.model = model
+        self.cores = cores
+        self.n = n
+        self.local_frac = local_frac
+        self.inst_reaction = inst_reaction
+        self.rng = np.random.default_rng(seed)
+        self._pred_cache: Dict[int, Dict[str, float]] = {}
+        self._nbrs: Dict[int, list] = {}
+
+    def _predict(self, idx: int) -> Dict[str, float]:
+        if idx not in self._pred_cache:
+            self._pred_cache[idx] = self.model.predict(self.space[idx])
+        return self._pred_cache[idx]
+
+    def _neighbours(self, idx: int) -> list:
+        if idx not in self._nbrs:
+            self._nbrs[idx] = self.space.neighbours(idx)
+        return self._nbrs[idx]
+
+    def search(self, ev, max_steps: int) -> None:
+        size = len(self.space)
+        c_profile = int(self.rng.integers(size))
+        while ev.steps < max_steps and not ev.exhausted():
+            pc = ev.profile(c_profile)
+            t = pc.runtime
+            b = bottleneck.analyze(pc, cores=self.cores)
+            delta_pc = reaction.compute_delta_pc(b, self.inst_reaction)
+            pc_prof = self._predict(c_profile)
+
+            raw = np.zeros(size)
+            mask = np.zeros(size, dtype=bool)
+            for k in range(size):
+                if k in ev.evaluated:
+                    continue
+                mask[k] = True
+                raw[k] = scoring.score_configuration(
+                    delta_pc, pc_prof, self._predict(k))
+            if not mask.any():
+                return
+            weights = scoring.normalize_scores(raw)
+
+            n_local = int(round(self.n * self.local_frac))
+            # local phase: best-scoring unexplored neighbours (gradient step)
+            nbrs = [j for j in self._neighbours(c_profile)
+                    if j not in ev.evaluated]
+            nbrs.sort(key=lambda j: raw[j], reverse=True)
+            for j in nbrs[:n_local]:
+                if ev.steps >= max_steps:
+                    return
+                t_new = ev.measure(j)
+                mask[j] = False
+                if t_new <= t:
+                    c_profile, t = j, t_new
+            # global phase: score-biased sampling (escape hatch)
+            for _ in range(self.n - min(n_local, len(nbrs))):
+                if ev.steps >= max_steps or not mask.any():
+                    break
+                sel = scoring.weighted_choice(weights, self.rng, mask)
+                t_new = ev.measure(sel)
+                mask[sel] = False
+                if t_new <= t:
+                    c_profile, t = sel, t_new
+            if ev.exhausted():
+                return

@@ -1,0 +1,137 @@
+"""Generic tuning spaces (paper §1, §3).
+
+A *tuning parameter* (TP) takes one of a pre-defined set of discrete values.
+The cross product of TPs, pruned by user constraints, forms the *tuning space*;
+one element is a *tuning configuration*.  The searcher is agnostic to what the
+parameters mean — they may tune Pallas block sizes, sharding layouts, remat
+policies or anything else (the paper's central genericity claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+Config = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningParameter:
+    """One discrete tuning parameter."""
+
+    name: str
+    values: Tuple[Any, ...]
+
+    def __post_init__(self):
+        if len(self.values) == 0:
+            raise ValueError(f"parameter {self.name!r} has no values")
+        object.__setattr__(self, "values", tuple(self.values))
+
+    @property
+    def is_binary(self) -> bool:
+        """Binary TPs split the space into model subspaces (paper §3.4.1)."""
+        return set(self.values) <= {0, 1, True, False}
+
+
+class TuningSpace:
+    """Cross product of tuning parameters pruned by constraints.
+
+    Constraints are predicates over a full configuration dict.  The space is
+    materialized eagerly (paper benchmarks range from 210 to 205,216 configs;
+    the searcher scores the whole space each profiling step, Algorithm 1 l.7).
+    """
+
+    def __init__(
+        self,
+        parameters: Sequence[TuningParameter],
+        constraints: Sequence[Callable[[Config], bool]] = (),
+        name: str = "space",
+    ):
+        names = [p.name for p in parameters]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate parameter names")
+        self.name = name
+        self.parameters: Tuple[TuningParameter, ...] = tuple(parameters)
+        self.constraints = tuple(constraints)
+        self._configs: List[Config] = [
+            cfg
+            for cfg in self._iter_cross_product()
+            if all(c(cfg) for c in self.constraints)
+        ]
+        if not self._configs:
+            raise ValueError(f"tuning space {name!r} is empty after constraints")
+
+    # -- basic container protocol ------------------------------------------------
+    def _iter_cross_product(self) -> Iterator[Config]:
+        names = [p.name for p in self.parameters]
+        for combo in itertools.product(*(p.values for p in self.parameters)):
+            yield dict(zip(names, combo))
+
+    def __len__(self) -> int:
+        return len(self._configs)
+
+    def __getitem__(self, i: int) -> Config:
+        return self._configs[i]
+
+    def __iter__(self) -> Iterator[Config]:
+        return iter(self._configs)
+
+    @property
+    def configs(self) -> List[Config]:
+        return self._configs
+
+    def index_of(self, cfg: Config) -> int:
+        for i, c in enumerate(self._configs):
+            if c == cfg:
+                return i
+        raise KeyError(f"config not in space: {cfg}")
+
+    # -- structure queries used by the models (§3.4) ------------------------------
+    @property
+    def binary_parameters(self) -> List[TuningParameter]:
+        return [p for p in self.parameters if p.is_binary]
+
+    @property
+    def nonbinary_parameters(self) -> List[TuningParameter]:
+        return [p for p in self.parameters if not p.is_binary]
+
+    def vectorize(self, cfg: Config) -> List[float]:
+        """Numeric feature vector in declared parameter order."""
+        out = []
+        for p in self.parameters:
+            v = cfg[p.name]
+            if isinstance(v, bool):
+                v = int(v)
+            if isinstance(v, str):
+                v = float(p.values.index(cfg[p.name]))
+            out.append(float(v))
+        return out
+
+    def neighbours(self, idx: int) -> List[int]:
+        """Indices of configs differing in exactly one parameter value.
+
+        Used by the local phase of Basin Hopping (§4.7) — Kernel Tuner's
+        greedy-ils neighbourhood.
+        """
+        base = self._configs[idx]
+        out = []
+        for j, cfg in enumerate(self._configs):
+            if j == idx:
+                continue
+            diff = sum(1 for k in base if base[k] != cfg[k])
+            if diff == 1:
+                out.append(j)
+        return out
+
+    def subspace_key(self, cfg: Config) -> Tuple[Any, ...]:
+        """Key identifying the binary-parameter subspace of cfg (§3.4.1)."""
+        return tuple(int(bool(cfg[p.name])) for p in self.binary_parameters)
+
+
+def powers_of_two(lo: int, hi: int) -> Tuple[int, ...]:
+    out = []
+    v = lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return tuple(out)

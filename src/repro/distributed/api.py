@@ -1,0 +1,38 @@
+"""Activation-sharding context: models annotate activations with logical
+axes; the distributed runtime installs a resolver mapping them to mesh axes.
+
+Outside a mesh context ``shard_act`` is the identity, so models run unchanged
+on a single device (smoke tests) and under ``jit`` without a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional, Sequence
+
+import jax
+
+_state = threading.local()
+
+
+def _resolver() -> Optional[Callable]:
+    return getattr(_state, "resolver", None)
+
+
+def shard_act(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain activation sharding by logical axis names (or no-op)."""
+    fn = _resolver()
+    if fn is None:
+        return x
+    return fn(x, tuple(logical))
+
+
+@contextlib.contextmanager
+def activation_sharding(resolver: Callable):
+    """Install a resolver: (array, logical axes) -> array."""
+    prev = _resolver()
+    _state.resolver = resolver
+    try:
+        yield
+    finally:
+        _state.resolver = prev

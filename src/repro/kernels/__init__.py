@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's five benchmarks + flash attention.
+
+Each subpackage: kernel.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+ops.py (config-dict dispatch wrapper), ref.py (pure-jnp oracle), space.py
+(tuning space + portable workload counter model g(TP, I)).
+"""

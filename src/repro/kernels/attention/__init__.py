@@ -1,0 +1,3 @@
+from repro.kernels.attention.kernel import flash_attention, flash_attention_single_head
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.attention.space import make_space, workload_fn, DEFAULT_INPUT

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash attention."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q, k, v: (..., S, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) / (d ** 0.5)
+    if causal:
+        sl = q.shape[-2]
+        mask = jnp.tril(jnp.ones((sl, sl), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("...qk,...kd->...qd", p, v)

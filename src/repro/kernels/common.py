@@ -1,0 +1,24 @@
+"""Shared helpers for Pallas TPU kernels."""
+from __future__ import annotations
+
+import math
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def lane_efficiency_2d(bm: int, bn: int, m: int, n: int) -> float:
+    """Useful-lane fraction for (bm, bn) tiles over an (m, n) problem.
+
+    Two waste sources on TPU: sublane/lane padding of the tile to the (8, 128)
+    register tiling, and edge-tile padding when the block does not divide the
+    problem.  This is the warp-execution-efficiency analog (DESIGN.md §2).
+    """
+    tile_eff = (bm / round_up(bm, 8)) * (bn / round_up(bn, 128))
+    edge_eff = (m / round_up(m, bm)) * (n / round_up(n, bn))
+    return tile_eff * edge_eff

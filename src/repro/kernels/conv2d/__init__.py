@@ -1,0 +1,3 @@
+from repro.kernels.conv2d.kernel import conv2d
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.conv2d.space import make_space, workload_fn, DEFAULT_INPUT

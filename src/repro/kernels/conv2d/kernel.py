@@ -1,0 +1,95 @@
+"""2D convolution Pallas TPU kernel (paper benchmark: Convolution).
+
+Stencil with halo: BlockSpec tiling cannot express overlapping reads, so the
+input stays in HBM (``memory_space=ANY``) and each program DMAs its
+(BY + F - 1, BX + F - 1) halo tile into VMEM scratch explicitly
+(``pltpu.make_async_copy``) — the production TPU pattern for halo exchange.
+The F×F filter is unrolled statically into shifted multiply-accumulates on
+the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+
+
+def _conv2d_kernel(
+    img_ref,    # (H + F - 1, W + F - 1) in HBM/ANY — pre-padded by wrapper
+    flt_ref,    # (F, F) in VMEM
+    out_ref,    # (BY, BX) block in VMEM
+    tile_ref,   # scratch: (BY + F - 1, BX + F - 1) VMEM
+    sem,        # DMA semaphore
+    *, by: int, bx: int, f: int, unroll_taps: bool,
+):
+    i, j = pl.program_id(0), pl.program_id(1)
+    halo = f - 1
+    copy = pltpu.make_async_copy(
+        img_ref.at[pl.ds(i * by, by + halo), pl.ds(j * bx, bx + halo)],
+        tile_ref,
+        sem,
+    )
+    copy.start()
+    copy.wait()
+
+    if unroll_taps:
+        acc = jnp.zeros((by, bx), jnp.float32)
+        for dy in range(f):
+            for dx in range(f):
+                acc += flt_ref[dy, dx] * tile_ref[dy:dy + by, dx:dx + bx]
+    else:
+        def tap(t, acc):
+            dy, dx = t // f, t % f
+            w = flt_ref[dy, dx]
+            patch = pl.load(
+                tile_ref, (pl.ds(dy, by), pl.ds(dx, bx))
+            )
+            return acc + w * patch
+        acc = jax.lax.fori_loop(0, f * f, tap, jnp.zeros((by, bx), jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("by", "bx", "unroll_taps", "interpret")
+)
+def conv2d(
+    img: jax.Array,   # (H, W) float32
+    flt: jax.Array,   # (F, F) float32, F odd
+    *,
+    by: int = 128,
+    bx: int = 256,
+    unroll_taps: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    h, w = img.shape
+    f = flt.shape[0]
+    assert flt.shape == (f, f) and f % 2 == 1
+    halo = f - 1
+    # pre-pad so every halo tile read is in bounds ("same" convolution)
+    img_p = jnp.pad(img, ((halo // 2, cdiv(h, by) * by - h + halo // 2),
+                          (halo // 2, cdiv(w, bx) * bx - w + halo // 2)))
+    grid = (cdiv(h, by), cdiv(w, bx))
+    return pl.pallas_call(
+        functools.partial(_conv2d_kernel, by=by, bx=bx, f=f,
+                          unroll_taps=unroll_taps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),   # stays in HBM
+            pl.BlockSpec((f, f), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((by, bx), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((by + halo, bx + halo), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(img_p, flt)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the 2D convolution kernel ("same" correlation)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def conv2d_ref(img: jax.Array, flt: jax.Array) -> jax.Array:
+    out = jax.lax.conv_general_dilated(
+        img[None, None], flt[None, None],
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0, 0]

@@ -1,0 +1,75 @@
+"""Convolution tuning space + portable workload model."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import counters as C
+from repro.core.tuning_space import Config, TuningParameter, TuningSpace
+from repro.kernels.common import cdiv, round_up
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvInput:
+    h: int
+    w: int
+    f: int = 5
+
+    @property
+    def tag(self) -> str:
+        return f"{self.h}x{self.w}_f{self.f}"
+
+
+DEFAULT_INPUT = ConvInput(4096, 4096)
+
+
+def make_space() -> TuningSpace:
+    params = [
+        TuningParameter("BY", (8, 16, 32, 64, 128, 256, 512)),
+        TuningParameter("BX", (128, 256, 512, 1024)),
+        TuningParameter("UNROLL_TAPS", (0, 1)),
+        # filter placement: VMEM-resident vs scalar-memory broadcast
+        TuningParameter("FILTER_SMEM", (0, 1)),
+        TuningParameter("DMA_DEPTH", (1, 2, 4)),
+    ]
+    return TuningSpace(params, name="conv2d")
+
+
+def workload_fn(cfg: Config, inp: ConvInput = DEFAULT_INPUT) -> Dict[str, float]:
+    h, w, f = inp.h, inp.w, inp.f
+    by, bx = cfg["BY"], cfg["BX"]
+    unroll, fsmem, depth = cfg["UNROLL_TAPS"], cfg["FILTER_SMEM"], cfg["DMA_DEPTH"]
+    ny, nx = cdiv(h, by), cdiv(w, bx)
+    progs = ny * nx
+    halo = f - 1
+    pts = progs * by * bx
+
+    # halo tiles re-read the overlap region: DMA bytes per program
+    tile_bytes = (by + halo) * (bx + halo) * 4.0
+    hbm_rd = progs * tile_bytes + (0.0 if fsmem else progs * f * f * 4.0)
+    cmem_rd = progs * f * f * 4.0 * by if fsmem else 0.0  # scalar broadcast/row
+    hbm_wr = pts * 4.0
+    vpu = pts * f * f * 2.0
+    if not unroll:
+        vpu += pts * f * f * 05e-1  # loop-control overhead on the tap loop
+    vmem_rd = pts * f * f * 4.0 + progs * tile_bytes
+    vmem_wr = pts * 4.0
+    ws = tile_bytes * depth + by * bx * 4.0 * 2.0 + f * f * 4.0
+
+    tile_eff = (by / round_up(by, 8)) * (bx / round_up(bx, 128))
+    edge_eff = (h / (ny * by)) * (w / (nx * bx))
+
+    return {
+        C.MXU_FLOPS: 0.0,
+        C.VPU_OPS: float(vpu),
+        C.TRANS_OPS: 0.0,
+        C.ISSUE_OPS: float(vpu),
+        C.HBM_RD: float(hbm_rd),
+        C.HBM_WR: float(hbm_wr),
+        C.VMEM_RD: float(vmem_rd),
+        C.VMEM_WR: float(vmem_wr),
+        C.CMEM_RD: float(cmem_rd),
+        C.GRID: float(progs),
+        C.VMEM_WS: float(ws),
+        "LANE_E_HINT": tile_eff * edge_eff,
+    }

@@ -1,0 +1,3 @@
+from repro.kernels.coulomb.kernel import coulomb
+from repro.kernels.coulomb.ref import coulomb_ref
+from repro.kernels.coulomb.space import make_space, workload_fn, DEFAULT_INPUT

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for Direct Coulomb Summation (paper Eq. 1)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("grid_size", "spacing"))
+def coulomb_ref(atoms: jax.Array, *, grid_size: int,
+                spacing: float = 0.5) -> jax.Array:
+    gs = grid_size
+    zs = jnp.arange(gs, dtype=jnp.float32) * spacing
+    ys = jnp.arange(gs, dtype=jnp.float32) * spacing
+    xs = jnp.arange(gs, dtype=jnp.float32) * spacing
+    fz, fy, fx = jnp.meshgrid(zs, ys, xs, indexing="ij")
+
+    def body(carry, atom):
+        ax, ay, az, w = atom[0], atom[1], atom[2], atom[3]
+        r2 = (fx - ax) ** 2 + (fy - ay) ** 2 + (fz - az) ** 2
+        return carry + w * jax.lax.rsqrt(jnp.maximum(r2, 1e-12)), None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((gs, gs, gs), jnp.float32), atoms)
+    return out

@@ -1,0 +1,95 @@
+"""Coulomb summation tuning space + portable workload model (paper §2).
+
+The space mirrors the paper's 7-dimensional Coulomb 3D space in character:
+z-coarsening (the worked example's Z_ITERATIONS), block shape, atom chunking,
+and a binary scalar-memory placement for the atom table (the constant-memory
+analog from §3.4.1's example — modeled in counters; the TPU kernel always
+streams atom tiles, placement changes which port the traffic hits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import counters as C
+from repro.core.tuning_space import Config, TuningParameter, TuningSpace
+from repro.kernels.common import cdiv, round_up
+
+
+@dataclasses.dataclass(frozen=True)
+class CoulombInput:
+    grid_size: int
+    n_atoms: int
+
+    @property
+    def tag(self) -> str:
+        return f"g{self.grid_size}_a{self.n_atoms}"
+
+
+DEFAULT_INPUT = CoulombInput(256, 256)
+LARGE_GRID = CoulombInput(256, 64)
+SMALL_GRID = CoulombInput(32, 4096)
+
+
+def make_space() -> TuningSpace:
+    params = [
+        TuningParameter("Z_IT", (1, 2, 4, 8, 16, 32, 64)),
+        TuningParameter("BY", (4, 8, 16, 32, 64)),
+        TuningParameter("BX", (64, 128, 256, 512, 1024)),
+        TuningParameter("ATOM_CHUNK", (4, 16, 64, 256)),
+        TuningParameter("ATOMS_IN_SMEM", (0, 1)),
+    ]
+
+    def block_fits_grid(cfg: Config) -> bool:
+        # expert pruning: z-coarsening cannot exceed typical grid extents
+        return cfg["Z_IT"] * cfg["BY"] <= 512
+
+    return TuningSpace(params, constraints=[block_fits_grid], name="coulomb")
+
+
+def workload_fn(cfg: Config, inp: CoulombInput = DEFAULT_INPUT) -> Dict[str, float]:
+    gs, na = inp.grid_size, inp.n_atoms
+    z, by, bx = cfg["Z_IT"], cfg["BY"], cfg["BX"]
+    chunk = cfg["ATOM_CHUNK"]
+    smem = cfg["ATOMS_IN_SMEM"]
+
+    nz, ny, nx = cdiv(gs, z), cdiv(gs, by), cdiv(gs, bx)
+    progs = nz * ny * nx
+    pts_padded = (nz * z) * (ny * by) * (nx * bx)  # padded grid points
+
+    # per point-atom pair: dz/r2 (4 ops) + w*rinv accumulate (2 ops);
+    # dx,dy invariant across the z loop — amortized by coarsening (paper §2.2)
+    vpu = pts_padded * na * 6.0 + pts_padded * na * 5.0 / z
+    trans = pts_padded * na * 1.0  # rsqrt
+    # atom table re-read once per program per chunk pass
+    atom_bytes = progs * round_up(na, chunk) * 16.0
+    hbm_rd = 0.0 if smem else atom_bytes
+    cmem_rd = atom_bytes if smem else 0.0
+    hbm_wr = pts_padded * 4.0
+    # atom broadcast into the point tile re-reads the atom VMEM tile once per
+    # z-group (register locality — the paper's texture-cache-traffic analog)
+    # + (chunk, Z, BY, BX) intermediates round-tripping VMEM
+    vmem_rd = atom_bytes + pts_padded * na * (8.0 + 16.0 / z)
+    vmem_wr = pts_padded * 4.0 * cdiv(na, chunk)  # accumulator writeback/chunk
+
+    ws = 2.0 * z * by * bx * 4.0 + chunk * 16.0 + 3.0 * z * by * bx * 4.0
+
+    # lane efficiency: (BY, BX) maps to (8, 128) VREG tiling; grid-edge waste
+    tile_eff = (by / round_up(by, 8)) * (bx / round_up(bx, 128))
+    edge_eff = (gs / (nz * z)) * (gs / (ny * by)) * (gs / (nx * bx))
+    lane_e = tile_eff * edge_eff
+
+    return {
+        C.MXU_FLOPS: 0.0,
+        C.VPU_OPS: float(vpu),
+        C.TRANS_OPS: float(trans),
+        C.ISSUE_OPS: float(vpu + trans),
+        C.HBM_RD: float(hbm_rd),
+        C.HBM_WR: float(hbm_wr),
+        C.VMEM_RD: float(vmem_rd),
+        C.VMEM_WR: float(vmem_wr),
+        C.CMEM_RD: float(cmem_rd),
+        C.GRID: float(progs),
+        C.VMEM_WS: float(ws),
+        "LANE_E_HINT": lane_e,
+    }

@@ -1,0 +1,3 @@
+from repro.kernels.matmul.kernel import matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.matmul.space import make_space, workload_fn, DEFAULT_INPUT

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the GEMM kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

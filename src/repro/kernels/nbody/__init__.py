@@ -1,0 +1,3 @@
+from repro.kernels.nbody.kernel import nbody
+from repro.kernels.nbody.ref import nbody_ref
+from repro.kernels.nbody.space import make_space, workload_fn, DEFAULT_INPUT

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the N-body acceleration kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("softening",))
+def nbody_ref(bodies: jax.Array, *, softening: float = 1e-3) -> jax.Array:
+    pos, mass = bodies[:, :3], bodies[:, 3]
+    d = pos[None, :, :] - pos[:, None, :]           # (N, N, 3)
+    r2 = jnp.sum(d * d, axis=-1) + softening        # (N, N)
+    inv_r = jax.lax.rsqrt(r2)
+    s = mass[None, :] * inv_r * inv_r * inv_r
+    acc = jnp.sum(s[:, :, None] * d, axis=1)        # (N, 3)
+    return jnp.concatenate([acc, jnp.zeros((bodies.shape[0], 1))], axis=1)

@@ -1,0 +1,76 @@
+"""N-body tuning space + portable workload model."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import counters as C
+from repro.core.tuning_space import Config, TuningParameter, TuningSpace
+from repro.kernels.common import cdiv, round_up
+
+
+@dataclasses.dataclass(frozen=True)
+class NBodyInput:
+    n: int
+
+    @property
+    def tag(self) -> str:
+        return f"n{self.n}"
+
+
+DEFAULT_INPUT = NBodyInput(16384)
+LARGE_INPUT = NBodyInput(131072)
+
+
+def make_space() -> TuningSpace:
+    params = [
+        TuningParameter("BLOCK_I", (8, 16, 32, 64, 128, 256, 512, 1024)),
+        TuningParameter("BLOCK_J", (32, 64, 128, 256, 512, 1024, 2048)),
+        TuningParameter("J_UNROLL", (1, 2, 4)),
+        # recompute r² vs keep (BI,BJ) temporaries resident (register pressure)
+        TuningParameter("KEEP_PAIRWISE", (0, 1)),
+    ]
+    return TuningSpace(params, name="nbody")
+
+
+def workload_fn(cfg: Config, inp: NBodyInput = DEFAULT_INPUT) -> Dict[str, float]:
+    n = inp.n
+    bi, bj = cfg["BLOCK_I"], cfg["BLOCK_J"]
+    unroll, keep = cfg["J_UNROLL"], cfg["KEEP_PAIRWISE"]
+    ni, nj = cdiv(n, bi), cdiv(n, bj)
+    pairs = (ni * bi) * (nj * bj)  # padded pairwise interactions
+
+    # ~14/17 VPU ops per pair (displacements, r², 3 MACs per axis) + 1 rsqrt;
+    # the tap loop costs control ops unless unrolled
+    vpu = pairs * (14.0 if keep else 17.0) + pairs * 3.0 / max(unroll, 1)
+    trans = pairs * 1.0
+    # body tiles: i tile read once, j tiles streamed per i block
+    hbm_rd = (ni * bi * 16.0) + ni * nj * bj * 16.0
+    hbm_wr = ni * bi * 16.0
+    # (BI, BJ) intermediates (dx/dy/dz/r2/s) round-trip VMEM between VPU ops
+    # unless kept fused; unrolling improves fusion of the streamed variant
+    n_tmp = 5.0 if keep else 8.0 * (1.0 + 0.6 / max(unroll, 1))
+    vmem_rd = pairs * 4.0 * n_tmp
+    vmem_wr = ni * nj * bi * 16.0 + pairs * 4.0 * n_tmp * 0.5
+    ws = (bi * 16.0 + bj * 16.0) * 2.0 + bi * 16.0 \
+        + (bi * bj * 4.0 * 4.0 if keep else bi * bj * 4.0) \
+        + bi * bj * 4.0 * 0.25 * (unroll - 1)
+
+    # pairwise tiles are (BI, BJ) on the VPU: (8, 128) alignment + edge waste
+    tile_eff = (bi / round_up(bi, 8)) * (bj / round_up(bj, 128))
+    edge_eff = (n / (ni * bi)) * (n / (nj * bj))
+
+    return {
+        C.MXU_FLOPS: 0.0,
+        C.VPU_OPS: float(vpu),
+        C.TRANS_OPS: float(trans),
+        C.ISSUE_OPS: float(vpu + trans),
+        C.HBM_RD: float(hbm_rd),
+        C.HBM_WR: float(hbm_wr),
+        C.VMEM_RD: float(vmem_rd),
+        C.VMEM_WR: float(vmem_wr),
+        C.CMEM_RD: 0.0,
+        C.GRID: float(ni),
+        C.VMEM_WS: float(ws),
+        "LANE_E_HINT": tile_eff * edge_eff,
+    }

@@ -1,0 +1,3 @@
+from repro.kernels.transpose.kernel import transpose
+from repro.kernels.transpose.ref import transpose_ref
+from repro.kernels.transpose.space import make_space, workload_fn, DEFAULT_INPUT

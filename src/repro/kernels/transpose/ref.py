@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the transpose kernel."""
+import jax
+
+
+@jax.jit
+def transpose_ref(x: jax.Array) -> jax.Array:
+    return x.T

@@ -1,0 +1,72 @@
+"""Transpose tuning space + portable workload model."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import counters as C
+from repro.core.tuning_space import Config, TuningParameter, TuningSpace
+from repro.kernels.common import cdiv, round_up
+
+
+@dataclasses.dataclass(frozen=True)
+class TransposeInput:
+    m: int
+    n: int
+    dtype_bytes: int = 4
+
+    @property
+    def tag(self) -> str:
+        return f"{self.m}x{self.n}"
+
+
+DEFAULT_INPUT = TransposeInput(8192, 8192)
+
+
+def make_space() -> TuningSpace:
+    params = [
+        TuningParameter("BLOCK_M", (8, 16, 32, 64, 128, 256, 512, 1024)),
+        TuningParameter("BLOCK_N", (8, 16, 32, 64, 128, 256, 512, 1024)),
+        # staging the write tile through a second VMEM buffer (layout fixup)
+        TuningParameter("STAGE_OUT", (0, 1)),
+    ]
+    return TuningSpace(params, name="transpose")
+
+
+def workload_fn(cfg: Config, inp: TransposeInput = DEFAULT_INPUT) -> Dict[str, float]:
+    m, n, db = inp.m, inp.n, inp.dtype_bytes
+    bm, bn = cfg["BLOCK_M"], cfg["BLOCK_N"]
+    nm, nn = cdiv(m, bm), cdiv(n, bn)
+    stage = cfg["STAGE_OUT"]
+
+    hbm = nm * nn * bm * bn * db  # padded tiles move padded bytes
+    vmem = 2.0 * hbm + (hbm if stage else 0.0)
+    # transpose itself runs on the VPU as sublane/lane shuffles; unaligned
+    # tiles cost extra shuffle passes
+    shuffle_passes = 1.0
+    if bm % 8 or bn % 128:
+        shuffle_passes = 2.0
+    vpu = nm * nn * bm * bn * shuffle_passes
+    ws = (2.0 + (1.0 if stage else 0.0)) * bm * bn * db
+
+    # lane efficiency: both the read tile (bm, bn) and the write tile (bn, bm)
+    # must map to the (8, 128) register tiling
+    read_eff = (bm / round_up(bm, 8)) * (bn / round_up(bn, 128))
+    write_eff = (bn / round_up(bn, 8)) * (bm / round_up(bm, 128))
+    edge_eff = (m / round_up(m, bm)) * (n / round_up(n, bn))
+    lane_e = min(read_eff, write_eff) * edge_eff
+
+    return {
+        C.MXU_FLOPS: 0.0,
+        C.VPU_OPS: float(vpu),
+        C.TRANS_OPS: 0.0,
+        C.ISSUE_OPS: float(vpu),
+        C.HBM_RD: float(hbm),
+        C.HBM_WR: float(hbm),
+        C.VMEM_RD: float(vmem),
+        C.VMEM_WR: float(vmem),
+        C.CMEM_RD: 0.0,
+        C.GRID: float(nm * nn),
+        C.VMEM_WS: float(ws),
+        "LANE_E_HINT": lane_e,
+    }

@@ -1,0 +1,40 @@
+"""Fault-tolerant training supervisor: re-exec on failure, resume from the
+last checkpoint.  The production failure unit on TPU pods is the whole job
+(a dead host wedges collectives); the watchdog inside train.py converts
+wedges into exits, and this loop restarts bounded-many times.
+
+    PYTHONPATH=src python -m repro.launch.supervisor -- \
+        --arch qwen1.5-0.5b --smoke --steps 100 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-restarts", type=int, default=5)
+    ap.add_argument("--backoff", type=float, default=5.0)
+    ap.add_argument("train_args", nargs=argparse.REMAINDER)
+    args = ap.parse_args()
+    train_args = [a for a in args.train_args if a != "--"]
+
+    for attempt in range(args.max_restarts + 1):
+        cmd = [sys.executable, "-m", "repro.launch.train"] + train_args
+        print(f"[supervisor] attempt {attempt}: {' '.join(cmd)}")
+        rc = subprocess.call(cmd)
+        if rc == 0:
+            print("[supervisor] training completed")
+            return 0
+        print(f"[supervisor] exited rc={rc}; restarting from checkpoint "
+              f"in {args.backoff}s")
+        time.sleep(args.backoff)
+    print("[supervisor] restart budget exhausted")
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,201 @@
+"""Encoder-decoder transformer (Seamless-M4T backbone, audio frontend stub).
+
+Per the assignment, the speech frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, T_enc, frontend_dim); the encoder is a
+bidirectional transformer over their projection, the decoder a causal
+transformer with cross-attention.  "24L" is realized as 24 encoder + 24
+decoder layers (seamless-large sizing; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import shard_act
+from repro.models.attention import (AttnConfig, _chunked_attention, gqa_apply,
+                                    gqa_defs, gqa_init_cache)
+from repro.models.common import (ParamDef, Params, apply_rope,
+                                 cross_entropy_from_hidden, dense,
+                                 init_params, mlp_apply, mlp_defs, rms_norm,
+                                 stack_defs)
+from repro.models.config import ArchConfig
+from repro.models.transformer import attn_config
+
+
+def _xattn_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, h, hk = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.eff_head_dim
+    return {
+        "wq": ParamDef((d, h * hd), ("embed", "heads")),
+        "wk": ParamDef((d, hk * hd), ("embed", "kv")),
+        "wv": ParamDef((d, hk * hd), ("embed", "kv")),
+        "wo": ParamDef((h * hd, d), ("heads", "embed")),
+    }
+
+
+def encdec_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    enc_block = {
+        "ln1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "attn": gqa_defs(attn_config(cfg)),
+        "ln2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff, gated=True),
+    }
+    dec_block = {
+        "ln1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "attn": gqa_defs(attn_config(cfg)),
+        "ln_x": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "xattn": _xattn_defs(cfg),
+        "ln2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff, gated=True),
+    }
+    v = cfg.padded_vocab
+    return {
+        "frontend_proj": ParamDef((cfg.frontend_dim, cfg.d_model),
+                                  (None, "embed")),
+        "embed": ParamDef((v, cfg.d_model), ("vocab", "embed"), scale=0.02),
+        "enc": stack_defs(enc_block, cfg.enc_layers),
+        "enc_ln": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "dec": stack_defs(dec_block, cfg.dec_layers),
+        "final_ln": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "lm_head": ParamDef((cfg.d_model, v), ("embed", "vocab"), scale=0.02),
+    }
+
+
+def _encode(cfg: ArchConfig, params: Params, frames: jax.Array,
+            remat: str = "nothing_saveable") -> jax.Array:
+    acfg = attn_config(cfg)._replace(causal=False)
+    x = dense(frames.astype(jnp.bfloat16 if cfg.dtype == "bfloat16"
+                            else jnp.float32), params["frontend_proj"])
+    x = shard_act(x, ("batch", None, None))
+
+    def body(x, lp):
+        h, _ = gqa_apply(lp["attn"], acfg, rms_norm(x, lp["ln1"]))
+        x = x + h
+        x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"]), cfg.activation)
+        return shard_act(x, ("batch", None, None)), None
+
+    body_fn = body if remat == "none" else jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return rms_norm(x, params["enc_ln"])
+
+
+def _cross_attend(cfg: ArchConfig, xp: Params, x: jax.Array,
+                  enc_kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    b, s, _ = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.eff_head_dim
+    q = dense(x, xp["wq"]).reshape(b, s, h, hd)
+    k, v = enc_kv
+    out = _chunked_attention(q, k, v, causal=False)
+    return dense(out.reshape(b, s, h * hd).astype(x.dtype), xp["wo"])
+
+
+def _enc_kv(cfg: ArchConfig, xp: Params, enc_out: jax.Array):
+    b, t, _ = enc_out.shape
+    hk, hd = cfg.n_kv_heads, cfg.eff_head_dim
+    k = dense(enc_out, xp["wk"]).reshape(b, t, hk, hd)
+    v = dense(enc_out, xp["wv"]).reshape(b, t, hk, hd)
+    return k, v
+
+
+def encdec_loss(cfg: ArchConfig, params: Params, batch: Dict,
+                remat: str = "nothing_saveable", loss_chunks: int = 1,
+                **_) -> jax.Array:
+    enc_out = _encode(cfg, params, batch["frames"], remat)
+    acfg = attn_config(cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = shard_act(x, ("batch", None, None))
+
+    def body(x, lp):
+        h, _ = gqa_apply(lp["attn"], acfg, rms_norm(x, lp["ln1"]))
+        x = x + h
+        kv = _enc_kv(cfg, lp["xattn"], enc_out)
+        x = x + _cross_attend(cfg, lp["xattn"], rms_norm(x, lp["ln_x"]), kv)
+        x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"]), cfg.activation)
+        return shard_act(x, ("batch", None, None)), None
+
+    body_fn = body if remat == "none" else jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    hidden = rms_norm(x, params["final_ln"])
+    return cross_entropy_from_hidden(hidden, params["lm_head"],
+                                     batch["labels"], seq_chunks=loss_chunks)
+
+
+def encdec_init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype):
+    a1 = gqa_init_cache(attn_config(cfg), batch, max_seq, dtype)
+    self_c = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.dec_layers,) + a.shape).copy(), a1)
+    hk, hd = cfg.n_kv_heads, cfg.eff_head_dim
+    t_enc = cfg.frontend_len
+    cross = {
+        "k": jnp.zeros((cfg.dec_layers, batch, t_enc, hk, hd), dtype),
+        "v": jnp.zeros((cfg.dec_layers, batch, t_enc, hk, hd), dtype),
+    }
+    return {"self": self_c, "cross": cross}
+
+
+def encdec_prefill(cfg: ArchConfig, params: Params, batch: Dict,
+                   max_seq: int, **_) -> Tuple[jax.Array, Dict]:
+    enc_out = _encode(cfg, params, batch["frames"])
+    acfg = attn_config(cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b, s, _ = x.shape
+    pad = max_seq - s
+    hk, hd = cfg.n_kv_heads, cfg.eff_head_dim
+
+    def body(x, lp):
+        h_in = rms_norm(x, lp["ln1"])
+        k = dense(h_in, lp["attn"]["wk"]).reshape(b, s, hk, hd)
+        k = apply_rope(k, jnp.arange(s)[None, :], cfg.rope_theta)
+        v = dense(h_in, lp["attn"]["wv"]).reshape(b, s, hk, hd)
+        self_c = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "pos": jnp.int32(s),
+        }
+        h, _ = gqa_apply(lp["attn"], acfg, h_in)
+        x = x + h
+        kv = _enc_kv(cfg, lp["xattn"], enc_out)
+        x = x + _cross_attend(cfg, lp["xattn"], rms_norm(x, lp["ln_x"]), kv)
+        x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"]), cfg.activation)
+        return x, (self_c, {"k": kv[0], "v": kv[1]})
+
+    x, (self_c, cross_c) = jax.lax.scan(body, x, params["dec"])
+    hidden = rms_norm(x[:, -1:], params["final_ln"])
+    return dense(hidden, params["lm_head"]), {"self": self_c,
+                                              "cross": cross_c}
+
+
+def encdec_decode(cfg: ArchConfig, params: Params, cache: Dict, batch: Dict
+                  ) -> Tuple[jax.Array, Dict]:
+    acfg = attn_config(cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    def body(x, scanned):
+        lp, self_c, cross_c = scanned
+        h, new_kv = gqa_apply(lp["attn"], acfg, rms_norm(x, lp["ln1"]),
+                              cache=self_c)
+        x = x + h
+        x = x + _cross_attend(cfg, lp["xattn"], rms_norm(x, lp["ln_x"]),
+                              (cross_c["k"], cross_c["v"]))
+        x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"]), cfg.activation)
+        return x, new_kv
+
+    x, new_kv = jax.lax.scan(body, x,
+                             (params["dec"], cache["self"], cache["cross"]))
+    sc = cache["self"]
+    pos = sc["pos"][0]
+    new_self = {
+        "k": jax.lax.dynamic_update_slice(
+            sc["k"], new_kv["k_new"], (0, 0, pos, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            sc["v"], new_kv["v_new"], (0, 0, pos, 0, 0)),
+        "pos": sc["pos"] + 1,
+    }
+    hidden = rms_norm(x, params["final_ln"])
+    logits = dense(hidden, params["lm_head"])
+    return logits, {"self": new_self, "cross": cache["cross"]}

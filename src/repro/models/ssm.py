@@ -1,0 +1,185 @@
+"""Mamba2 (SSD) block: chunked parallel scan for train/prefill, O(1) decode.
+
+State-space duality form: within a chunk the output is an attention-like
+matmul with a decay-masked score matrix; across chunks a small recurrent
+state (H, P, N) is carried.  This is the TPU-friendly formulation — both the
+intra-chunk part and the state updates are MXU matmuls (DESIGN.md §2:
+hardware adaptation of the paper's GPU-centric scan kernels).
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim heads, state N.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, Params, dense, rms_norm
+
+
+class Mamba2Config(NamedTuple):
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        # convolved channels: x plus B and C projections
+        return self.d_inner + 2 * self.d_state
+
+
+def mamba2_defs(cfg: Mamba2Config) -> Dict[str, ParamDef]:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    return {
+        # in_proj -> [z (di), xBC (conv_dim), dt (H)]
+        "w_in": ParamDef((d, 2 * di + 2 * n + h), ("embed", "mlp")),
+        "conv_w": ParamDef((cfg.conv_width, cfg.conv_dim), (None, "mlp"),
+                           scale=0.5),
+        "conv_b": ParamDef((cfg.conv_dim,), ("mlp",), init="zeros"),
+        "a_log": ParamDef((h,), (None,), init="zeros"),
+        "dt_bias": ParamDef((h,), (None,), init="zeros"),
+        "d_skip": ParamDef((h,), (None,), init="ones"),
+        "norm_g": ParamDef((di,), ("mlp",), init="ones"),
+        "w_out": ParamDef((di, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(p: Params, cfg: Mamba2Config, x: jax.Array):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    proj = dense(x, p["w_in"])
+    z = proj[..., :di]
+    xbc = proj[..., di:di + cfg.conv_dim]
+    dt = proj[..., di + cfg.conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(p: Params, cfg: Mamba2Config, xbc: jax.Array) -> jax.Array:
+    """Depthwise causal conv over sequence: (B, S, conv_dim)."""
+    w = p["conv_w"]                      # (W, conv_dim)
+    pad = cfg.conv_width - 1
+    xp = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    out = sum(
+        xp[:, i:i + xbc.shape[1], :] * w[i]
+        for i in range(cfg.conv_width)
+    )
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba2_apply(
+    p: Params,
+    cfg: Mamba2Config,
+    x: jax.Array,                       # (B, S, D)
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    if cache is not None:
+        return _mamba2_decode(p, cfg, x, cache)
+
+    b, s, _ = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    L = min(cfg.chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+
+    z, xbc, dt = _split_proj(p, cfg, x)
+    xbc = _causal_conv(p, cfg, xbc)
+    xs = xbc[..., :di].reshape(b, nc, L, h, pd)
+    bm = xbc[..., di:di + n].reshape(b, nc, L, n)        # B_t (G=1)
+    cm = xbc[..., di + n:].reshape(b, nc, L, n)          # C_t
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = dt.reshape(b, nc, L, h)
+    ldec = dt * a                                         # log decay ≤ 0
+    cum = jnp.cumsum(ldec, axis=2)                        # (B, C#, L, H)
+
+    # --- intra-chunk: decay-masked attention-like matmul --------------------
+    # scores[b,c,h,t,s] = exp(cum_t - cum_s) * (C_t · B_s) * dt_s,  s <= t
+    cb = jnp.einsum("bctn,bcsn->bcts", cm.astype(jnp.float32),
+                    bm.astype(jnp.float32))
+    decay = jnp.exp(
+        cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    )                                                     # (B,C#,t,s,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    scores = jnp.where(
+        tri[None, None, :, :, None], cb[..., None] * decay, 0.0
+    ) * dt[:, :, None, :, :]                              # weight dt_s
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", scores,
+                         xs.astype(jnp.float32))
+
+    # --- chunk boundary states ------------------------------------------------
+    # h_end[b,c,h,p,n] = Σ_s exp(cum_L - cum_s) dt_s x_s ⊗ B_s
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dt         # (B,C#,L,H)
+    h_end = jnp.einsum("bcsh,bcshp,bcsn->bchpn", w_end,
+                       xs.astype(jnp.float32), bm.astype(jnp.float32))
+
+    def carry_fn(hprev, inp):
+        h_end_c, decay_end = inp
+        hnew = hprev * decay_end[:, :, None, None] + h_end_c
+        return hnew, hprev
+
+    decay_end = jnp.exp(cum[:, :, -1, :])                 # (B, C#, H)
+    h0 = jnp.zeros((b, h, pd, n), jnp.float32)
+    _, h_in = jax.lax.scan(
+        carry_fn,
+        h0,
+        (jnp.moveaxis(h_end, 1, 0), jnp.moveaxis(decay_end, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                       # (B, C#, H, P, N)
+
+    # --- inter-chunk contribution ---------------------------------------------
+    y_inter = jnp.einsum("bctn,bchpn->bcthp", cm.astype(jnp.float32),
+                         h_in) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s, di)
+    y = y + (xbc[..., :di].astype(jnp.float32)
+             * jnp.repeat(p["d_skip"], pd)[None, None, :])
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_g"])
+    return dense(y, p["w_out"]), None
+
+
+def _mamba2_decode(p: Params, cfg: Mamba2Config, x: jax.Array, cache: Dict):
+    """Single-token recurrent step; cache: conv tail + SSM state."""
+    b = x.shape[0]
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    z, xbc, dt = _split_proj(p, cfg, x)                   # (B, 1, ·)
+    conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, W, conv_dim)
+    w = p["conv_w"]
+    out = jnp.einsum("bwc,wc->bc", conv_in, w) + p["conv_b"]
+    xbc1 = jax.nn.silu(out)                               # (B, conv_dim)
+    xs = xbc1[:, :di].reshape(b, h, pd)
+    bm = xbc1[:, di:di + n]
+    cm = xbc1[:, di + n:]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt1 * a)                              # (B, H)
+    hst = cache["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xs.astype(jnp.float32),
+        bm.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", cm.astype(jnp.float32), hst)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_g"])
+    new_cache = {"conv": conv_in[:, 1:], "h": hst, "pos": cache["pos"] + 1}
+    return dense(y, p["w_out"]), new_cache
+
+
+def mamba2_init_cache(cfg: Mamba2Config, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
+        "h": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                       jnp.float32),
+        "pos": jnp.int32(0),
+    }

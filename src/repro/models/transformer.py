@@ -1,0 +1,289 @@
+"""Decoder-only transformer LM: dense GQA, MLA, and MoE variants, with
+optional vision/audio embedding prefix (VLM stub per assignment).
+
+Layers are scanned (stacked params, ``jax.lax.scan``) to keep HLO size
+O(1) in depth — essential for 512-device SPMD compiles.  Remat is applied
+per-layer via ``jax.checkpoint`` with a configurable policy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import shard_act
+from repro.models.attention import (AttnConfig, gqa_apply, gqa_defs,
+                                    gqa_init_cache, mla_apply, mla_defs,
+                                    mla_init_cache)
+from repro.models.common import (ParamDef, Params, cross_entropy_from_hidden,
+                                 dense, init_params, logical_specs, mlp_apply,
+                                 mlp_defs, rms_norm, stack_defs)
+from repro.models.config import ArchConfig
+from repro.models.moe import (MoEConfig, moe_apply,
+                              moe_apply_dropless, moe_defs)
+
+
+def attn_config(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.eff_head_dim,
+        qkv_bias=cfg.qkv_bias,
+        rope_theta=cfg.rope_theta,
+        kv_lora_rank=cfg.kv_lora_rank,
+        qk_rope_dim=cfg.qk_rope_dim,
+        v_head_dim=cfg.v_head_dim,
+    )
+
+
+def moe_config(cfg: ArchConfig) -> MoEConfig:
+    return MoEConfig(
+        d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff or cfg.d_ff,
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        n_shared=cfg.n_shared_experts,
+    )
+
+
+# =============================================================================
+# Parameter definitions
+# =============================================================================
+def block_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    acfg = attn_config(cfg)
+    defs: Dict[str, Any] = {
+        "ln1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "attn": mla_defs(acfg) if cfg.kv_lora_rank else gqa_defs(acfg),
+    }
+    if cfg.n_experts:
+        defs["moe"] = moe_defs(moe_config(cfg))
+    else:
+        defs["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff, gated=True)
+    return defs
+
+
+def lm_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    v = cfg.padded_vocab
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((v, cfg.d_model), ("vocab", "embed"), scale=0.02),
+        "blocks": stack_defs(block_defs(cfg), cfg.n_layers),
+        "final_ln": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, v), ("embed", "vocab"),
+                                   scale=0.02)
+    if cfg.frontend == "vision":
+        defs["vis_proj"] = ParamDef((cfg.frontend_dim, cfg.d_model),
+                                    (None, "embed"))
+    return defs
+
+
+# =============================================================================
+# Forward
+# =============================================================================
+def _block_apply(cfg: ArchConfig, lp: Params, x: jax.Array,
+                 kv_chunk: int) -> Tuple[jax.Array, jax.Array]:
+    acfg = attn_config(cfg)
+    h = rms_norm(x, lp["ln1"])
+    if cfg.kv_lora_rank:
+        h, _ = mla_apply(lp["attn"], acfg, h, kv_chunk=kv_chunk)
+    else:
+        h, _ = gqa_apply(lp["attn"], acfg, h, kv_chunk=kv_chunk)
+    x = x + h
+    x = shard_act(x, ("batch", None, None))
+    h = rms_norm(x, lp["ln2"])
+    if cfg.n_experts:
+        h, aux = moe_apply(lp["moe"], moe_config(cfg), h)
+    else:
+        h, aux = mlp_apply(lp["mlp"], h, cfg.activation), jnp.float32(0.0)
+    x = x + h
+    return shard_act(x, ("batch", None, None)), aux
+
+
+def embed_inputs(cfg: ArchConfig, params: Params, batch: Dict) -> jax.Array:
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        vis = dense(batch["patch_embeds"].astype(x.dtype), params["vis_proj"])
+        x = jnp.concatenate([vis, x], axis=1)
+    return shard_act(x, ("batch", None, None))
+
+
+def forward_hidden(
+    cfg: ArchConfig, params: Params, batch: Dict,
+    remat: str = "nothing_saveable", kv_chunk: int = 1024,
+) -> Tuple[jax.Array, jax.Array]:
+    """Token (+prefix) embeddings -> final hidden states, scanning layers."""
+    x = embed_inputs(cfg, params, batch)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _block_apply(cfg, lp, x, kv_chunk)
+        return (x, aux + a), None
+
+    body_fn = body
+    if remat != "none":
+        policy = {
+            "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+            "dots_saveable": jax.checkpoint_policies.dots_saveable,
+            "dots_with_no_batch_dims": (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable),
+        }[remat]
+        body_fn = jax.checkpoint(body, policy=policy)
+
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                               params["blocks"])
+    return rms_norm(x, params["final_ln"]), aux
+
+
+def lm_loss(
+    cfg: ArchConfig, params: Params, batch: Dict,
+    remat: str = "nothing_saveable", kv_chunk: int = 1024,
+    loss_chunks: int = 1,
+) -> jax.Array:
+    hidden, aux = forward_hidden(cfg, params, batch, remat, kv_chunk)
+    w_out = params.get("lm_head")
+    if w_out is None:
+        w_out = params["embed"].T
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        hidden = hidden[:, batch["patch_embeds"].shape[1]:]
+    ce = cross_entropy_from_hidden(hidden, w_out, labels,
+                                   seq_chunks=loss_chunks)
+    return ce + aux
+
+
+# =============================================================================
+# Serving: prefill + decode
+# =============================================================================
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> Dict:
+    acfg = attn_config(cfg)
+    one = (mla_init_cache(acfg, batch, max_seq, dtype) if cfg.kv_lora_rank
+           else gqa_init_cache(acfg, batch, max_seq, dtype))
+    # stack along layers for scan: every leaf gets a leading L axis
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one
+    )
+
+
+def decode_step(
+    cfg: ArchConfig, params: Params, cache: Dict, batch: Dict,
+) -> Tuple[jax.Array, Dict]:
+    """One-token decode: batch["tokens"]: (B, 1) -> (logits, new cache).
+
+    Layers are scanned; each layer emits only the NEW token's K/V.  The
+    stacked cache is updated ONCE after the scan (a single in-place
+    token-slot write instead of per-layer full-buffer rewrites).
+    """
+    acfg = attn_config(cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    def body(x, scanned):
+        lp, cache_l = scanned
+        h = rms_norm(x, lp["ln1"])
+        if cfg.kv_lora_rank:
+            h, new_c = mla_apply(lp["attn"], acfg, h, cache=cache_l)
+        else:
+            h, new_c = gqa_apply(lp["attn"], acfg, h, cache=cache_l)
+        x = x + h
+        h = rms_norm(x, lp["ln2"])
+        if cfg.n_experts:
+            h = moe_apply_dropless(lp["moe"], moe_config(cfg), h)
+        else:
+            h = mlp_apply(lp["mlp"], h, cfg.activation)
+        return x + h, new_c
+
+    x, new_kv = jax.lax.scan(body, x, (params["blocks"], cache))
+    new_cache = update_stacked_cache(cfg, cache, new_kv)
+    x = rms_norm(x, params["final_ln"])
+    w_out = params.get("lm_head")
+    if w_out is None:
+        w_out = params["embed"].T
+    logits = dense(x, w_out)
+    return logits, new_cache
+
+
+def update_stacked_cache(cfg: ArchConfig, cache: Dict, new_kv: Dict) -> Dict:
+    """Write all layers' new-token K/V into the stacked cache at pos."""
+    pos = cache["pos"][0]
+    if cfg.kv_lora_rank:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], new_kv["c_kv_new"], (0, 0, pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], new_kv["k_rope_new"], (0, 0, pos, 0))
+        return {"c_kv": c_kv, "k_rope": k_rope, "pos": cache["pos"] + 1}
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], new_kv["k_new"], (0, 0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], new_kv["v_new"], (0, 0, pos, 0, 0))
+    return {"k": k, "v": v, "pos": cache["pos"] + 1}
+
+
+def prefill(
+    cfg: ArchConfig, params: Params, batch: Dict, max_seq: int,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Dict]:
+    """Process the prompt, building the KV cache; returns last-pos logits.
+
+    Implemented as forward_hidden for the hidden states plus cache
+    construction per layer (recomputing K/V projections — cheap relative to
+    attention itself and keeps the scan carry small).
+    """
+    acfg = attn_config(cfg)
+    x = embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    pad = max_seq - s
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"])
+        if cfg.kv_lora_rank:
+            c_kv = dense(h, lp["attn"]["w_dkv"])
+            from repro.models.common import apply_rope
+            k_rope = apply_rope(
+                dense(h, lp["attn"]["w_kr"])[:, :, None, :],
+                jnp.arange(s)[None, :], cfg.rope_theta)[:, :, 0, :]
+            cache_l = {
+                "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+                "pos": jnp.int32(s),
+            }
+            h, _ = mla_apply(lp["attn"], acfg, h)
+        else:
+            hk, hd = acfg.n_kv_heads, acfg.head_dim
+            from repro.models.common import apply_rope
+            k = dense(h, lp["attn"]["wk"], lp["attn"].get("bk")).reshape(
+                b, s, hk, hd)
+            k = apply_rope(k, jnp.arange(s)[None, :], cfg.rope_theta)
+            v = dense(h, lp["attn"]["wv"], lp["attn"].get("bv")).reshape(
+                b, s, hk, hd)
+            cache_l = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "pos": jnp.int32(s),
+            }
+            h, _ = gqa_apply(lp["attn"], acfg, h)
+        x = x + h
+        h = rms_norm(x, lp["ln2"])
+        if cfg.n_experts:
+            # §Perf: global argsort dispatch all-gathers the full token set
+            # across the data axis — at large-T prefill the grouped-capacity
+            # einsum dispatch keeps routing local to each shard (the
+            # collective-bound fix for llama4-scout prefill_32k); dropless
+            # stays for small T where exactness is cheap
+            if b * s > 65536:
+                h, _ = moe_apply(lp["moe"], moe_config(cfg), h)
+            else:
+                h = moe_apply_dropless(lp["moe"], moe_config(cfg), h)
+        else:
+            h = mlp_apply(lp["mlp"], h, cfg.activation)
+        return x + h, cache_l
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x[:, -1:], params["final_ln"])
+    w_out = params.get("lm_head")
+    if w_out is None:
+        w_out = params["embed"].T
+    return dense(x, w_out), cache

@@ -1,0 +1,244 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly recurrent with chunk-level rematerialization).
+
+mLSTM is linear-attention-like: C_t = f_t·C_{t-1} + i_t·v_t k_tᵀ,
+y_t = (C_t q_t) / max(|n_t·q_t|, 1).  The chunkwise form mirrors the SSD
+decomposition in ssm.py — intra-chunk decay-masked attention + a small
+recurrent (H, Pv, Pk) state across chunks, which is the TPU-native way to
+run it (MXU matmuls instead of a per-token scan).
+
+sLSTM keeps per-feature scalar state with a block-diagonal recurrent matrix —
+inherently sequential, scanned over time with jax.checkpoint per chunk to
+bound saved residuals.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, Params, dense, rms_norm
+
+_CLIP = 15.0
+
+
+class XLSTMConfig(NamedTuple):
+    d_model: int
+    n_heads: int = 4
+    chunk: int = 128
+    proj_factor: float = 2.0   # mLSTM up-projection
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_up(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+
+# =============================================================================
+# mLSTM
+# =============================================================================
+def mlstm_defs(cfg: XLSTMConfig) -> Dict[str, ParamDef]:
+    d, du, h = cfg.d_model, cfg.d_up, cfg.n_heads
+    hd = du // h
+    return {
+        "w_up": ParamDef((d, 2 * du), ("embed", "mlp")),      # x branch + gate
+        "wq": ParamDef((du, du), ("mlp", "heads")),
+        "wk": ParamDef((du, du), ("mlp", "heads")),
+        "wv": ParamDef((du, du), ("mlp", "heads")),
+        "w_if": ParamDef((du, 2 * h), ("mlp", None), scale=0.02),
+        "b_if": ParamDef((2 * h,), (None,), init="zeros"),
+        "norm_g": ParamDef((du,), ("mlp",), init="ones"),
+        "w_out": ParamDef((du, d), ("mlp", "embed")),
+    }
+
+
+def mlstm_apply(
+    p: Params,
+    cfg: XLSTMConfig,
+    x: jax.Array,                        # (B, S, D)
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    du = cfg.d_up
+    hd = du // h
+
+    up = dense(x, p["w_up"])
+    xb, gate = up[..., :du], up[..., du:]
+    q = dense(xb, p["wq"]).reshape(b, s, h, hd)
+    k = dense(xb, p["wk"]).reshape(b, s, h, hd) / (hd ** 0.5)
+    v = dense(xb, p["wv"]).reshape(b, s, h, hd)
+    gates = dense(xb, p["w_if"]) + p["b_if"]
+    logi = jnp.clip(gates[..., :h].astype(jnp.float32), -_CLIP, _CLIP)
+    logf = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))  # ≤ 0
+
+    if cache is not None:
+        return _mlstm_decode(p, cfg, x, q, k, v, logi, logf, gate, cache)
+
+    L = min(cfg.chunk, s)
+    assert s % L == 0
+    nc = s // L
+    qc = q.reshape(b, nc, L, h, hd).astype(jnp.float32)
+    kc = k.reshape(b, nc, L, h, hd).astype(jnp.float32)
+    vc = v.reshape(b, nc, L, h, hd).astype(jnp.float32)
+    li = logi.reshape(b, nc, L, h)
+    lf = logf.reshape(b, nc, L, h)
+    cum = jnp.cumsum(lf, axis=2)                          # (B, C#, L, H)
+
+    # intra-chunk: D[t,s] = exp(cum_t - cum_s + logi_s), s <= t
+    ldecay = jnp.clip(
+        cum[:, :, :, None, :] - cum[:, :, None, :, :]
+        + li[:, :, None, :, :], -_CLIP, _CLIP
+    )
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    dmat = jnp.where(tri[None, None, :, :, None], jnp.exp(ldecay), 0.0)
+    sqk = jnp.einsum("bcthd,bcshd->bctsh", qc, kc)
+    num_intra = jnp.einsum("bctsh,bcshd->bcthd", sqk * dmat, vc)
+    den_intra = jnp.einsum("bctsh->bcth", sqk * dmat)
+
+    # chunk-boundary states: C_end = Σ_s exp(cum_L - cum_s + logi_s) v_s k_sᵀ
+    w_end = jnp.exp(jnp.clip(
+        cum[:, :, -1:, :] - cum + li, -_CLIP, _CLIP))     # (B,C#,L,H)
+    c_end = jnp.einsum("bcsh,bcshd,bcshe->bchde", w_end, vc, kc)
+    n_end = jnp.einsum("bcsh,bcshd->bchd", w_end, kc)
+
+    def carry(carry_in, inp):
+        c_prev, n_prev = carry_in
+        c_e, n_e, dec = inp
+        c_new = c_prev * dec[:, :, None, None] + c_e
+        n_new = n_prev * dec[:, :, None] + n_e
+        return (c_new, n_new), (c_prev, n_prev)
+
+    dec_end = jnp.exp(cum[:, :, -1, :])                   # (B, C#, H)
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    (_, _), (c_in, n_in) = jax.lax.scan(
+        carry, (c0, n0),
+        (jnp.moveaxis(c_end, 1, 0), jnp.moveaxis(n_end, 1, 0),
+         jnp.moveaxis(dec_end, 1, 0)),
+    )
+    c_in = jnp.moveaxis(c_in, 0, 1)                       # (B, C#, H, Pv, Pk)
+    n_in = jnp.moveaxis(n_in, 0, 1)                       # (B, C#, H, Pk)
+
+    scale_t = jnp.exp(cum)                                # (B, C#, L, H)
+    num = num_intra + jnp.einsum("bcthe,bchde->bcthd", qc,
+                                 c_in) * scale_t[..., None]
+    den = den_intra + jnp.einsum("bcthe,bche->bcth", qc, n_in) * scale_t
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y = y.reshape(b, s, du).astype(x.dtype)
+    y = rms_norm(y, p["norm_g"]) * jax.nn.silu(gate)
+    return dense(y, p["w_out"]), None
+
+
+def _mlstm_decode(p, cfg, x, q, k, v, logi, logf, gate, cache):
+    b = x.shape[0]
+    h, du = cfg.n_heads, cfg.d_up
+    hd = du // h
+    qf = q[:, 0].astype(jnp.float32)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    i1 = jnp.exp(logi[:, 0])                              # (B, H)
+    f1 = jnp.exp(logf[:, 0])
+    c_new = cache["c"] * f1[:, :, None, None] + jnp.einsum(
+        "bhd,bhe->bhde", i1[..., None] * vf, kf)
+    n_new = cache["n"] * f1[:, :, None] + i1[..., None] * kf
+    num = jnp.einsum("bhe,bhde->bhd", qf, c_new)
+    den = jnp.einsum("bhe,bhe->bh", qf, n_new)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y = y.reshape(b, 1, du).astype(x.dtype)
+    y = rms_norm(y, p["norm_g"]) * jax.nn.silu(gate)
+    new_cache = {"c": c_new, "n": n_new, "pos": cache["pos"] + 1}
+    return dense(y, p["w_out"]), new_cache
+
+
+def mlstm_init_cache(cfg: XLSTMConfig, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_up // h
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "pos": jnp.int32(0),
+    }
+
+
+# =============================================================================
+# sLSTM
+# =============================================================================
+def slstm_defs(cfg: XLSTMConfig) -> Dict[str, ParamDef]:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    return {
+        # input projections for z, i, f, o gates
+        "w_x": ParamDef((d, 4 * d), ("embed", "mlp")),
+        # block-diagonal recurrent weights: per head (hd, 4*hd)
+        "w_r": ParamDef((h, hd, 4 * hd), (None, None, None), scale=0.02),
+        "b": ParamDef((4 * d,), (None,), init="zeros"),
+        "norm_g": ParamDef((d,), ("embed",), init="ones"),
+    }
+
+
+def _slstm_step(p, cfg, carry, xt):
+    """One recurrent step; xt: (B, 4*D) pre-activation from the input proj."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    b = h_prev.shape[0]
+    hh, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    rec = jnp.einsum("bhd,hde->bhe", h_prev.reshape(b, hh, hd),
+                     p["w_r"]).reshape(b, 4 * cfg.d_model)
+    pre = xt + rec + p["b"]
+    z, i_pre, f_pre, o = jnp.split(pre, 4, axis=-1)
+    logi = jnp.clip(i_pre.astype(jnp.float32), -_CLIP, _CLIP)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    m_new = jnp.maximum(logf + m_prev, logi)
+    i_s = jnp.exp(logi - m_new)
+    f_s = jnp.exp(logf + m_prev - m_new)
+    c_new = f_s * c_prev + i_s * jnp.tanh(z.astype(jnp.float32))
+    n_new = f_s * n_prev + i_s
+    h_new = jax.nn.sigmoid(o.astype(jnp.float32)) * c_new / jnp.maximum(
+        n_new, 1.0)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_apply(
+    p: Params,
+    cfg: XLSTMConfig,
+    x: jax.Array,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s, d = x.shape
+    xp = dense(x, p["w_x"])                                # (B, S, 4D)
+
+    if cache is not None:
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+        carry, h = _slstm_step(p, cfg, carry, xp[:, 0])
+        y = rms_norm(h[:, None, :].astype(x.dtype), p["norm_g"])
+        new_cache = {"h": carry[0], "c": carry[1], "n": carry[2],
+                     "m": carry[3], "pos": cache["pos"] + 1}
+        return y, new_cache
+
+    L = min(cfg.chunk, s)
+    assert s % L == 0
+    nc = s // L
+    xc = xp.reshape(b, nc, L, 4 * d).swapaxes(0, 1)        # (C#, B, L, 4D)
+
+    @jax.checkpoint
+    def chunk_fn(carry, xch):
+        def step(cr, xt):
+            return _slstm_step(p, cfg, cr, xt)
+        carry, hs = jax.lax.scan(step, carry, xch.swapaxes(0, 1))
+        return carry, hs.swapaxes(0, 1)                    # (B, L, D)
+
+    zero = jnp.zeros((b, d), jnp.float32)
+    carry0 = (zero, zero, zero, zero - _CLIP)
+    _, hs = jax.lax.scan(chunk_fn, carry0, xc)             # (C#, B, L, D)
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    return rms_norm(y, p["norm_g"]), None
+
+
+def slstm_init_cache(cfg: XLSTMConfig, batch: int):
+    zero = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"h": zero, "c": zero, "n": zero, "m": zero - _CLIP,
+            "pos": jnp.int32(0)}

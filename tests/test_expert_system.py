@@ -1,0 +1,142 @@
+"""Cost model, bottleneck analysis, ΔPC reaction, scoring (paper §3.5-3.6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SPECS, analyze, compute_delta_pc
+from repro.core import counters as C
+from repro.core import costmodel, scoring
+from repro.core.bottleneck import (B_HBM_READ, B_MXU, B_PARAL, B_SPILL,
+                                   ALL_BOTTLENECKS)
+from repro.core.reaction import INST_REACTION_DEFAULT
+
+HW = SPECS["tpu_v5e"]
+
+
+def _mk_ops(**kw):
+    ops = {k: 0.0 for k in C.PC_OPS}
+    ops.update(kw)
+    return ops
+
+
+def test_compute_bound_runtime():
+    ops = _mk_ops(**{C.MXU_FLOPS: 197e12, C.GRID: 64, C.VMEM_WS: 2**20})
+    cs = costmodel.execute(ops, HW)
+    assert 0.9 < cs.runtime < 1.2          # ~1s of MXU work
+    assert cs.st(C.MXU_U) > 0.8
+
+
+def test_memory_bound_runtime():
+    ops = _mk_ops(**{C.HBM_RD: 819e9, C.GRID: 64, C.VMEM_WS: 2**20})
+    cs = costmodel.execute(ops, HW)
+    assert 0.9 < cs.runtime < 1.2
+    assert cs.st(C.HBM_U) > 0.8
+
+
+def test_spill_cliff():
+    base = _mk_ops(**{C.VPU_OPS: 1e9, C.GRID: 16})
+    fit = costmodel.execute({**base, C.VMEM_WS: HW.vmem_bytes / 4}, HW)
+    spill = costmodel.execute({**base, C.VMEM_WS: HW.vmem_bytes * 2}, HW)
+    assert spill.runtime > fit.runtime
+    assert spill.op(C.SPILL_B) > 0.0
+
+
+def test_double_buffer_cliff():
+    """WS beyond half VMEM serializes DMA with compute."""
+    ops = _mk_ops(**{C.MXU_FLOPS: 1e12, C.HBM_RD: 5e9, C.GRID: 16})
+    db = costmodel.execute({**ops, C.VMEM_WS: HW.vmem_bytes / 4}, HW)
+    ser = costmodel.execute({**ops, C.VMEM_WS: HW.vmem_bytes * 0.9}, HW)
+    assert ser.runtime > db.runtime
+
+
+def test_parallelism_penalty():
+    """One program on a 2-core chip leaves half the chip idle (v4)."""
+    hw4 = SPECS["tpu_v4"]
+    ops = _mk_ops(**{C.MXU_FLOPS: 1e13, C.VMEM_WS: 2**20})
+    few = costmodel.execute({**ops, C.GRID: 1}, hw4)
+    many = costmodel.execute({**ops, C.GRID: 8}, hw4)
+    assert many.runtime < few.runtime
+    assert few.st(C.CORE_E) == pytest.approx(0.5)
+
+
+def test_bottleneck_vector_range():
+    ops = _mk_ops(**{C.MXU_FLOPS: 1e14, C.HBM_RD: 1e11, C.HBM_WR: 1e10,
+                     C.VMEM_RD: 1e11, C.VMEM_WR: 1e10, C.TRANS_OPS: 1e10,
+                     C.VPU_OPS: 1e12, C.ISSUE_OPS: 1e14 + 1e12,
+                     C.GRID: 8, C.VMEM_WS: 2**24})
+    cs = costmodel.execute(ops, HW)
+    b = analyze(cs, cores=HW.cores)
+    assert set(b) == set(ALL_BOTTLENECKS)
+    for k, v in b.items():
+        assert 0.0 <= v <= 1.0, (k, v)
+
+
+def test_memory_bottleneck_identified():
+    ops = _mk_ops(**{C.HBM_RD: 1e12, C.HBM_WR: 1e10, C.VPU_OPS: 1e9,
+                     C.ISSUE_OPS: 1e9, C.GRID: 64, C.VMEM_WS: 2**20})
+    cs = costmodel.execute(ops, HW)
+    b = analyze(cs, cores=HW.cores)
+    assert b[B_HBM_READ] > 0.8
+    delta = compute_delta_pc(b)
+    assert delta[C.HBM_RD] < -0.8          # reaction: reduce HBM reads
+
+
+def test_inst_reaction_threshold():
+    """Instruction reactions only fire above inst_reaction (Eq. 15)."""
+    b = {k: 0.0 for k in ALL_BOTTLENECKS}
+    b[B_MXU] = INST_REACTION_DEFAULT - 0.05
+    assert compute_delta_pc(b)[C.MXU_FLOPS] == 0.0
+    b[B_MXU] = INST_REACTION_DEFAULT + 0.15
+    assert compute_delta_pc(b)[C.MXU_FLOPS] < 0.0
+
+
+def test_parallel_reaction_positive():
+    b = {k: 0.0 for k in ALL_BOTTLENECKS}
+    b[B_PARAL] = 0.5
+    assert compute_delta_pc(b)[C.GRID] == 0.5
+
+
+def test_delta_pc_range():
+    b = {k: 1.0 for k in ALL_BOTTLENECKS}
+    for k, v in compute_delta_pc(b).items():
+        assert -1.0 <= v <= 1.0
+
+
+# --- scoring (Eq. 16-17) -------------------------------------------------------
+def test_score_prefers_required_direction():
+    delta = {C.HBM_RD: -1.0}
+    prof = {C.HBM_RD: 100.0}
+    better = {C.HBM_RD: 50.0}
+    worse = {C.HBM_RD: 200.0}
+    assert scoring.score_configuration(delta, prof, better) > 0
+    assert scoring.score_configuration(delta, prof, worse) < 0
+
+
+def test_score_skips_zero_predictions():
+    delta = {C.HBM_RD: -1.0}
+    assert scoring.score_configuration(delta, {C.HBM_RD: 0.0},
+                                       {C.HBM_RD: 5.0}) == 0.0
+
+
+@given(st.lists(st.floats(-1.0, 1.0), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_normalize_scores_range(scores):
+    w = scoring.normalize_scores(scores)
+    assert (w >= scoring.FLOOR - 1e-12).all()
+    assert (w <= scoring.CEIL + 1e-9).all()
+
+
+def test_normalize_scores_amplifies_positive():
+    w = scoring.normalize_scores([1.0, 0.5, -0.1, -0.5])
+    assert w[0] == pytest.approx(256.0)
+    assert w[1] > 1.0
+    assert w[2] < 1.0
+    assert w[3] == pytest.approx(scoring.FLOOR)  # below γ cutoff
+
+
+def test_weighted_choice_respects_mask():
+    rngs = np.random.default_rng(0)
+    w = np.array([1.0, 1000.0, 1.0])
+    mask = np.array([True, False, True])
+    for _ in range(20):
+        assert scoring.weighted_choice(w, rngs, mask) != 1

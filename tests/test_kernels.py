@@ -1,0 +1,93 @@
+"""Per-kernel shape/dtype/config sweeps vs the pure-jnp oracles
+(interpret mode executes the kernel body on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention.space import AttentionInput
+from repro.kernels.conv2d.space import ConvInput
+from repro.kernels.coulomb.space import CoulombInput
+from repro.kernels.matmul.space import GemmInput
+from repro.kernels.nbody.space import NBodyInput
+from repro.kernels.registry import BENCHMARKS
+from repro.kernels.transpose.space import TransposeInput
+
+RNG = np.random.default_rng(42)
+
+
+def _check(name, inp, cfg, tol=2e-4, **kw):
+    bm = BENCHMARKS[name]
+    args = bm.make_args(inp, RNG)
+    out = bm.run(cfg, *args, interpret=True, **kw)
+    ref = bm.ref(*args, **kw) if name == "coulomb" else bm.ref(*args)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    assert err / scale < tol, f"{name} cfg={cfg} rel err {err/scale:.2e}"
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (192, 256, 128),
+                                   (256, 192, 320), (64, 512, 96)])
+@pytest.mark.parametrize("cfg", [
+    {"BLOCK_M": 64, "BLOCK_N": 128, "BLOCK_K": 128, "LOOP_ORDER": "mnk",
+     "ACC_F32": 1},
+    {"BLOCK_M": 128, "BLOCK_N": 128, "BLOCK_K": 256, "LOOP_ORDER": "nmk",
+     "ACC_F32": 1},
+])
+def test_matmul_sweep(m, n, k, cfg):
+    _check("matmul", GemmInput(m, n, k), cfg)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_matmul_property_shapes(mm, nn, kk):
+    """Any multiple-of-64 shape matches the oracle."""
+    cfg = {"BLOCK_M": 64, "BLOCK_N": 128, "BLOCK_K": 64,
+           "LOOP_ORDER": "mnk", "ACC_F32": 1}
+    _check("matmul", GemmInput(64 * mm, 64 * nn, 64 * kk), cfg)
+
+
+@pytest.mark.parametrize("m,n", [(128, 128), (200, 264), (96, 512)])
+@pytest.mark.parametrize("bm_,bn", [(64, 128), (128, 64), (32, 256)])
+def test_transpose_sweep(m, n, bm_, bn):
+    _check("transpose", TransposeInput(m, n),
+           {"BLOCK_M": bm_, "BLOCK_N": bn, "STAGE_OUT": 0})
+
+
+@pytest.mark.parametrize("gs,na", [(16, 32), (16, 40), (8, 16)])
+@pytest.mark.parametrize("z,chunk", [(2, 16), (4, 8), (8, 64)])
+def test_coulomb_sweep(gs, na, z, chunk):
+    cfg = {"Z_IT": z, "BY": 8, "BX": 128, "ATOM_CHUNK": chunk,
+           "ATOMS_IN_SMEM": 0}
+    _check("coulomb", CoulombInput(gs, na), cfg, tol=5e-4, grid_size=gs)
+
+
+@pytest.mark.parametrize("n", [128, 200, 256])
+@pytest.mark.parametrize("bi,bj", [(64, 64), (128, 32), (32, 128)])
+def test_nbody_sweep(n, bi, bj):
+    cfg = {"BLOCK_I": bi, "BLOCK_J": bj, "J_UNROLL": 1, "KEEP_PAIRWISE": 0}
+    _check("nbody", NBodyInput(n), cfg, tol=1e-3)
+
+
+@pytest.mark.parametrize("h,w", [(64, 128), (96, 160)])
+@pytest.mark.parametrize("by,bx,unroll", [(32, 128, 1), (64, 128, 0)])
+def test_conv2d_sweep(h, w, by, bx, unroll):
+    cfg = {"BY": by, "BX": bx, "UNROLL_TAPS": unroll, "FILTER_SMEM": 0,
+           "DMA_DEPTH": 1}
+    _check("conv2d", ConvInput(h, w, 5), cfg, tol=1e-3)
+
+
+@pytest.mark.parametrize("s,d", [(256, 64), (384, 128)])
+@pytest.mark.parametrize("bq,bk", [(128, 128), (128, 256)])
+def test_attention_sweep(s, d, bq, bk):
+    cfg = {"BLOCK_Q": bq, "BLOCK_K": bk, "KEEP_P": 0, "Q_PREFETCH": 1}
+    _check("attention", AttentionInput(1, 2, s, d), cfg, tol=2e-3)
+
+
+def test_all_benchmarks_have_space_and_workload():
+    for name, bm in BENCHMARKS.items():
+        sp = bm.make_space()
+        assert len(sp) > 16, name
+        w = bm.workload_fn(sp[0], bm.default_input)
+        assert w.get("VMEM_WS", 0) > 0, name
+        assert w.get("GRID", 0) >= 1, name

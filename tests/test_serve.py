@@ -1,0 +1,47 @@
+"""Serving engine: batched generate, slot waves, determinism."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.models.registry import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    model = build_model(SMOKES["qwen1.5-0.5b"])
+    return ServeEngine(model, batch_size=2, max_seq=32,
+                       rng=jax.random.PRNGKey(7))
+
+
+def _reqs(n, rng):
+    return [
+        Request(uid=i,
+                prompt=rng.integers(1, 500, size=rng.integers(3, 8)),
+                max_new_tokens=5)
+        for i in range(n)
+    ]
+
+
+def test_generate_batch(engine):
+    rng = np.random.default_rng(0)
+    out = engine.generate(_reqs(2, rng))
+    assert set(out) == {0, 1}
+    for toks in out.values():
+        assert len(toks) == 5
+        assert all(0 <= t < 512 for t in toks)
+
+
+def test_generate_more_requests_than_slots(engine):
+    rng = np.random.default_rng(1)
+    out = engine.generate(_reqs(5, rng))
+    assert set(out) == set(range(5))
+
+
+def test_generate_deterministic(engine):
+    rng1 = np.random.default_rng(2)
+    rng2 = np.random.default_rng(2)
+    a = engine.generate(_reqs(2, rng1))
+    b = engine.generate(_reqs(2, rng2))
+    assert a == b

@@ -1,0 +1,71 @@
+"""TP→PC_ops models: decision trees, quadratic regression, exact replay."""
+import numpy as np
+
+from repro.core import (DecisionTreeModel, ExactCounterModel,
+                        QuadraticRegressionModel, TuningParameter,
+                        TuningSpace, deliberate_training_sample)
+from repro.core import counters as C
+
+
+def _space():
+    return TuningSpace([
+        TuningParameter("x", (1, 2, 4, 8, 16)),
+        TuningParameter("y", (1, 2, 4)),
+        TuningParameter("flag", (0, 1)),
+    ])
+
+
+def _counters_for(space):
+    """Ground truth with quadratic + interaction structure per subspace."""
+    out = []
+    for cfg in space:
+        base = 2.0 if cfg["flag"] else 1.0
+        out.append({
+            C.HBM_RD: base * (100.0 * cfg["x"] + cfg["x"] * cfg["y"]),
+            C.MXU_FLOPS: base * (cfg["y"] ** 2) * 50.0,
+            C.GRID: float(cfg["x"] * cfg["y"]),
+        })
+    return out
+
+
+def test_exact_model_replays():
+    sp = _space()
+    cs = _counters_for(sp)
+    m = ExactCounterModel(sp, cs)
+    for i, cfg in enumerate(sp):
+        assert m.predict(cfg) == cs[i]
+
+
+def test_quadratic_model_recovers_quadratics():
+    sp = _space()
+    cs = _counters_for(sp)
+    m = QuadraticRegressionModel(sp, list(sp), cs,
+                                 counters_to_model=(C.HBM_RD, C.MXU_FLOPS,
+                                                    C.GRID))
+    for i, cfg in enumerate(sp):
+        pred = m.predict(cfg)
+        for k in (C.HBM_RD, C.MXU_FLOPS):
+            true = cs[i][k]
+            assert abs(pred[k] - true) <= 0.05 * abs(true) + 1.0, (cfg, k)
+
+
+def test_tree_model_low_error_in_sample():
+    sp = _space()
+    cs = _counters_for(sp)
+    m = DecisionTreeModel(sp, list(sp), cs,
+                          counters_to_model=(C.HBM_RD, C.GRID))
+    errs = []
+    for i, cfg in enumerate(sp):
+        pred = m.predict(cfg)[C.HBM_RD]
+        true = cs[i][C.HBM_RD]
+        errs.append(abs(pred - true) / (abs(true) + 1e-9))
+    assert np.median(errs) < 0.5
+
+
+def test_deliberate_sample_covers_binary_subspaces():
+    sp = _space()
+    idxs = deliberate_training_sample(sp, values_per_param=2)
+    flags = {sp[i]["flag"] for i in idxs}
+    assert flags == {0, 1}
+    # 2 values per non-binary param -> at most 2*2*2 configs
+    assert len(idxs) <= 8

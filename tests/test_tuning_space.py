@@ -1,0 +1,88 @@
+"""Tuning-space construction and invariants (unit + property)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TuningParameter, TuningSpace, powers_of_two
+
+
+def test_cross_product_size():
+    sp = TuningSpace([
+        TuningParameter("a", (1, 2, 3)),
+        TuningParameter("b", (0, 1)),
+    ])
+    assert len(sp) == 6
+
+
+def test_constraints_prune():
+    sp = TuningSpace(
+        [TuningParameter("a", (1, 2, 4)), TuningParameter("b", (1, 2, 4))],
+        constraints=[lambda c: c["a"] * c["b"] <= 4],
+    )
+    assert all(c["a"] * c["b"] <= 4 for c in sp)
+    assert len(sp) == 6
+
+
+def test_empty_space_raises():
+    with pytest.raises(ValueError):
+        TuningSpace([TuningParameter("a", (1,))],
+                    constraints=[lambda c: False])
+
+
+def test_binary_detection():
+    sp = TuningSpace([TuningParameter("a", (0, 1)),
+                      TuningParameter("b", (2, 4))])
+    assert [p.name for p in sp.binary_parameters] == ["a"]
+    assert [p.name for p in sp.nonbinary_parameters] == ["b"]
+
+
+def test_neighbours_differ_by_one():
+    sp = TuningSpace([TuningParameter("a", (1, 2, 3)),
+                      TuningParameter("b", (0, 1))])
+    for nb in sp.neighbours(0):
+        diff = sum(1 for k in sp[0] if sp[0][k] != sp[nb][k])
+        assert diff == 1
+
+
+def test_index_roundtrip():
+    sp = TuningSpace([TuningParameter("a", (1, 2, 3)),
+                      TuningParameter("b", ("x", "y"))])
+    for i, cfg in enumerate(sp):
+        assert sp.index_of(cfg) == i
+
+
+def test_subspace_key():
+    sp = TuningSpace([TuningParameter("bin", (0, 1)),
+                      TuningParameter("v", (1, 2))])
+    keys = {sp.subspace_key(c) for c in sp}
+    assert keys == {(0,), (1,)}
+
+
+@given(st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_property_size_product(na, nb):
+    sp = TuningSpace([
+        TuningParameter("a", tuple(range(na))),
+        TuningParameter("b", tuple(range(10, 10 + nb))),
+    ])
+    assert len(sp) == na * nb
+    # vectorize is total and numeric
+    for cfg in sp:
+        v = sp.vectorize(cfg)
+        assert len(v) == 2
+        assert all(isinstance(x, float) for x in v)
+
+
+def test_powers_of_two():
+    assert powers_of_two(8, 64) == (8, 16, 32, 64)
+
+
+def test_step_space_well_formed():
+    """The distributed-step tuning space (core/step_tuner.py)."""
+    from repro.core.step_tuner import make_step_space
+    sp = make_step_space()
+    assert len(sp) == 4 * 2 * 4 * 4 * 2
+    names = {p.name for p in sp.parameters}
+    assert {"MICROBATCHES", "REMAT", "LOSS_CHUNKS", "KV_CHUNK",
+            "FSDP"} == names
+    # FSDP is the only binary parameter -> 2 model subspaces
+    assert len(sp.binary_parameters) == 1
