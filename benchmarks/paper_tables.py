@@ -20,13 +20,17 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core import (BasinHoppingSearcher, ProfileBasedSearcher,
-                        ProfileLocalSearcher, RandomSearcher, SPECS,
-                        StarchartSearcher,
-                        convergence_curve, record_space,
-                        run_search_experiment, train_model)
+from repro.core import (SPECS, ReplayEvaluator, convergence_curve,
+                        record_space, run_search_experiment,
+                        steps_to_well_performing, train_model)
 from repro.core.evaluate import RecordedSpace
 from repro.kernels.registry import BENCHMARKS, GEMM_FULL_SPACE
+from repro.tuning import SEARCHERS, make_searcher, run_search
+
+
+def _searcher_factory(name: str, space, **context):
+    """seed -> searcher, via the uniform registry construction."""
+    return lambda s: make_searcher(name, space, seed=s, **context)
 
 HWS = ("tpu_v4", "tpu_v5e", "tpu_v5p", "tpu_v6e")
 PAPER_BENCH = ("coulomb", "transpose", "matmul", "nbody", "conv2d")
@@ -96,7 +100,7 @@ def table4_random_steps(reps: int = 200):
         for hw in HWS:
             rec = recorded(bench, hw)
             st = run_search_experiment(
-                lambda s: RandomSearcher(rec.space, seed=s), rec, reps)
+                _searcher_factory("random", rec.space), rec, reps)
             rows[(bench, hw)] = st.mean_steps
             cells.append(f"{st.mean_steps:.1f}")
         print(_fmt_row(LABEL[bench], cells))
@@ -114,13 +118,13 @@ def table5_profile_vs_random(reps: int = 200, t4=None):
             rec = recorded(bench, hw)
             model = train_model(rec, kind="exact")
             st_p = run_search_experiment(
-                lambda s: ProfileBasedSearcher(
-                    rec.space, model, cores=SPECS[hw].cores, seed=s),
+                _searcher_factory("profile", rec.space, model=model,
+                                  cores=SPECS[hw].cores),
                 rec, reps)
             base = t4.get((bench, hw))
             if base is None:
                 base = run_search_experiment(
-                    lambda s: RandomSearcher(rec.space, seed=s),
+                    _searcher_factory("random", rec.space),
                     rec, reps).mean_steps
             cells.append(f"{base / st_p.mean_steps:.2f}x")
         print(_fmt_row(LABEL[bench], cells))
@@ -136,7 +140,7 @@ def table6_hw_portability(reps: int = 150):
         for hw in HWS:
             rec = recorded(bench, hw)
             base[hw] = run_search_experiment(
-                lambda s: RandomSearcher(rec.space, seed=s),
+                _searcher_factory("random", rec.space),
                 rec, reps).mean_steps
         for tune_hw in HWS:
             rec = recorded(bench, tune_hw)
@@ -144,9 +148,8 @@ def table6_hw_portability(reps: int = 150):
             for model_hw in HWS:
                 model = _tree_model_pre(bench, model_hw, tune_hw)
                 st = run_search_experiment(
-                    lambda s: ProfileBasedSearcher(
-                        rec.space, model, cores=SPECS[tune_hw].cores,
-                        seed=s),
+                    _searcher_factory("profile", rec.space, model=model,
+                                      cores=SPECS[tune_hw].cores),
                     rec, reps)
                 cells.append(f"{base[tune_hw] / st.mean_steps:.2f}x")
             print(_fmt_row(tune_hw, cells))
@@ -160,14 +163,14 @@ def table7_input_portability(reps: int = 150):
     for tune_in in inputs:
         rec = recorded("matmul", "tpu_v5e", tune_in)
         base = run_search_experiment(
-            lambda s: RandomSearcher(rec.space, seed=s), rec, reps).mean_steps
+            _searcher_factory("random", rec.space), rec, reps).mean_steps
         cells = []
         for model_in in inputs:
             model = _tree_model_pre("matmul", "tpu_v5e", "tpu_v5e",
                                     input_key=tune_in, model_input=model_in)
             st = run_search_experiment(
-                lambda s: ProfileBasedSearcher(
-                    rec.space, model, cores=SPECS["tpu_v5e"].cores, seed=s),
+                _searcher_factory("profile", rec.space, model=model,
+                                  cores=SPECS["tpu_v5e"].cores),
                 rec, reps)
             cells.append(f"{base / st.mean_steps:.2f}x")
         print(_fmt_row(tune_in, cells))
@@ -187,9 +190,9 @@ def fig_convergence(reps: int = 60):
         rec = recorded(bench, "tpu_v5e")
         model = _tree_model_pre(bench, "tpu_v4", "tpu_v5e")
         for label, factory in (
-            ("profile", lambda s: ProfileBasedSearcher(
-                rec.space, model, cores=SPECS["tpu_v5e"].cores, seed=s)),
-            ("random", lambda s: RandomSearcher(rec.space, seed=s)),
+            ("profile", _searcher_factory("profile", rec.space, model=model,
+                                          cores=SPECS["tpu_v5e"].cores)),
+            ("random", _searcher_factory("random", rec.space)),
         ):
             grid = np.array([2.0, 5.0, 10.0, 20.0, 40.0])
             _, mean, _ = convergence_curve(factory, rec, repeats=reps,
@@ -205,10 +208,10 @@ def fig_convergence(reps: int = 60):
         rec_full.space)
     grid = np.array([5.0, 10.0, 20.0, 40.0, 80.0])
     for label, factory in (
-        ("profile", lambda s: ProfileBasedSearcher(
-            rec_full.space, model_small, cores=SPECS["tpu_v5e"].cores,
-            seed=s)),
-        ("random", lambda s: RandomSearcher(rec_full.space, seed=s)),
+        ("profile", _searcher_factory("profile", rec_full.space,
+                                      model=model_small,
+                                      cores=SPECS["tpu_v5e"].cores)),
+        ("random", _searcher_factory("random", rec_full.space)),
     ):
         _, mean, _ = convergence_curve(factory, rec_full,
                                        repeats=max(reps // 3, 10),
@@ -225,15 +228,14 @@ def table8_starchart(reps: int = 40):
         builds, tunes = [], []
         thresh = rec.best_runtime * 1.1
         for rep in range(reps):
-            from repro.core import ReplayEvaluator, steps_to_well_performing
-            s = StarchartSearcher(rec.space, seed=rep)
+            s = SEARCHERS["starchart"](rec.space, seed=rep)
             ev = ReplayEvaluator(rec)
-            s.search(ev, max_steps=len(rec.space))
+            run_search(s, ev, max_steps=len(rec.space))
             steps, _ = steps_to_well_performing(ev, thresh)
             builds.append(s.model_build_steps)
             tunes.append(max(0, (steps or ev.steps) - s.model_build_steps))
         rand = run_search_experiment(
-            lambda s: RandomSearcher(rec.space, seed=s), rec, reps)
+            _searcher_factory("random", rec.space), rec, reps)
         print(_fmt_row(LABEL[bench], (
             f"{np.mean(builds):.0f}", f"{np.mean(tunes):.0f}",
             f"{rand.mean_steps:.0f}")))
@@ -248,7 +250,6 @@ def table9_cross_hw_starchart(reps: int = 40):
         rec_a = recorded(bench, "tpu_v4")
         thresh = rec_b.best_runtime * 1.1
         # Starchart: train runtime tree on hw A, walk predictions on hw B
-        from repro.core import ReplayEvaluator, steps_to_well_performing
         from repro.core.model import _build_tree, _tree_predict
         X = np.array([rec_a.space.vectorize(c) for c in rec_a.space])
         sc_steps = []
@@ -266,8 +267,8 @@ def table9_cross_hw_starchart(reps: int = 40):
             sc_steps.append(ev.steps)
         model = train_model(rec_a, kind="tree")
         st_p = run_search_experiment(
-            lambda s: ProfileBasedSearcher(
-                rec_b.space, model, cores=SPECS["tpu_v5e"].cores, seed=s),
+            _searcher_factory("profile", rec_b.space, model=model,
+                              cores=SPECS["tpu_v5e"].cores),
             rec_b, reps)
         print(_fmt_row(LABEL[bench], (
             f"{np.mean(sc_steps):.0f}", f"{st_p.mean_steps:.0f}")))
@@ -282,17 +283,51 @@ def table_basin_hopping(reps: int = 60):
         rec = recorded(bench, "tpu_v5e")
         model = _tree_model_pre(bench, "tpu_v4", "tpu_v5e")
         st_r = run_search_experiment(
-            lambda s: RandomSearcher(rec.space, seed=s), rec, reps)
+            _searcher_factory("random", rec.space), rec, reps)
         st_b = run_search_experiment(
-            lambda s: BasinHoppingSearcher(rec.space, seed=s), rec, reps)
+            _searcher_factory("basin_hopping", rec.space), rec, reps)
         st_p = run_search_experiment(
-            lambda s: ProfileBasedSearcher(
-                rec.space, model, cores=SPECS["tpu_v5e"].cores, seed=s),
+            _searcher_factory("profile", rec.space, model=model,
+                              cores=SPECS["tpu_v5e"].cores),
             rec, reps)
         st_l = run_search_experiment(
-            lambda s: ProfileLocalSearcher(
-                rec.space, model, cores=SPECS["tpu_v5e"].cores, seed=s),
+            _searcher_factory("profile_local", rec.space, model=model,
+                              cores=SPECS["tpu_v5e"].cores),
             rec, reps)
         print(_fmt_row(LABEL[bench], (
             f"{st_r.mean_steps:.0f}", f"{st_b.mean_steps:.0f}",
             f"{st_p.mean_steps:.0f}", f"{st_l.mean_steps:.0f}")))
+
+
+def session_portability_demo(budget: int = 25):
+    """The public-API flow end-to-end: train a model on tpu_v4, serialize it
+    to JSON, load it into a fresh session and tune every benchmark on
+    tpu_v5e — the paper's headline portability as an actual artifact."""
+    import os
+    import tempfile
+
+    from repro.tuning import TuningSession
+
+    print("\n## TuningSession — portable-model artifact demo "
+          "(train tpu_v4 → JSON → tune tpu_v5e)")
+    print(_fmt_row("benchmark", ("space", "artifact", "steps", "vs best")))
+    for bench in PAPER_BENCH:
+        bm = BENCHMARKS[bench]
+        sp = bm.make_space()
+        wl = lambda c: bm.workload_fn(c, bm.default_input)
+        trainer = TuningSession(sp, wl, hw=SPECS["tpu_v4"], seed=0)
+        trainer.train()
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+            path = f.name
+        try:
+            trainer.save_model(path)
+            size = os.path.getsize(path)
+            tuner = TuningSession(sp, wl, hw=SPECS["tpu_v5e"], seed=1)
+            tuner.load_model(path)
+            res = tuner.tune(budget=budget)
+        finally:
+            os.unlink(path)
+        best = recorded(bench, "tpu_v5e").best_runtime
+        print(_fmt_row(LABEL[bench], (
+            f"{len(sp)}", f"{size/1024:.1f}KB", f"{res.steps}",
+            f"{res.best_runtime / best:.2f}x")))

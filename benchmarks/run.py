@@ -1,5 +1,6 @@
 """Benchmark harness — one section per paper table/figure, plus the
-dry-run roofline table.  Usage:
+dry-run roofline table and a ``session`` section exercising the public
+``repro.tuning`` API (train → save JSON artifact → load → tune).  Usage:
 
     PYTHONPATH=src python -m benchmarks.run [--reps N] [--only table5,...]
 """
@@ -28,6 +29,7 @@ def main() -> None:
         "table8": lambda: T.table8_starchart(max(args.reps // 5, 10)),
         "table9": lambda: T.table9_cross_hw_starchart(max(args.reps // 5, 10)),
         "basin": lambda: T.table_basin_hopping(max(args.reps * 3 // 10, 10)),
+        "session": lambda: T.session_portability_demo(),
         "roofline": _roofline_section,
     }
     wanted = args.only.split(",") if args.only else list(sections)

@@ -2,12 +2,13 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 """§Perf cell C: the paper's profile-based searcher autotunes the
-DISTRIBUTED STEP CONFIG of qwen2.5-3b train_4k on the production mesh.
+DISTRIBUTED STEP CONFIG of qwen2.5-3b train_4k on the production mesh,
+through the public ``repro.tuning`` API.
 
-Training phase: a deliberate sample of the step space is compiled and
-parsed (TP -> PC_ops model).  Autotuning: profile -> bottleneck -> ΔPC ->
-biased step, against REAL compiles.  Compared with random search at the
-same budget.
+Training phase: ``TuningSession.train_on_evaluator`` compiles a deliberate
+sample of the step space and fits the TP -> PC_ops model.  Autotuning:
+profile -> bottleneck -> ΔPC -> biased step, against REAL compiles, driven
+ask-tell.  Compared with random search at the same budget.
 
     PYTHONPATH=src python examples/autotune_train_step.py \
         [--arch qwen2.5-3b] [--budget 10] [--out step_tune.json]
@@ -16,12 +17,8 @@ import argparse      # noqa: E402
 import json          # noqa: E402
 import time          # noqa: E402
 
-import numpy as np   # noqa: E402
-
-from repro.core import (ProfileBasedSearcher, RandomSearcher,  # noqa: E402
-                        deliberate_training_sample)
-from repro.core.model import DecisionTreeModel                 # noqa: E402
-from repro.core.step_tuner import CompiledStepEvaluator        # noqa: E402
+from repro.core.step_tuner import CompiledStepEvaluator  # noqa: E402
+from repro.tuning import TuningSession                   # noqa: E402
 
 
 def main():
@@ -31,6 +28,8 @@ def main():
     ap.add_argument("--budget", type=int, default=10)
     ap.add_argument("--train-samples", type=int, default=14)
     ap.add_argument("--out", default="step_tune.json")
+    ap.add_argument("--save-model", default=None,
+                    help="also write the trained TP->PC model JSON artifact")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -39,29 +38,25 @@ def main():
     print(f"step space: {len(space)} configs")
 
     # --- training phase: deliberate sample -> TP->PC model ---------------
-    sample = deliberate_training_sample(space, values_per_param=2,
-                                        rng=np.random.default_rng(0))
-    sample = sample[:args.train_samples]
-    print(f"training phase: compiling {len(sample)} sampled configs")
-    cfgs, counters = [], []
-    for i in sample:
-        cs = ev_train.profile(i)
-        cfgs.append(space[i])
-        counters.append(cs.ops)
-    model = DecisionTreeModel(space, cfgs, counters)
-    print(f"model trained ({ev_train.compile_seconds:.0f}s of compiles)")
+    session = TuningSession(space, seed=0)
+    print(f"training phase: compiling <= {args.train_samples} sampled configs")
+    session.train_on_evaluator(ev_train, values_per_param=2,
+                               max_samples=args.train_samples)
+    print(f"model trained ({ev_train.compile_seconds:.0f}s of compiles, "
+          f"{ev_train.steps} empirical tests)")
+    if args.save_model:
+        session.save_model(args.save_model)
+        print(f"model artifact -> {args.save_model}")
 
     # --- autotuning: profile-based vs random at the same budget ----------
-    results = {"space": len(space), "train_samples": len(sample),
+    results = {"space": len(space), "train_samples": ev_train.steps,
                "budget": args.budget}
-    for label, searcher_fn in (
-        ("profile", lambda evx: ProfileBasedSearcher(
-            space, model, cores=1, n=3, seed=1)),
-        ("random", lambda evx: RandomSearcher(space, seed=1)),
-    ):
+    for label in ("profile", "random"):
         ev = CompiledStepEvaluator(args.arch, args.shape)
         ev._cache.update(ev_train._cache)  # share compile cache across
-        searcher_fn(ev).search(ev, max_steps=args.budget)
+        extra = {"n": 3} if label == "profile" else {}
+        session.tune(budget=args.budget, searcher=label, evaluator=ev,
+                     seed=1, **extra)
         best = space[ev.best_index]
         print(f"[{label}] best {ev.best_runtime*1e3:.1f}ms after "
               f"{ev.steps} tests: {best}")

@@ -1,13 +1,17 @@
-"""Quickstart: autotune a Pallas GEMM's block sizes with the profile-based
-searcher — model trained on virtual TPU v4, tuning on v5e (the paper's
-hardware-portability headline).
+"""Quickstart: autotune a Pallas GEMM's block sizes through the public
+``repro.tuning`` API — model trained on virtual TPU v4, serialized to JSON,
+then used to tune on v5e (the paper's hardware-portability headline).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import SPECS, autotune
+from repro.core import SPECS
 from repro.kernels.registry import BENCHMARKS
+from repro.tuning import TuningSession
 
 
 def main():
@@ -15,14 +19,19 @@ def main():
     space = bm.make_space()
     workload = lambda cfg: bm.workload_fn(cfg, bm.default_input)
 
-    result = autotune(
-        space, workload,
-        hw=SPECS["tpu_v5e"],          # tuning target
-        train_hw=SPECS["tpu_v4"],     # model trained on DIFFERENT hardware
-        budget=25,
-        model_kind="tree",
-        seed=0,
-    )
+    # Phase 1 — train the portable TP→PC_ops model on DIFFERENT hardware
+    # and ship it as a JSON artifact.
+    trainer = TuningSession(space, workload, hw=SPECS["tpu_v4"], seed=0)
+    trainer.train(kind="tree")
+    artifact = os.path.join(tempfile.gettempdir(), "gemm_tppc_v4.json")
+    trainer.save_model(artifact)
+    print(f"model trained on tpu_v4 -> {artifact} "
+          f"({os.path.getsize(artifact)} bytes)")
+
+    # Phase 2 — load the artifact on the machine of interest and tune.
+    session = TuningSession(space, workload, hw=SPECS["tpu_v5e"], seed=0)
+    session.load_model(artifact)
+    result = session.tune(budget=25)
     print(f"space: {len(space)} configurations")
     print(f"best after {result.steps} empirical tests: "
           f"{result.best_runtime * 1e6:.1f} us")

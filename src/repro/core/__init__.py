@@ -9,18 +9,22 @@ Public API:
     ProfileBasedSearcher (+ baselines)    — Algorithm 1
     autotune / train_model / run_search_experiment
 """
+from repro.core.account import (Candidate, EvalAccount, Evaluator,
+                                Observation, ProfilingUnsupported)
 from repro.core.bottleneck import analyze
 from repro.core.counters import PC_OPS, PC_STRESS, CounterSet
-from repro.core.evaluate import (CostModelEvaluator, RecordedSpace,
-                                 ReplayEvaluator, record_space)
+from repro.core.evaluate import (CostModelEvaluator, FunctionEvaluator,
+                                 RecordedSpace, ReplayEvaluator, record_space)
 from repro.core.hwspec import PORTABILITY_SET, PRODUCTION, SPECS, HardwareSpec
 from repro.core.model import (DecisionTreeModel, ExactCounterModel,
                               QuadraticRegressionModel,
                               deliberate_training_sample)
 from repro.core.reaction import compute_delta_pc
-from repro.core.searcher import (BasinHoppingSearcher, ProfileBasedSearcher,
-                                 ProfileLocalSearcher, RandomSearcher,
-                                 StarchartSearcher)
+from repro.core.searcher import (SEARCHERS, BasinHoppingSearcher,
+                                 ProfileBasedSearcher, ProfileLocalSearcher,
+                                 RandomSearcher, Searcher, StarchartSearcher,
+                                 make_searcher, register_searcher,
+                                 resolve_searcher, run_search)
 from repro.core.tuner import (SearchStats, TuneResult, autotune,
                               convergence_curve, run_search_experiment,
                               steps_to_well_performing, train_model,
@@ -30,14 +34,17 @@ from repro.core.tuning_space import (Config, TuningParameter, TuningSpace,
 
 __all__ = [
     "analyze", "autotune", "compute_delta_pc", "convergence_curve",
-    "record_space", "run_search_experiment", "steps_to_well_performing",
+    "make_searcher", "record_space", "register_searcher", "resolve_searcher",
+    "run_search",
+    "run_search_experiment", "steps_to_well_performing",
     "train_model", "train_model_deliberate", "deliberate_training_sample",
     "powers_of_two",
-    "BasinHoppingSearcher", "Config", "CostModelEvaluator", "CounterSet",
-    "DecisionTreeModel", "ExactCounterModel", "HardwareSpec", "PC_OPS",
-    "PC_STRESS", "PORTABILITY_SET", "PRODUCTION", "ProfileBasedSearcher",
-    "ProfileLocalSearcher", "QuadraticRegressionModel",
-    "RandomSearcher", "RecordedSpace",
-    "ReplayEvaluator", "SPECS", "SearchStats", "StarchartSearcher",
-    "TuneResult", "TuningParameter", "TuningSpace",
+    "BasinHoppingSearcher", "Candidate", "Config", "CostModelEvaluator",
+    "CounterSet", "DecisionTreeModel", "EvalAccount", "Evaluator",
+    "ExactCounterModel", "FunctionEvaluator", "HardwareSpec", "Observation",
+    "PC_OPS", "PC_STRESS", "PORTABILITY_SET", "PRODUCTION",
+    "ProfileBasedSearcher", "ProfileLocalSearcher", "ProfilingUnsupported",
+    "QuadraticRegressionModel", "RandomSearcher", "RecordedSpace",
+    "ReplayEvaluator", "SEARCHERS", "SearchStats", "Searcher",
+    "StarchartSearcher", "TuneResult", "TuningParameter", "TuningSpace",
 ]

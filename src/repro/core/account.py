@@ -1,0 +1,166 @@
+"""Shared evaluator protocol: the ask-tell side of empirical testing.
+
+Every evaluator in the system — replayed records (``ReplayEvaluator``), the
+virtual-TPU cost model (``CostModelEvaluator``), real compiles
+(``step_tuner.CompiledStepEvaluator``) and timed callables
+(``FunctionEvaluator``) — answers the same three questions:
+
+  * ``measure(idx)``       — empirical test, runtime only (fast path);
+  * ``profile(idx)``       — empirical test with performance counters
+                             (slow path; optional — counter-less evaluators
+                             raise ``ProfilingUnsupported``);
+  * ``measure_many(batch)`` — evaluate a batch of ``Candidate``s, returning
+                             ``Observation``s (the hook for async/parallel
+                             tuning backends).
+
+Accounting — steps, simulated wall-clock, per-step trace, best-so-far — is
+the paper's primary metric and must be identical across evaluators, so it
+lives in one place: ``EvalAccount``.  Searchers and the experiment harness
+read it through public accessors (``steps``, ``trace``, ``history()``) and
+never through evaluator internals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Set, Tuple, Union
+
+from repro.core.counters import CounterSet
+from repro.core.tuning_space import TuningSpace
+
+
+class ProfilingUnsupported(RuntimeError):
+    """Raised by evaluators that cannot collect performance counters."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One proposed empirical test: which config, and whether to profile."""
+
+    index: int
+    profile: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Observation:
+    """Result of one empirical test, as delivered back to a searcher."""
+
+    index: int
+    runtime: float
+    counters: Optional[CounterSet] = None   # present iff the test was profiled
+    step: int = 0                           # evaluator step count after this test
+    elapsed: float = 0.0                    # simulated tuning wall-clock so far
+
+
+class EvalAccount:
+    """Steps / elapsed / trace / best bookkeeping shared by all evaluators.
+
+    ``trace`` is the paper's convergence record: (steps, elapsed, runtime)
+    per empirical test.  ``history`` is the per-test (index, runtime) log in
+    measurement order — the public replacement for peeking at private caches.
+    """
+
+    def __init__(self) -> None:
+        self.steps: int = 0
+        self.elapsed: float = 0.0
+        self.trace: List[Tuple[int, float, float]] = []
+        self.history: List[Tuple[int, float]] = []
+        self.evaluated: Set[int] = set()
+        self.best_runtime: float = float("inf")
+        self.best_index: Optional[int] = None
+
+    def record(self, idx: int, runtime: float, cost: float) -> None:
+        self.steps += 1
+        self.elapsed += cost
+        self.evaluated.add(idx)
+        if runtime < self.best_runtime:
+            self.best_runtime = runtime
+            self.best_index = idx
+        self.trace.append((self.steps, self.elapsed, runtime))
+        self.history.append((idx, runtime))
+
+
+class Evaluator:
+    """Base class implementing the shared protocol over one ``_evaluate``.
+
+    Subclasses implement ``_evaluate(idx, profiled) -> (runtime, counters,
+    cost)`` where ``cost`` is the simulated (or real) wall-clock charged to
+    this empirical test and ``counters`` may be None for unprofiled tests.
+    """
+
+    def __init__(self, space: TuningSpace):
+        self.space = space
+        self.account = EvalAccount()
+
+    # -- accounting accessors (read-only views over the account) ---------------
+    @property
+    def steps(self) -> int:
+        return self.account.steps
+
+    @property
+    def elapsed(self) -> float:
+        return self.account.elapsed
+
+    @property
+    def trace(self) -> List[Tuple[int, float, float]]:
+        return self.account.trace
+
+    @property
+    def evaluated(self) -> Set[int]:
+        return self.account.evaluated
+
+    @property
+    def best_runtime(self) -> float:
+        return self.account.best_runtime
+
+    @property
+    def best_index(self) -> Optional[int]:
+        return self.account.best_index
+
+    def history(self) -> List[Tuple[int, float]]:
+        """Per-test (config index, runtime) in measurement order."""
+        return list(self.account.history)
+
+    def __len__(self) -> int:
+        return len(self.space)
+
+    def exhausted(self) -> bool:
+        return len(self.account.evaluated) >= len(self.space)
+
+    # -- the protocol ----------------------------------------------------------
+    def _evaluate(
+        self, idx: int, profiled: bool
+    ) -> Tuple[float, Optional[CounterSet], float]:
+        raise NotImplementedError
+
+    def measure(self, idx: int) -> float:
+        """Empirical test without counter collection (fast)."""
+        rt, _, cost = self._evaluate(int(idx), False)
+        self.account.record(int(idx), rt, cost)
+        return rt
+
+    def profile(self, idx: int) -> CounterSet:
+        """Empirical test with counter collection (slow: multi-pass replay)."""
+        rt, cs, cost = self._evaluate(int(idx), True)
+        if cs is None:
+            raise ProfilingUnsupported(
+                f"{type(self).__name__} cannot collect performance counters")
+        self.account.record(int(idx), rt, cost)
+        return cs
+
+    def measure_many(
+        self, candidates: Sequence[Union[Candidate, int]]
+    ) -> List[Observation]:
+        """Evaluate a candidate batch; the extension point for parallelism."""
+        out: List[Observation] = []
+        for c in candidates:
+            if not isinstance(c, Candidate):
+                c = Candidate(int(c))
+            if c.profile:
+                cs = self.profile(c.index)
+                rt = cs.runtime
+            else:
+                rt = self.measure(c.index)
+                cs = None
+            out.append(Observation(index=c.index, runtime=rt, counters=cs,
+                                   step=self.steps, elapsed=self.elapsed))
+        return out

@@ -7,15 +7,22 @@ steps and simulated wall-clock (profiled runs are slower — §4.6).
 
 ``CostModelEvaluator`` produces records from a kernel workload model
 (g: TP × I → PC_ops) executed on a virtual TPU (f: ... × GPU → runtime).
+``FunctionEvaluator`` adapts any ``cfg -> seconds`` callable (runtime-only —
+no counters, so only counter-free searchers can drive it).
+
+All evaluators implement the shared ``repro.core.account.Evaluator``
+protocol: ``measure`` / ``profile`` / ``measure_many`` plus the uniform
+``EvalAccount`` bookkeeping (steps, elapsed, trace, history, best).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import costmodel
+from repro.core.account import Evaluator
 from repro.core.counters import CounterSet
 from repro.core.hwspec import HardwareSpec
 from repro.core.tuning_space import Config, TuningSpace
@@ -67,7 +74,7 @@ def record_space(
                          hw=hw, input_tag=input_tag)
 
 
-class ReplayEvaluator:
+class ReplayEvaluator(Evaluator):
     """Serves a RecordedSpace to a searcher; accounts steps and time.
 
     ``steps``  — number of empirical tests (paper's primary metric)
@@ -76,48 +83,20 @@ class ReplayEvaluator:
     """
 
     def __init__(self, recorded: RecordedSpace):
+        super().__init__(recorded.space)
         self.recorded = recorded
-        self.steps = 0
-        self.elapsed = 0.0
-        self.trace: List[Tuple[int, float, float]] = []
-        self.evaluated: set = set()
-        self.best_runtime = float("inf")
-        self.best_index: Optional[int] = None
 
-    def __len__(self) -> int:
-        return len(self.recorded.space)
-
-    @property
-    def space(self) -> TuningSpace:
-        return self.recorded.space
-
-    def _account(self, idx: int, cost: float) -> float:
+    def _evaluate(
+        self, idx: int, profiled: bool
+    ) -> Tuple[float, Optional[CounterSet], float]:
         rt = float(self.recorded.runtimes[idx])
-        self.steps += 1
-        self.elapsed += cost
-        self.evaluated.add(idx)
-        if rt < self.best_runtime:
-            self.best_runtime = rt
-            self.best_index = idx
-        self.trace.append((self.steps, self.elapsed, rt))
-        return rt
-
-    def measure(self, idx: int) -> float:
-        """Empirical test without counter collection (fast)."""
-        rt = float(self.recorded.runtimes[idx])
-        return self._account(idx, rt + TEST_OVERHEAD)
-
-    def profile(self, idx: int) -> CounterSet:
-        """Empirical test with counter collection (slow: multi-pass replay)."""
-        rt = float(self.recorded.runtimes[idx])
-        self._account(idx, rt * PROFILE_SLOWDOWN + TEST_OVERHEAD + PROFILE_FIXED)
-        return self.recorded.counters[idx]
-
-    def exhausted(self) -> bool:
-        return len(self.evaluated) >= len(self.recorded.space)
+        if profiled:
+            cost = rt * PROFILE_SLOWDOWN + TEST_OVERHEAD + PROFILE_FIXED
+            return rt, self.recorded.counters[idx], cost
+        return rt, None, rt + TEST_OVERHEAD
 
 
-class CostModelEvaluator:
+class CostModelEvaluator(Evaluator):
     """Live evaluator: workload model + virtual hardware (no record needed)."""
 
     def __init__(
@@ -126,36 +105,47 @@ class CostModelEvaluator:
         workload_fn: Callable[[Config], Dict[str, float]],
         hw: HardwareSpec,
     ):
-        self.space = space
+        super().__init__(space)
         self.workload_fn = workload_fn
         self.hw = hw
-        self.steps = 0
-        self.evaluated: set = set()
-        self.best_runtime = float("inf")
-        self.best_index: Optional[int] = None
         self._cache: Dict[int, CounterSet] = {}
 
-    def __len__(self) -> int:
-        return len(self.space)
-
-    def _eval(self, idx: int) -> CounterSet:
+    def _counters_for(self, idx: int) -> CounterSet:
         if idx not in self._cache:
             self._cache[idx] = costmodel.execute(
                 self.workload_fn(self.space[idx]), self.hw
             )
-        cs = self._cache[idx]
-        self.steps += 1
-        self.evaluated.add(idx)
-        if cs.runtime < self.best_runtime:
-            self.best_runtime = cs.runtime
-            self.best_index = idx
-        return cs
+        return self._cache[idx]
 
-    def measure(self, idx: int) -> float:
-        return self._eval(idx).runtime
+    def _evaluate(
+        self, idx: int, profiled: bool
+    ) -> Tuple[float, Optional[CounterSet], float]:
+        cs = self._counters_for(idx)
+        rt = float(cs.runtime)
+        if profiled:
+            cost = rt * PROFILE_SLOWDOWN + TEST_OVERHEAD + PROFILE_FIXED
+            return rt, cs, cost
+        return rt, None, rt + TEST_OVERHEAD
 
-    def profile(self, idx: int) -> CounterSet:
-        return self._eval(idx)
 
-    def exhausted(self) -> bool:
-        return len(self.evaluated) >= len(self.space)
+class FunctionEvaluator(Evaluator):
+    """Adapts a plain ``cfg -> runtime_seconds`` callable to the protocol.
+
+    Used to tune things with no counter story (e.g. serving batch sizes):
+    ``profile`` raises ``ProfilingUnsupported``, so drive it with
+    counter-free searchers (random, basin hopping, starchart).
+    """
+
+    def __init__(self, space: TuningSpace,
+                 fn: Callable[[Config], float]):
+        super().__init__(space)
+        self.fn = fn
+        self._cache: Dict[int, float] = {}
+
+    def _evaluate(
+        self, idx: int, profiled: bool
+    ) -> Tuple[float, Optional[CounterSet], float]:
+        if idx not in self._cache:
+            self._cache[idx] = float(self.fn(self.space[idx]))
+        rt = self._cache[idx]
+        return rt, None, rt

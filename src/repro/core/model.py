@@ -152,6 +152,18 @@ class DecisionTreeModel(TPPCModel):
             for name, tree in self.trees.items()
         }
 
+    @classmethod
+    def from_state(
+        cls, space: TuningSpace, trees: Dict[str, _Node],
+        scale: Dict[str, float],
+    ) -> "DecisionTreeModel":
+        """Rebuild a trained model from serialized state (no re-training)."""
+        obj = cls.__new__(cls)
+        obj.space = space
+        obj.trees = trees
+        obj.scale = scale
+        return obj
+
 
 # =============================================================================
 # Least-squares quadratic regression per binary subspace (§3.4.1)
@@ -219,6 +231,23 @@ class QuadraticRegressionModel(TPPCModel):
             for name, coef in self.coefs[key].items()
         }
 
+    @classmethod
+    def from_state(
+        cls,
+        space: TuningSpace,
+        counter_names: Sequence[str],
+        coefs: Dict[Tuple, Dict[str, np.ndarray]],
+        fallback: Dict[str, float],
+    ) -> "QuadraticRegressionModel":
+        """Rebuild a trained model from serialized state (no re-fitting)."""
+        obj = cls.__new__(cls)
+        obj.space = space
+        obj.counter_names = tuple(counter_names)
+        obj._nb_names = [p.name for p in space.nonbinary_parameters]
+        obj.coefs = coefs
+        obj._fallback = dict(fallback)
+        return obj
+
 
 # =============================================================================
 # Exact "model": reads recorded counters (paper §4.3 — eliminates model error)
@@ -229,12 +258,31 @@ class ExactCounterModel(TPPCModel):
     def __init__(self, space: TuningSpace, counters: Sequence[Dict[str, float]]):
         self.space = space
         self._by_index = [dict(cs) for cs in counters]
+        self._index: Optional[Dict[Tuple, int]] = None
 
     def predict(self, cfg: Dict) -> Dict[str, float]:
+        if self._index is not None:
+            return self._by_index[self._index[tuple(sorted(cfg.items()))]]
         return self._by_index[self.space.index_of(cfg)]
 
     def predict_index(self, idx: int) -> Dict[str, float]:
+        if self._index is not None:
+            # from_pairs remap: the bound space may enumerate configs in a
+            # different order than the serialized counters list
+            return self.predict(self.space[idx])
         return self._by_index[idx]
+
+    @classmethod
+    def from_pairs(
+        cls, space: TuningSpace, configs: Sequence[Dict],
+        counters: Sequence[Dict[str, float]],
+    ) -> "ExactCounterModel":
+        """Rebuild from explicit (config, counters) pairs — robust to the
+        deserialized space enumerating configs in a different order."""
+        obj = cls(space, counters)
+        obj._index = {tuple(sorted(c.items())): i
+                      for i, c in enumerate(configs)}
+        return obj
 
 
 def deliberate_training_sample(

@@ -1,4 +1,4 @@
-"""Tuning-space searchers.
+"""Tuning-space searchers in ask-tell form.
 
 * ``ProfileBasedSearcher`` — the paper's contribution (Algorithm 1): biased
   weighted-random search navigated by performance counters, a portable
@@ -8,43 +8,189 @@
   (paper §4.7 comparison target).
 * ``StarchartSearcher`` — recursive-partitioning surrogate model search
   (paper §4.8 comparison target).
+* ``ProfileLocalSearcher`` — beyond-paper §3.9.1 gradient-following variant.
 
-All searchers drive an evaluator (``measure``/``profile``) so empirical tests
-are counted identically — the paper's primary metric.
+Every searcher exposes the same two-call interface:
+
+    propose(k)            -> up to k ``Candidate``s to test next
+    observe(observations) -> feed back the ``Observation``s for them
+
+which makes Algorithm 1 resumable and inspectable mid-search, lets a driver
+batch empirical tests (``Evaluator.measure_many``), and removes every
+special case from ``autotune``/benchmark call sites.  The legacy
+``search(ev, max_steps)`` entry point remains as a thin shim over
+``run_search``.
+
+Internally each searcher writes its strategy as a plain generator
+(``_plan``) that yields candidate batches and receives observation batches —
+sequential algorithms (basin hopping's first-improvement descent) read
+naturally while the base class handles the ask-tell bookkeeping.
+
+Constructors are uniform: ``Searcher(space, seed=..., **strategy_kwargs)``,
+and every concrete class registers itself in the string-keyed ``SEARCHERS``
+registry (``repro.tuning`` re-exports it):
+
+    SEARCHERS["profile"](space, seed=3, model=m, cores=2)
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Iterator, List, Optional, Sequence, Type
 
 import numpy as np
 
 from repro.core import bottleneck, reaction, scoring
+from repro.core.account import Candidate, Observation
 from repro.core.model import TPPCModel, _build_tree, _tree_predict
 from repro.core.tuning_space import TuningSpace
 
+# String-keyed registry of all searcher classes (the public lookup table).
+SEARCHERS: Dict[str, Type["Searcher"]] = {}
+
+
+def register_searcher(name: str):
+    """Class decorator: register under ``name`` and set ``cls.name``."""
+
+    def deco(cls: Type["Searcher"]) -> Type["Searcher"]:
+        cls.name = name
+        SEARCHERS[name] = cls
+        return cls
+
+    return deco
+
 
 class Searcher:
+    """Ask-tell base: plumbing between ``propose``/``observe`` and ``_plan``.
+
+    ``_plan`` is a generator yielding non-empty candidate batches; each
+    ``yield`` receives the list of ``Observation``s for exactly the
+    candidates it yielded (in order).  A batch may be drained across several
+    ``propose`` calls; the generator resumes only once the whole batch has
+    been observed, so budget-truncated runs simply leave it suspended.
+    """
+
     name = "base"
-
-    def search(self, ev, max_steps: int) -> None:
-        raise NotImplementedError
-
-
-class RandomSearcher(Searcher):
-    """Uniform random search without replacement."""
-
-    name = "random"
 
     def __init__(self, space: TuningSpace, seed: int = 0):
         self.space = space
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
+        self._gen: Optional[Iterator] = None
+        self._queue: List[Candidate] = []   # current batch, not yet proposed
+        self._outstanding = 0               # proposed, not yet observed
+        self._obs: List[Observation] = []   # observed, not yet sent to _plan
+        self._finished = False
 
+    # -- strategy (implemented by subclasses) ----------------------------------
+    def _plan(self):
+        raise NotImplementedError
+
+    # -- ask-tell --------------------------------------------------------------
+    def propose(self, k: int) -> List[Candidate]:
+        """Return up to ``k`` candidates to evaluate next ([] when done)."""
+        if k <= 0:
+            return []
+        while not self._queue and not self._finished:
+            if self._outstanding:
+                return []   # waiting on observations for the current batch
+            self._advance()
+        return self._take(k)
+
+    def observe(self, observations: Sequence[Observation]) -> None:
+        """Feed back results for previously proposed candidates (in order)."""
+        for o in observations:
+            self._obs.append(o)
+            self._outstanding -= 1
+        if self._outstanding < 0:
+            raise RuntimeError("observe() got results never proposed")
+
+    @property
+    def done(self) -> bool:
+        """True once the strategy has no further candidates to offer."""
+        return self._finished and not self._queue
+
+    def _take(self, k: int) -> List[Candidate]:
+        out, self._queue = self._queue[:k], self._queue[k:]
+        self._outstanding += len(out)
+        return out
+
+    def _advance(self) -> None:
+        """Resume the plan generator with the completed observation batch."""
+        try:
+            if self._gen is None:
+                self._gen = self._plan()
+                batch = next(self._gen)
+            else:
+                sent, self._obs = self._obs, []
+                batch = self._gen.send(sent)
+        except StopIteration:
+            self._finished = True
+            return
+        self._queue = [c if isinstance(c, Candidate) else Candidate(int(c))
+                       for c in batch]
+
+    # -- legacy entry point ----------------------------------------------------
     def search(self, ev, max_steps: int) -> None:
+        """Drive ``ev`` until the budget or the strategy is exhausted."""
+        run_search(self, ev, max_steps)
+
+
+def run_search(searcher: Searcher, ev, max_steps: int) -> None:
+    """The uniform ask-tell driver loop used by every call site.
+
+    ``max_steps`` is relative to the evaluator's state on entry, so an
+    evaluator that already spent steps (e.g. on a training phase) still gets
+    a full search budget.
+    """
+    start = ev.steps
+    while ev.steps - start < max_steps and not ev.exhausted():
+        cands = searcher.propose(max_steps - (ev.steps - start))
+        if not cands:
+            return
+        searcher.observe(ev.measure_many(cands))
+
+
+def resolve_searcher(searcher) -> Type[Searcher]:
+    """Registry name (or class) -> searcher class."""
+    if isinstance(searcher, str):
+        if searcher not in SEARCHERS:
+            raise KeyError(
+                f"unknown searcher {searcher!r}; "
+                f"registered: {sorted(SEARCHERS)}")
+        return SEARCHERS[searcher]
+    return searcher
+
+
+def make_searcher(searcher, space: TuningSpace, seed: int = 0,
+                  **context) -> Searcher:
+    """Construct a searcher by registry name (or class), passing only the
+    ``context`` kwargs its constructor accepts — so one call site can supply
+    model/cores/... without special-casing which searcher wants what.
+
+    The filtering is for shared context; explicit user options should be
+    validated by the caller against ``resolve_searcher(...)``'s signature
+    (``TuningSession.make_searcher`` does) so typos don't silently vanish.
+    """
+    import inspect
+
+    cls = resolve_searcher(searcher)
+    params = inspect.signature(cls.__init__).parameters
+    accepted = {k: v for k, v in context.items() if k in params}
+    return cls(space, seed=seed, **accepted)
+
+
+@register_searcher("random")
+class RandomSearcher(Searcher):
+    """Uniform random search without replacement."""
+
+    def __init__(self, space: TuningSpace, seed: int = 0):
+        super().__init__(space, seed)
+
+    def _plan(self):
         order = self.rng.permutation(len(self.space))
-        for idx in order[:max_steps]:
-            ev.measure(int(idx))
+        yield [Candidate(int(i)) for i in order]
 
 
+@register_searcher("profile")
 class ProfileBasedSearcher(Searcher):
     """Algorithm 1: profile, detect bottlenecks, react, score, biased step.
 
@@ -52,29 +198,28 @@ class ProfileBasedSearcher(Searcher):
     ----------
     model : TPPCModel — portable TP→PC_ops model (may come from a different
         GPU/input — §3.1/§4.4/§4.5 — or be an ExactCounterModel for §4.3).
+        May be bound after construction (``searcher.model = m``) but must be
+        set before the first ``propose``.
     cores : TensorCore count of the *autotuning* hardware (bottleneck analysis
         runs on the architecture being tuned — §3.3).
     n : un-profiled benchmark runs between profiled runs (default 5, §3.7).
     inst_reaction : instruction-bottleneck threshold (0.7 default, §3.5.2).
     """
 
-    name = "profile"
-
     def __init__(
         self,
         space: TuningSpace,
-        model: TPPCModel,
-        cores: int,
+        model: Optional[TPPCModel] = None,
+        cores: Optional[int] = None,
         n: int = 5,
         inst_reaction: float = reaction.INST_REACTION_DEFAULT,
         seed: int = 0,
     ):
-        self.space = space
+        super().__init__(space, seed)
         self.model = model
         self.cores = cores
         self.n = n
         self.inst_reaction = inst_reaction
-        self.rng = np.random.default_rng(seed)
         # model predictions are config-indexed and reused across iterations
         self._pred_cache: Dict[int, Dict[str, float]] = {}
 
@@ -83,13 +228,31 @@ class ProfileBasedSearcher(Searcher):
             self._pred_cache[idx] = self.model.predict(self.space[idx])
         return self._pred_cache[idx]
 
-    def search(self, ev, max_steps: int) -> None:
+    def _check_bound(self) -> None:
+        """model and cores may be bound after construction (the registry's
+        uniform signature) but must be set before searching — a silent
+        default would mis-analyze bottlenecks, not error."""
+        if self.model is None:
+            raise ValueError(
+                f"{type(self).__name__} needs a TP→PC model: pass model= at "
+                "construction or assign searcher.model before searching")
+        if self.cores is None:
+            raise ValueError(
+                f"{type(self).__name__} needs the tuning hardware's core "
+                "count: pass cores= at construction or assign "
+                "searcher.cores before searching")
+
+    def _plan(self):
+        self._check_bound()
         size = len(self.space)
+        evaluated: set = set()
         c_profile = int(self.rng.integers(size))
-        while ev.steps < max_steps and not ev.exhausted():
+        while True:
             # line 3: empirical measurement with performance counters
-            pc = ev.profile(c_profile)
+            obs = yield [Candidate(c_profile, profile=True)]
+            pc = obs[0].counters
             t = pc.runtime
+            evaluated.add(c_profile)
             # line 4: bottleneck analysis (on the autotuning architecture)
             b = bottleneck.analyze(pc, cores=self.cores)
             # line 5: required counter changes
@@ -99,7 +262,7 @@ class ProfileBasedSearcher(Searcher):
             raw = np.zeros(size)
             mask = np.zeros(size, dtype=bool)
             for k in range(size):
-                if k in ev.evaluated:
+                if k in evaluated:
                     continue
                 mask[k] = True
                 raw[k] = scoring.score_configuration(
@@ -109,18 +272,21 @@ class ProfileBasedSearcher(Searcher):
                 return
             weights = scoring.normalize_scores(raw)
             # lines 16-25: n biased un-profiled steps
+            picks: List[Candidate] = []
             for _ in range(self.n):
-                if ev.steps >= max_steps or not mask.any():
+                if not mask.any():
                     break
                 sel = scoring.weighted_choice(weights, self.rng, mask)
-                t_new = ev.measure(sel)
                 mask[sel] = False
-                if t_new <= t:
-                    c_profile, t = sel, t_new
-            if ev.exhausted():
-                return
+                picks.append(Candidate(int(sel)))
+            obs = yield picks
+            for o in obs:
+                evaluated.add(o.index)
+                if o.runtime <= t:
+                    c_profile, t = o.index, o.runtime
 
 
+@register_searcher("basin_hopping")
 class BasinHoppingSearcher(Searcher):
     """Kernel-Tuner-inspired Basin Hopping: greedy local descent over
     1-parameter neighbourhoods + random perturbation hops with Metropolis
@@ -128,11 +294,9 @@ class BasinHoppingSearcher(Searcher):
     encoding; this is the discrete equivalent used for §4.7.)
     """
 
-    name = "basin_hopping"
-
-    def __init__(self, space: TuningSpace, seed: int = 0, temperature: float = 1.0):
-        self.space = space
-        self.rng = np.random.default_rng(seed)
+    def __init__(self, space: TuningSpace, seed: int = 0,
+                 temperature: float = 1.0):
+        super().__init__(space, seed)
         self.temperature = temperature
         # neighbour lists are O(N^2) to build; cache lazily per index
         self._nbrs: Dict[int, list] = {}
@@ -143,23 +307,24 @@ class BasinHoppingSearcher(Searcher):
             self._nbrs[idx] = self.space.neighbours(idx)
         return self._nbrs[idx]
 
-    def _measure(self, ev, idx: int) -> float:
+    def _measure_g(self, idx: int):
+        """Sub-plan: measure ``idx`` once, replaying cached runtimes."""
         if idx not in self._known:
-            self._known[idx] = ev.measure(idx)
+            obs = yield [Candidate(int(idx))]
+            self._known[idx] = obs[0].runtime
         return self._known[idx]
 
-    def _local_descent(self, ev, start: int, max_steps: int) -> tuple:
+    def _descent_g(self, start: int):
+        """Sub-plan: first-improvement greedy descent from ``start``."""
         cur = start
-        cur_t = self._measure(ev, cur)
+        cur_t = yield from self._measure_g(cur)
         improved = True
-        while improved and ev.steps < max_steps:
+        while improved:
             improved = False
-            nbrs = [n for n in self._neighbours(cur) if n not in ev.evaluated]
+            nbrs = [n for n in self._neighbours(cur) if n not in self._known]
             self.rng.shuffle(nbrs)
             for nb in nbrs:
-                if ev.steps >= max_steps:
-                    break
-                t = self._measure(ev, nb)
+                t = yield from self._measure_g(nb)
                 if t < cur_t:
                     cur, cur_t = nb, t
                     improved = True
@@ -179,18 +344,18 @@ class BasinHoppingSearcher(Searcher):
         except KeyError:  # violated a constraint — random fallback
             return int(self.rng.integers(len(self.space)))
 
-    def search(self, ev, max_steps: int) -> None:
+    def _plan(self):
         cur = int(self.rng.integers(len(self.space)))
-        cur, cur_t = self._local_descent(ev, cur, max_steps)
-        while ev.steps < max_steps and not ev.exhausted():
+        cur, cur_t = yield from self._descent_g(cur)
+        while True:
             cand = self._perturb(cur)
-            if cand in ev.evaluated:
+            if cand in self._known:
                 unexplored = [i for i in range(len(self.space))
-                              if i not in ev.evaluated]
+                              if i not in self._known]
                 if not unexplored:
                     return
                 cand = int(self.rng.choice(unexplored))
-            cand, cand_t = self._local_descent(ev, cand, max_steps)
+            cand, cand_t = yield from self._descent_g(cand)
             # Metropolis acceptance on the hop
             if cand_t < cur_t or self.rng.random() < np.exp(
                 -(cand_t - cur_t) / (self.temperature * max(cur_t, 1e-12))
@@ -198,6 +363,7 @@ class BasinHoppingSearcher(Searcher):
                 cur, cur_t = cand, cand_t
 
 
+@register_searcher("starchart")
 class StarchartSearcher(Searcher):
     """Starchart protocol (§4.8.1): train a runtime regression tree from
     random samples until median relative prediction error < 15% (or 200
@@ -207,8 +373,6 @@ class StarchartSearcher(Searcher):
     counted (the paper's "model build" column includes them).
     """
 
-    name = "starchart"
-
     def __init__(
         self,
         space: TuningSpace,
@@ -217,34 +381,44 @@ class StarchartSearcher(Searcher):
         max_train: int = 200,
         target_med_err: float = 0.15,
     ):
-        self.space = space
-        self.rng = np.random.default_rng(seed)
+        super().__init__(space, seed)
         self.n_validation = n_validation
         self.max_train = max_train
         self.target_med_err = target_med_err
         self.model_build_steps = 0
+        self._building = True
 
-    def search(self, ev, max_steps: int) -> None:
+    def observe(self, observations) -> None:
+        # every empirical test up to the end of model building counts as a
+        # build step (the paper's "model build" column), even when the
+        # budget truncates the build mid-batch
+        super().observe(observations)
+        if self._building:
+            self.model_build_steps += len(observations)
+
+    def _plan(self):
         size = len(self.space)
         X = np.array([self.space.vectorize(c) for c in self.space])
         order = self.rng.permutation(size)
         n_val = min(self.n_validation, max(1, size // 4))
         val_idx = order[:n_val]
         pool = order[n_val:]
-        y_val = np.array([ev.measure(int(i)) for i in val_idx])
+        obs = yield [Candidate(int(i)) for i in val_idx]
+        y_val = np.array([o.runtime for o in obs])
 
         train_idx: list = []
         y_train: list = []
         tree = None
         batch = 20
-        while ev.steps < max_steps and len(train_idx) < min(self.max_train,
-                                                            len(pool)):
+        cap = min(self.max_train, len(pool))
+        while len(train_idx) < cap:
             take = pool[len(train_idx): len(train_idx) + batch]
             if take.size == 0:
                 break
-            for i in take:
-                train_idx.append(int(i))
-                y_train.append(ev.measure(int(i)))
+            obs = yield [Candidate(int(i)) for i in take]
+            for o in obs:
+                train_idx.append(o.index)
+                y_train.append(o.runtime)
             tree = _build_tree(
                 X[np.array(train_idx)], np.asarray(y_train), 0, 12, 1
             )
@@ -252,19 +426,19 @@ class StarchartSearcher(Searcher):
             rel_err = np.abs(pred - y_val) / np.maximum(y_val, 1e-12)
             if float(np.median(rel_err)) < self.target_med_err:
                 break
-        self.model_build_steps = ev.steps
+        self._building = False
         if tree is None:
             return
         # prediction-ordered walk over the unexplored space
+        explored = set(int(i) for i in val_idx) | set(train_idx)
         pred_all = np.array([_tree_predict(tree, x) for x in X])
-        for idx in np.argsort(pred_all):
-            if ev.steps >= max_steps:
-                return
-            if int(idx) in ev.evaluated:
-                continue
-            ev.measure(int(idx))
+        walk = [Candidate(int(i)) for i in np.argsort(pred_all)
+                if int(i) not in explored]
+        if walk:
+            yield walk
 
 
+@register_searcher("profile_local")
 class ProfileLocalSearcher(Searcher):
     """Beyond-paper extension (paper §3.9.1 future work): use the score as a
     GRADIENT ESTIMATE for a local searcher, combined with the global biased
@@ -279,27 +453,26 @@ class ProfileLocalSearcher(Searcher):
     probes.
     """
 
-    name = "profile_local"
-
     def __init__(
         self,
         space: TuningSpace,
-        model: TPPCModel,
-        cores: int,
+        model: Optional[TPPCModel] = None,
+        cores: Optional[int] = None,
         n: int = 5,
         local_frac: float = 0.6,
         inst_reaction: float = reaction.INST_REACTION_DEFAULT,
         seed: int = 0,
     ):
-        self.space = space
+        super().__init__(space, seed)
         self.model = model
         self.cores = cores
         self.n = n
         self.local_frac = local_frac
         self.inst_reaction = inst_reaction
-        self.rng = np.random.default_rng(seed)
         self._pred_cache: Dict[int, Dict[str, float]] = {}
         self._nbrs: Dict[int, list] = {}
+
+    _check_bound = ProfileBasedSearcher._check_bound
 
     def _predict(self, idx: int) -> Dict[str, float]:
         if idx not in self._pred_cache:
@@ -311,12 +484,16 @@ class ProfileLocalSearcher(Searcher):
             self._nbrs[idx] = self.space.neighbours(idx)
         return self._nbrs[idx]
 
-    def search(self, ev, max_steps: int) -> None:
+    def _plan(self):
+        self._check_bound()
         size = len(self.space)
+        evaluated: set = set()
         c_profile = int(self.rng.integers(size))
-        while ev.steps < max_steps and not ev.exhausted():
-            pc = ev.profile(c_profile)
+        while True:
+            obs = yield [Candidate(c_profile, profile=True)]
+            pc = obs[0].counters
             t = pc.runtime
+            evaluated.add(c_profile)
             b = bottleneck.analyze(pc, cores=self.cores)
             delta_pc = reaction.compute_delta_pc(b, self.inst_reaction)
             pc_prof = self._predict(c_profile)
@@ -324,7 +501,7 @@ class ProfileLocalSearcher(Searcher):
             raw = np.zeros(size)
             mask = np.zeros(size, dtype=bool)
             for k in range(size):
-                if k in ev.evaluated:
+                if k in evaluated:
                     continue
                 mask[k] = True
                 raw[k] = scoring.score_configuration(
@@ -336,23 +513,28 @@ class ProfileLocalSearcher(Searcher):
             n_local = int(round(self.n * self.local_frac))
             # local phase: best-scoring unexplored neighbours (gradient step)
             nbrs = [j for j in self._neighbours(c_profile)
-                    if j not in ev.evaluated]
+                    if j not in evaluated]
             nbrs.sort(key=lambda j: raw[j], reverse=True)
-            for j in nbrs[:n_local]:
-                if ev.steps >= max_steps:
-                    return
-                t_new = ev.measure(j)
+            local = nbrs[:n_local]
+            for j in local:
                 mask[j] = False
-                if t_new <= t:
-                    c_profile, t = j, t_new
+            if local:
+                obs = yield [Candidate(int(j)) for j in local]
+                for o in obs:
+                    evaluated.add(o.index)
+                    if o.runtime <= t:
+                        c_profile, t = o.index, o.runtime
             # global phase: score-biased sampling (escape hatch)
+            picks: List[Candidate] = []
             for _ in range(self.n - min(n_local, len(nbrs))):
-                if ev.steps >= max_steps or not mask.any():
+                if not mask.any():
                     break
                 sel = scoring.weighted_choice(weights, self.rng, mask)
-                t_new = ev.measure(sel)
                 mask[sel] = False
-                if t_new <= t:
-                    c_profile, t = sel, t_new
-            if ev.exhausted():
-                return
+                picks.append(Candidate(int(sel)))
+            if picks:
+                obs = yield picks
+                for o in obs:
+                    evaluated.add(o.index)
+                    if o.runtime <= t:
+                        c_profile, t = o.index, o.runtime

@@ -12,11 +12,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, Tuple
 
 import jax
 
 from repro.core import counters as C
+from repro.core.account import Evaluator
 from repro.core.counters import CounterSet
 from repro.core.tuning_space import Config, TuningParameter, TuningSpace
 from repro.roofline import analysis as roofline
@@ -33,20 +34,22 @@ def make_step_space() -> TuningSpace:
     return TuningSpace(params, name="train_step")
 
 
-class CompiledStepEvaluator:
-    """config -> (estimated runtime, counters) via a real lower+compile."""
+class CompiledStepEvaluator(Evaluator):
+    """config -> (estimated runtime, counters) via a real lower+compile.
+
+    Implements the shared evaluator protocol; the ``cost`` charged per
+    empirical test is the real compile wall-clock (0 on compile-cache hits),
+    so ``elapsed`` is honest tuning time in this expensive-measurement
+    regime.
+    """
 
     def __init__(self, arch_name: str, shape_name: str,
                  hbm_bytes: float = 16e9, verbose: bool = True):
+        super().__init__(make_step_space())
         self.arch_name = arch_name
         self.shape_name = shape_name
         self.hbm_bytes = hbm_bytes
         self.verbose = verbose
-        self.steps = 0
-        self.evaluated: set = set()
-        self.best_runtime = float("inf")
-        self.best_index: Optional[int] = None
-        self.space = make_step_space()
         self._cache: Dict[int, CounterSet] = {}
         self.compile_seconds = 0.0
 
@@ -104,22 +107,11 @@ class CompiledStepEvaluator:
                   f"{' (OOM)' if oom else ''}")
         return cs
 
-    def _eval(self, idx: int) -> CounterSet:
+    def _evaluate(
+        self, idx: int, profiled: bool
+    ) -> Tuple[float, CounterSet, float]:
+        before = self.compile_seconds
         if idx not in self._cache:
             self._cache[idx] = self._counters_for(self.space[idx])
         cs = self._cache[idx]
-        self.steps += 1
-        self.evaluated.add(idx)
-        if cs.runtime < self.best_runtime:
-            self.best_runtime = cs.runtime
-            self.best_index = idx
-        return cs
-
-    def measure(self, idx: int) -> float:
-        return self._eval(idx).runtime
-
-    def profile(self, idx: int) -> CounterSet:
-        return self._eval(idx)
-
-    def exhausted(self) -> bool:
-        return len(self.evaluated) >= len(self.space)
+        return float(cs.runtime), cs, self.compile_seconds - before

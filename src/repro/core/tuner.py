@@ -10,6 +10,9 @@ Mirrors the paper's two-phase architecture (Fig. 2):
 Also provides the experiment harness used by benchmarks/: repeated stochastic
 searches (1000x in the paper) with steps-to-well-performing statistics and
 convergence-in-time traces.
+
+The session-oriented public API lives in ``repro.tuning`` (``TuningSession``,
+``SEARCHERS``); ``autotune`` below remains as a one-call shim over it.
 """
 from __future__ import annotations
 
@@ -24,8 +27,7 @@ from repro.core.hwspec import HardwareSpec
 from repro.core.model import (DecisionTreeModel, ExactCounterModel,
                               QuadraticRegressionModel, TPPCModel,
                               deliberate_training_sample)
-from repro.core.searcher import (BasinHoppingSearcher, ProfileBasedSearcher,
-                                 RandomSearcher, Searcher, StarchartSearcher)
+from repro.core.searcher import ProfileBasedSearcher, Searcher
 from repro.core.tuning_space import Config, TuningSpace
 
 WELL_PERFORMING_FACTOR = 1.1  # paper §4.1
@@ -80,18 +82,47 @@ class SearchStats:
     never_found: int
 
     @property
+    def runs(self) -> int:
+        return len(self.steps_to_well) + self.never_found
+
+    @property
+    def found_rate(self) -> float:
+        """Fraction of repetitions that reached a well-performing config."""
+        return len(self.steps_to_well) / self.runs if self.runs else 0.0
+
+    @property
     def mean_steps(self) -> float:
         return float(np.mean(self.steps_to_well)) if self.steps_to_well else float("nan")
+
+    @property
+    def median_steps(self) -> float:
+        return float(np.median(self.steps_to_well)) if self.steps_to_well else float("nan")
 
     @property
     def mean_time(self) -> float:
         return float(np.mean(self.times_to_well)) if self.times_to_well else float("nan")
 
+    def summary(self) -> str:
+        """Human-readable line; explicit about never-found runs instead of
+        letting NaN means leak into reports."""
+        if not self.steps_to_well:
+            return (f"{self.searcher}: never found a well-performing config "
+                    f"in {self.runs} runs")
+        line = (f"{self.searcher}: mean {self.mean_steps:.1f} / median "
+                f"{self.median_steps:.1f} steps to well-performing")
+        if self.never_found:
+            line += f" ({self.never_found}/{self.runs} runs never found)"
+        return line
+
 
 def steps_to_well_performing(
-    ev: ReplayEvaluator, threshold: float
+    ev, threshold: float
 ) -> Tuple[Optional[int], Optional[float]]:
-    """First empirical test reaching runtime <= threshold: (steps, elapsed)."""
+    """First empirical test reaching runtime <= threshold: (steps, elapsed).
+
+    Works on any evaluator implementing the shared protocol (reads the
+    public trace).
+    """
     for steps, elapsed, rt in ev.trace:
         if rt <= threshold:
             return steps, elapsed
@@ -138,6 +169,8 @@ def convergence_curve(
 
     Returns (time_grid, mean_curve, std_curve).  Curves start at the first
     instant when *all* repetitions have at least one finished kernel (§4.6.1).
+    Repetitions that never finished a kernel are excluded; if none did, the
+    curves are all-NaN over the given (or empty) grid rather than raising.
     """
     cap = max_steps if max_steps is not None else len(recorded.space)
     traces = []
@@ -146,8 +179,14 @@ def convergence_curve(
         ev = ReplayEvaluator(recorded)
         searcher.search(ev, max_steps=cap)
         traces.append(ev.trace)
-    first_done = max(tr[0][1] for tr in traces if tr)
-    t_end = max(tr[-1][1] for tr in traces if tr)
+    traces = [tr for tr in traces if tr]
+    if not traces:
+        grid = (np.asarray(time_grid, dtype=np.float64)
+                if time_grid is not None else np.empty(0))
+        nan = np.full(grid.shape, np.nan)
+        return grid, nan, nan.copy()
+    first_done = max(tr[0][1] for tr in traces)
+    t_end = max(tr[-1][1] for tr in traces)
     if time_grid is None:
         time_grid = np.linspace(first_done, t_end, 200)
     curves = np.empty((len(traces), time_grid.size))
@@ -165,7 +204,7 @@ def convergence_curve(
 
 
 # =============================================================================
-# High-level API: the framework feature
+# High-level API: one-call shim over repro.tuning.TuningSession
 # =============================================================================
 @dataclasses.dataclass
 class TuneResult:
@@ -189,22 +228,12 @@ def autotune(
     """One-call autotuning: train (if no model given) then search.
 
     ``train_hw`` lets the model be built on different (virtual) hardware than
-    the autotuning target — the paper's headline capability.
+    the autotuning target — the paper's headline capability.  Thin shim over
+    ``repro.tuning.TuningSession`` kept for the one-liner use case.
     """
-    if model is None:
-        rec_train = record_space(space, workload_fn, train_hw or hw)
-        model = train_model_deliberate(rec_train, kind=model_kind, seed=seed)
-    ev = CostModelEvaluator(space, workload_fn, hw)
-    if searcher_cls is ProfileBasedSearcher:
-        searcher = ProfileBasedSearcher(space, model, cores=hw.cores, seed=seed)
-    else:
-        searcher = searcher_cls(space, seed=seed)
-    searcher.search(ev, max_steps=budget)
-    assert ev.best_index is not None
-    history = sorted((i, float(c.runtime)) for i, c in ev._cache.items())
-    return TuneResult(
-        best_config=space[ev.best_index],
-        best_runtime=ev.best_runtime,
-        steps=ev.steps,
-        history=history,
-    )
+    from repro.tuning.session import TuningSession  # tuning builds on core
+
+    session = TuningSession(space, workload_fn, hw, model=model, seed=seed)
+    if session.model is None:
+        session.train(train_hw=train_hw, kind=model_kind)
+    return session.tune(budget=budget, searcher=searcher_cls)

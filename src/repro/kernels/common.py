@@ -3,6 +3,13 @@ from __future__ import annotations
 
 import math
 
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed TPUCompilerParams (<= 0.5) to CompilerParams (>= 0.6); resolve
+# whichever this jax ships so kernels work across the range.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams")
+
 
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.common import cdiv
 
 
@@ -88,7 +89,7 @@ def conv2d(
             pltpu.VMEM((by + halo, bx + halo), jnp.float32),
             pltpu.SemaphoreType.DMA,
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.common import cdiv
 
 
@@ -94,7 +95,7 @@ def coulomb(
         ),
         out_shape=jax.ShapeDtypeStruct((gs, gs, gs), jnp.float32),
         scratch_shapes=[pltpu.VMEM((z_it, by, bx), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

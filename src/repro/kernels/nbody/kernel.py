@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.common import cdiv
 
 
@@ -81,7 +82,7 @@ def nbody(
         out_specs=pl.BlockSpec((block_i, 4), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 4), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_i, 4), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -4,40 +4,25 @@
 Each entry binds: tuning space, config→kernel-kwargs dispatch, the jnp oracle,
 the portable workload model g(TP, I), and a catalog of inputs (the paper's
 input-portability experiments need several per benchmark).
+
+Registration is decorator-based and lives with each kernel package: a
+package's ``__init__`` declares
+
+    @register_benchmark("matmul")
+    def _benchmark() -> KernelBenchmark: ...
+
+and ``BENCHMARKS`` discovers the packages lazily on first access (so plain
+``import repro.kernels.matmul`` stays cheap and adding a kernel package
+never touches this module).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
-
-import jax.numpy as jnp
-import numpy as np
+import importlib
+import pkgutil
+from typing import Any, Callable, Dict, Iterator, Mapping, Tuple
 
 from repro.core.tuning_space import Config, TuningSpace
-from repro.kernels.attention import ops as attention_ops
-from repro.kernels.attention import space as attention_space
-from repro.kernels.attention.kernel import flash_attention
-from repro.kernels.attention.ref import attention_ref
-from repro.kernels.conv2d import ops as conv2d_ops
-from repro.kernels.conv2d import space as conv2d_space
-from repro.kernels.conv2d.kernel import conv2d
-from repro.kernels.conv2d.ref import conv2d_ref
-from repro.kernels.coulomb import ops as coulomb_ops
-from repro.kernels.coulomb import space as coulomb_space
-from repro.kernels.coulomb.kernel import coulomb
-from repro.kernels.coulomb.ref import coulomb_ref
-from repro.kernels.matmul import ops as matmul_ops
-from repro.kernels.matmul import space as matmul_space
-from repro.kernels.matmul.kernel import matmul
-from repro.kernels.matmul.ref import matmul_ref
-from repro.kernels.nbody import ops as nbody_ops
-from repro.kernels.nbody import space as nbody_space
-from repro.kernels.nbody.kernel import nbody
-from repro.kernels.nbody.ref import nbody_ref
-from repro.kernels.transpose import ops as transpose_ops
-from repro.kernels.transpose import space as transpose_space
-from repro.kernels.transpose.kernel import transpose
-from repro.kernels.transpose.ref import transpose_ref
 
 
 @dataclasses.dataclass
@@ -47,122 +32,81 @@ class KernelBenchmark:
     workload_fn: Callable[[Config, Any], Dict[str, float]]
     default_input: Any
     inputs: Dict[str, Any]
-    make_args: Callable[[Any, np.random.Generator], Tuple]
+    make_args: Callable[[Any, Any], Tuple]
     run: Callable[..., Any]       # run(cfg, *args, interpret=...)
     ref: Callable[..., Any]       # ref(*args)
 
 
-def _matmul_args(inp, rng):
-    a = jnp.asarray(rng.standard_normal((inp.m, inp.k), dtype=np.float32))
-    b = jnp.asarray(rng.standard_normal((inp.k, inp.n), dtype=np.float32))
-    return (a, b)
+_FACTORIES: Dict[str, Callable[[], KernelBenchmark]] = {}
 
 
+def register_benchmark(name: str):
+    """Decorator for a zero-arg factory returning a ``KernelBenchmark``.
+
+    Applied inside each kernel package's ``__init__``; the factory is built
+    lazily on first registry access and cached.
+    """
+
+    def deco(factory: Callable[[], KernelBenchmark]):
+        if name in _FACTORIES:
+            raise ValueError(f"benchmark {name!r} registered twice")
+        _FACTORIES[name] = factory
+        return factory
+
+    return deco
 
 
-def _transpose_args(inp, rng):
-    return (jnp.asarray(rng.standard_normal((inp.m, inp.n), dtype=np.float32)),)
+class _BenchmarkRegistry(Mapping):
+    """Lazy name → KernelBenchmark mapping over the registered factories."""
+
+    def __init__(self) -> None:
+        self._built: Dict[str, KernelBenchmark] = {}
+        self._discovered = False
+
+    def _discover(self) -> None:
+        """Import every repro.kernels subpackage so decorators run."""
+        if self._discovered:
+            return
+        import repro.kernels as pkg
+
+        for mod in pkgutil.iter_modules(pkg.__path__):
+            if mod.ispkg:
+                importlib.import_module(f"repro.kernels.{mod.name}")
+        # only after every package imported cleanly — a failed import must
+        # surface again on the next access, not a half-populated registry
+        self._discovered = True
+
+    def __getitem__(self, name: str) -> KernelBenchmark:
+        self._discover()
+        if name not in self._built:
+            if name not in _FACTORIES:
+                raise KeyError(
+                    f"unknown benchmark {name!r}; "
+                    f"registered: {sorted(_FACTORIES)}")
+            bench = _FACTORIES[name]()
+            if bench.name != name:
+                raise ValueError(
+                    f"benchmark factory for {name!r} returned name "
+                    f"{bench.name!r}")
+            self._built[name] = bench
+        return self._built[name]
+
+    def __iter__(self) -> Iterator[str]:
+        self._discover()
+        return iter(sorted(_FACTORIES))
+
+    def __len__(self) -> int:
+        self._discover()
+        return len(_FACTORIES)
 
 
+BENCHMARKS: Mapping[str, KernelBenchmark] = _BenchmarkRegistry()
 
 
-def _coulomb_args(inp, rng):
-    atoms = rng.uniform(0.0, inp.grid_size * 0.5,
-                        (inp.n_atoms, 4)).astype(np.float32)
-    atoms[:, 3] = rng.uniform(0.1, 1.0, inp.n_atoms)
-    return (jnp.asarray(atoms),)
+def GEMM_FULL_SPACE() -> TuningSpace:
+    """GEMM-full: the CLTune-like larger space sharing matmul's workload
+    model — used for the small-space-model → big-space-search experiment
+    (Fig. 8)."""
+    from repro.kernels.matmul import space as matmul_space
 
-
-
-
-def _nbody_args(inp, rng):
-    b = rng.standard_normal((inp.n, 4)).astype(np.float32)
-    b[:, 3] = np.abs(b[:, 3]) + 0.1
-    return (jnp.asarray(b),)
-
-
-
-
-def _conv_args(inp, rng):
-    img = jnp.asarray(rng.standard_normal((inp.h, inp.w), dtype=np.float32))
-    flt = jnp.asarray(rng.standard_normal((inp.f, inp.f), dtype=np.float32))
-    return (img, flt)
-
-
-
-
-def _attn_args(inp, rng):
-    shape = (inp.batch, inp.heads, inp.seq, inp.head_dim)
-    mk = lambda: jnp.asarray(
-        rng.standard_normal(shape, dtype=np.float32) * 0.3)
-    return (mk(), mk(), mk())
-
-
-
-
-BENCHMARKS: Dict[str, KernelBenchmark] = {
-    "matmul": KernelBenchmark(
-        name="matmul",
-        make_space=matmul_space.make_space,
-        workload_fn=matmul_space.workload_fn,
-        default_input=matmul_space.DEFAULT_INPUT,
-        inputs={
-            "2048": matmul_space.DEFAULT_INPUT,
-            "128": matmul_space.SQUARE_SMALL,
-            "16x4096": matmul_space.RECT_TALL,
-            "4096x16": matmul_space.RECT_WIDE,
-        },
-        make_args=_matmul_args, run=matmul_ops.run, ref=matmul_ref,
-    ),
-    "transpose": KernelBenchmark(
-        name="transpose",
-        make_space=transpose_space.make_space,
-        workload_fn=transpose_space.workload_fn,
-        default_input=transpose_space.DEFAULT_INPUT,
-        inputs={"8192": transpose_space.DEFAULT_INPUT},
-        make_args=_transpose_args, run=transpose_ops.run, ref=transpose_ref,
-    ),
-    "coulomb": KernelBenchmark(
-        name="coulomb",
-        make_space=coulomb_space.make_space,
-        workload_fn=coulomb_space.workload_fn,
-        default_input=coulomb_space.DEFAULT_INPUT,
-        inputs={
-            "default": coulomb_space.DEFAULT_INPUT,
-            "large_grid": coulomb_space.LARGE_GRID,
-            "small_grid": coulomb_space.SMALL_GRID,
-        },
-        make_args=_coulomb_args, run=coulomb_ops.run, ref=coulomb_ref,
-    ),
-    "nbody": KernelBenchmark(
-        name="nbody",
-        make_space=nbody_space.make_space,
-        workload_fn=nbody_space.workload_fn,
-        default_input=nbody_space.DEFAULT_INPUT,
-        inputs={
-            "16k": nbody_space.DEFAULT_INPUT,
-            "131k": nbody_space.LARGE_INPUT,
-        },
-        make_args=_nbody_args, run=nbody_ops.run, ref=nbody_ref,
-    ),
-    "conv2d": KernelBenchmark(
-        name="conv2d",
-        make_space=conv2d_space.make_space,
-        workload_fn=conv2d_space.workload_fn,
-        default_input=conv2d_space.DEFAULT_INPUT,
-        inputs={"4096": conv2d_space.DEFAULT_INPUT},
-        make_args=_conv_args, run=conv2d_ops.run, ref=conv2d_ref,
-    ),
-    "attention": KernelBenchmark(
-        name="attention",
-        make_space=attention_space.make_space,
-        workload_fn=attention_space.workload_fn,
-        default_input=attention_space.DEFAULT_INPUT,
-        inputs={"default": attention_space.DEFAULT_INPUT},
-        make_args=_attn_args, run=attention_ops.run, ref=attention_ref,
-    ),
-}
-
-# GEMM-full: the CLTune-like larger space sharing matmul's workload model —
-# used for the small-space-model -> big-space-search experiment (Fig. 8).
-GEMM_FULL_SPACE = matmul_space.make_full_space
+    return matmul_space.make_full_space()

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import ARCHS, SMOKES
 from repro.models.registry import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, tune_engine_batch
 
 
 def main():
@@ -24,18 +24,29 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--tune-batch", action="store_true",
+                    help="pick batch size by timed trials through the "
+                         "ask-tell tuning API before serving")
     args = ap.parse_args()
 
     arch = (SMOKES if args.smoke else ARCHS)[args.arch]
     model = build_model(arch)
-    engine = ServeEngine(model, batch_size=args.batch, max_seq=args.max_seq,
-                         rng=jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(1, arch.vocab_size,
                                         size=int(rng.integers(4, 16))),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
+    batch = args.batch
+    if args.tune_batch:
+        factory = lambda b: ServeEngine(model, batch_size=b,
+                                        max_seq=args.max_seq,
+                                        rng=jax.random.PRNGKey(0))
+        batch, best_s, hist = tune_engine_batch(factory, reqs)
+        print(f"[serve] tuned batch_size={batch} "
+              f"({best_s:.2f}s best of {len(hist)} trials)")
+    engine = ServeEngine(model, batch_size=batch, max_seq=args.max_seq,
+                         rng=jax.random.PRNGKey(0))
     t0 = time.time()
     out = engine.generate(reqs)
     dt = time.time() - t0

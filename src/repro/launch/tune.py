@@ -1,0 +1,80 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Step-config tuning driver over the public ``repro.tuning`` API.
+
+Tunes the distributed train-step configuration (microbatches, remat, loss
+chunking, attention chunk, FSDP) of an architecture against REAL compiles,
+with the paper's two-phase flow made operational:
+
+  train + save:   --save-model step_tppc.json  (train TP->PC model here)
+  load + tune:    --load-model step_tppc.json  (skip the training compiles —
+                  the artifact may come from a DIFFERENT machine)
+
+    PYTHONPATH=src python -m repro.launch.tune --arch qwen2.5-3b \
+        [--searcher profile] [--budget 10] [--save-model step_tppc.json]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+from repro.core.step_tuner import CompiledStepEvaluator  # noqa: E402
+from repro.tuning import SEARCHERS, TuningSession        # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--searcher", default="profile",
+                    choices=sorted(SEARCHERS))
+    ap.add_argument("--budget", type=int, default=10)
+    ap.add_argument("--train-samples", type=int, default=14)
+    ap.add_argument("--save-model", default=None)
+    ap.add_argument("--load-model", default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    ev = CompiledStepEvaluator(args.arch, args.shape)
+    session = TuningSession(ev.space, seed=args.seed)
+
+    needs_model = args.searcher in ("profile", "profile_local")
+    if args.load_model:
+        session.load_model(args.load_model)
+        print(f"[tune] loaded model artifact {args.load_model}")
+    elif needs_model:
+        print(f"[tune] training phase: <= {args.train_samples} compiles")
+        session.train_on_evaluator(ev, values_per_param=2,
+                                   max_samples=args.train_samples)
+        print(f"[tune] model trained ({ev.compile_seconds:.0f}s compiles)")
+    if args.save_model and session.model is not None:
+        session.save_model(args.save_model)
+        print(f"[tune] model artifact -> {args.save_model}")
+
+    # fresh evaluator for the tuning phase (training already spent steps on
+    # ev's account); share the compile cache so repeats stay free
+    ev_tune = CompiledStepEvaluator(args.arch, args.shape)
+    ev_tune._cache.update(ev._cache)
+    extra = {"n": 3} if needs_model else {}
+    result = session.tune(budget=args.budget, searcher=args.searcher,
+                          evaluator=ev_tune, **extra)
+    print(f"[tune] {args.searcher}: best {result.best_runtime*1e3:.1f}ms "
+          f"after {result.steps} empirical tests")
+    print(f"[tune] best config: {result.best_config}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"arch": args.arch, "shape": args.shape,
+                       "searcher": args.searcher,
+                       "best_ms": result.best_runtime * 1e3,
+                       "best_config": result.best_config,
+                       "steps": result.steps,
+                       "history": result.history,
+                       "seconds": time.time() - t0}, f, indent=2)
+        print(f"[tune] -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

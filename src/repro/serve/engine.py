@@ -78,3 +78,42 @@ class ServeEngine:
                                          {"tokens": next_tok[:, None]})
             next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return {r.uid: gen[i] for i, r in enumerate(wave)}
+
+
+def tune_engine_batch(
+    engine_factory,
+    requests: List[Request],
+    batch_sizes: Tuple[int, ...] = (1, 2, 4, 8),
+    budget: Optional[int] = None,
+    seed: int = 0,
+):
+    """Pick the engine batch size by timed end-to-end trials, driven through
+    the shared ask-tell tuning API (``FunctionEvaluator`` + registry
+    searcher — no counters exist for a serving loop, so the search is
+    runtime-only).
+
+    ``engine_factory(batch_size) -> ServeEngine``.  Returns
+    (best_batch_size, best_seconds, history) where history is the public
+    per-trial (config index, seconds) trace.
+    """
+    import time as _time
+
+    from repro.core.evaluate import FunctionEvaluator
+    from repro.core.searcher import make_searcher, run_search
+    from repro.core.tuning_space import TuningParameter, TuningSpace
+
+    space = TuningSpace([TuningParameter("BATCH", tuple(batch_sizes))],
+                        name="serve_batch")
+
+    def timed_run(cfg) -> float:
+        engine = engine_factory(int(cfg["BATCH"]))
+        t0 = _time.time()
+        engine.generate([dataclasses.replace(r, generated=None)
+                         for r in requests])
+        return _time.time() - t0
+
+    ev = FunctionEvaluator(space, timed_run)
+    run_search(make_searcher("random", space, seed=seed), ev,
+               budget if budget is not None else len(space))
+    best = space[ev.best_index]
+    return int(best["BATCH"]), ev.best_runtime, ev.history()

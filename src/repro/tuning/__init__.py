@@ -1,0 +1,50 @@
+"""``repro.tuning`` — the public ask-tell autotuning API.
+
+The coherent surface over the paper's two-phase method:
+
+* ``TuningSession`` — explicit ``train()`` / ``tune()`` phases, portable
+  model artifacts (``save_model``/``load_model``).
+* ``SEARCHERS`` — string-keyed registry of ask-tell searchers, all
+  constructible as ``SEARCHERS[name](space, seed=s, ...)``; ``run_search``
+  is the uniform driver loop.
+* ``Evaluator`` protocol + ``EvalAccount`` — shared
+  measure/profile/measure_many accounting implemented by every evaluator
+  (replay, cost model, real compiles, timed callables).
+* ``model_to_dict``/``model_from_dict`` — JSON round-trip for trained
+  TP→PC_ops models (the portability artifact).
+
+Quickstart::
+
+    from repro.core import SPECS
+    from repro.kernels.registry import BENCHMARKS
+    from repro.tuning import TuningSession
+
+    bm = BENCHMARKS["matmul"]
+    session = TuningSession(bm.make_space(),
+                            lambda c: bm.workload_fn(c, bm.default_input),
+                            hw=SPECS["tpu_v5e"])
+    session.train(train_hw=SPECS["tpu_v4"])   # model from DIFFERENT hardware
+    result = session.tune(budget=25)
+"""
+from repro.core.account import (Candidate, EvalAccount, Evaluator,
+                                Observation, ProfilingUnsupported)
+from repro.core.evaluate import (CostModelEvaluator, FunctionEvaluator,
+                                 RecordedSpace, ReplayEvaluator, record_space)
+from repro.core.searcher import (SEARCHERS, Searcher, make_searcher,
+                                 register_searcher, resolve_searcher,
+                                 run_search)
+from repro.core.tuner import TuneResult, train_model, train_model_deliberate
+from repro.tuning.serialize import (model_from_dict, model_to_dict,
+                                    space_from_dict, space_to_dict)
+from repro.tuning.session import TuningSession
+
+__all__ = [
+    "Candidate", "CostModelEvaluator", "EvalAccount", "Evaluator",
+    "FunctionEvaluator", "Observation", "ProfilingUnsupported",
+    "RecordedSpace", "ReplayEvaluator", "SEARCHERS", "Searcher",
+    "TuneResult", "TuningSession", "make_searcher", "model_from_dict",
+    "model_to_dict", "record_space", "register_searcher",
+    "resolve_searcher", "run_search",
+    "space_from_dict", "space_to_dict", "train_model",
+    "train_model_deliberate",
+]

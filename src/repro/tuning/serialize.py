@@ -1,0 +1,148 @@
+"""JSON round-trip for trained TP→PC_ops models — the portability artifact.
+
+The paper's headline claim is that a model trained on one GPU/input steers
+autotuning on another.  ``model_to_dict``/``model_from_dict`` turn that
+claim into a shippable file: train anywhere, ``TuningSession.save_model``,
+copy the JSON to the machine of interest, ``load_model`` and tune.
+
+Serialized alongside the model are the tuning-space *parameters* (names and
+value lists) — everything the models need to vectorize configurations.
+Space constraints are predicates and are NOT serialized; tree/quadratic
+models never consult space indexing, and exact models carry their own
+explicit (config, counters) pairs, so reconstruction is faithful either way.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.model import (DecisionTreeModel, ExactCounterModel,
+                              QuadraticRegressionModel, TPPCModel, _Node)
+from repro.core.tuning_space import TuningParameter, TuningSpace
+
+FORMAT = "repro.tppc_model"
+VERSION = 1
+
+
+# -- tuning space (parameters only) -------------------------------------------
+def space_to_dict(space: TuningSpace) -> Dict:
+    return {
+        "name": space.name,
+        "parameters": [
+            {"name": p.name, "values": list(p.values)}
+            for p in space.parameters
+        ],
+    }
+
+
+def space_from_dict(d: Dict) -> TuningSpace:
+    return TuningSpace(
+        [TuningParameter(p["name"], tuple(p["values"]))
+         for p in d["parameters"]],
+        name=d.get("name", "space"),
+    )
+
+
+# -- decision trees ------------------------------------------------------------
+def _node_to_dict(n: _Node) -> Dict:
+    if n.is_leaf:
+        return {"value": n.value}
+    return {
+        "value": n.value,
+        "feature": n.feature,
+        "threshold": n.threshold,
+        "left": _node_to_dict(n.left),
+        "right": _node_to_dict(n.right),
+    }
+
+
+def _node_from_dict(d: Dict) -> _Node:
+    node = _Node(value=float(d["value"]))
+    if "feature" in d:
+        node.feature = int(d["feature"])
+        node.threshold = float(d["threshold"])
+        node.left = _node_from_dict(d["left"])
+        node.right = _node_from_dict(d["right"])
+    return node
+
+
+def _check_space_compatible(space: TuningSpace, space_dict: Dict) -> None:
+    """Models vectorize configs by the bound space's parameter order and
+    value lists — a mismatch would silently mispredict, so refuse it."""
+    ours = [(p.name, list(p.values)) for p in space.parameters]
+    theirs = [(p["name"], list(p["values"])) for p in space_dict["parameters"]]
+    if ours != theirs:
+        raise ValueError(
+            "model artifact was trained on an incompatible tuning space: "
+            f"artifact parameters {theirs} vs target space {ours}")
+
+
+# -- model <-> dict ------------------------------------------------------------
+def model_to_dict(model: TPPCModel, space: Optional[TuningSpace] = None) -> Dict:
+    """Serialize a trained model (plus its space's parameters) to JSON-safe
+    primitives.  ``space`` defaults to the model's own space."""
+    space = space if space is not None else model.space
+    out = {"format": FORMAT, "version": VERSION,
+           "space": space_to_dict(space)}
+    if isinstance(model, DecisionTreeModel):
+        out["kind"] = "tree"
+        out["trees"] = {name: _node_to_dict(t)
+                        for name, t in model.trees.items()}
+        out["scale"] = {name: float(s) for name, s in model.scale.items()}
+    elif isinstance(model, QuadraticRegressionModel):
+        out["kind"] = "quadratic"
+        out["counter_names"] = list(model.counter_names)
+        out["coefs"] = {
+            ",".join(str(int(b)) for b in key): {
+                name: [float(x) for x in coef]
+                for name, coef in per_counter.items()
+            }
+            for key, per_counter in model.coefs.items()
+        }
+        out["fallback"] = {name: float(v)
+                           for name, v in model._fallback.items()}
+    elif isinstance(model, ExactCounterModel):
+        out["kind"] = "exact"
+        # counters are ordered by the model's own space — pair configs from
+        # the same enumeration, not the (possibly different) session space
+        out["configs"] = [model.space[i] for i in range(len(model.space))]
+        out["counters"] = [
+            {name: float(v) for name, v in cs.items()}
+            for cs in model._by_index
+        ]
+    else:
+        raise TypeError(f"cannot serialize model type {type(model).__name__}")
+    return out
+
+
+def model_from_dict(d: Dict, space: Optional[TuningSpace] = None) -> TPPCModel:
+    """Reconstruct a trained model.  Pass ``space`` to bind the model to an
+    existing (possibly constraint-pruned) space; otherwise the parameters
+    recorded in the artifact are used to rebuild one."""
+    if d.get("format") != FORMAT:
+        raise ValueError(f"not a {FORMAT} artifact: format={d.get('format')!r}")
+    if d.get("version") != VERSION:
+        raise ValueError(f"unsupported {FORMAT} version {d.get('version')!r}")
+    if space is not None:
+        _check_space_compatible(space, d["space"])
+    else:
+        space = space_from_dict(d["space"])
+    kind = d["kind"]
+    if kind == "tree":
+        trees = {name: _node_from_dict(t) for name, t in d["trees"].items()}
+        scale = {name: float(s) for name, s in d["scale"].items()}
+        return DecisionTreeModel.from_state(space, trees, scale)
+    if kind == "quadratic":
+        coefs = {
+            tuple(int(b) for b in key.split(",") if b != ""): {
+                name: np.asarray(coef, dtype=np.float64)
+                for name, coef in per_counter.items()
+            }
+            for key, per_counter in d["coefs"].items()
+        }
+        return QuadraticRegressionModel.from_state(
+            space, d["counter_names"], coefs, d["fallback"])
+    if kind == "exact":
+        return ExactCounterModel.from_pairs(space, d["configs"], d["counters"])
+    raise ValueError(f"unknown model kind {kind!r}")

@@ -1,0 +1,63 @@
+"""Seeded stand-in for the slice of the hypothesis API this suite uses.
+
+The container image may not ship ``hypothesis``; rather than losing the
+property tests to a collection ImportError, the three modules that use it
+fall back to this shim: ``@given`` runs the test body on ``max_examples``
+pseudo-random samples drawn from the declared strategies with a fixed seed.
+No shrinking, no database — just deterministic sampled coverage.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self.gen = gen
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda r: [elements.gen(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = 20, **_ignored):
+    """Accepts (and ignores) hypothesis-only knobs like ``deadline``."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        def wrapper():
+            rnd = random.Random(0)
+            for _ in range(getattr(fn, "_max_examples", 20)):
+                fn(*(s.gen(rnd) for s in strategies))
+
+        # keep the test's identity for collection/reporting, but present a
+        # zero-arg signature so pytest doesn't mistake params for fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

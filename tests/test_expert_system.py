@@ -1,7 +1,10 @@
 """Cost model, bottleneck analysis, ΔPC reaction, scoring (paper §3.5-3.6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # seeded sampling shim (no pip deps)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import SPECS, analyze, compute_delta_pc
 from repro.core import counters as C

@@ -3,7 +3,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # seeded sampling shim (no pip deps)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.attention.space import AttentionInput
 from repro.kernels.conv2d.space import ConvInput

@@ -1,0 +1,326 @@
+"""The public ask-tell tuning API: registry, protocol, golden equivalence
+with the legacy searcher loop, and the portable-model artifact."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (SEARCHERS, SPECS, ProfilingUnsupported,
+                        ReplayEvaluator, convergence_curve, record_space,
+                        run_search, train_model)
+from repro.core import bottleneck, reaction, scoring
+from repro.core.evaluate import FunctionEvaluator
+from repro.core.tuner import SearchStats
+from repro.core.tuning_space import TuningParameter, TuningSpace
+from repro.kernels.registry import BENCHMARKS
+from repro.tuning import TuningSession, make_searcher
+
+HW = SPECS["tpu_v5e"]
+
+
+@pytest.fixture(scope="module")
+def gemm_recorded():
+    bm = BENCHMARKS["matmul"]
+    sp = bm.make_space()
+    return record_space(sp, lambda c: bm.workload_fn(c, bm.default_input), HW)
+
+
+@pytest.fixture(scope="module")
+def gemm_recorded_v4(gemm_recorded):
+    bm = BENCHMARKS["matmul"]
+    return record_space(gemm_recorded.space,
+                        lambda c: bm.workload_fn(c, bm.default_input),
+                        SPECS["tpu_v4"])
+
+
+# =============================================================================
+# Registry + protocol basics
+# =============================================================================
+def test_registry_constructs_all_searchers_uniformly(gemm_recorded):
+    assert {"random", "profile", "basin_hopping", "starchart",
+            "profile_local"} <= set(SEARCHERS)
+    for name in SEARCHERS:
+        s = SEARCHERS[name](gemm_recorded.space, seed=7)
+        assert s.name == name
+
+
+def test_ask_tell_protocol_shape(gemm_recorded):
+    s = SEARCHERS["random"](gemm_recorded.space, seed=0)
+    ev = ReplayEvaluator(gemm_recorded)
+    cands = s.propose(5)
+    assert len(cands) == 5
+    obs = ev.measure_many(cands)
+    assert [o.index for o in obs] == [c.index for c in cands]
+    s.observe(obs)
+    more = s.propose(3)
+    assert len(more) == 3
+    assert {c.index for c in more}.isdisjoint({c.index for c in cands})
+
+
+def test_profile_searcher_without_model_raises(gemm_recorded):
+    s = SEARCHERS["profile"](gemm_recorded.space, seed=0)
+    with pytest.raises(ValueError, match="model"):
+        s.propose(1)
+
+
+def test_profile_searcher_without_cores_raises(gemm_recorded):
+    model = train_model(gemm_recorded, kind="exact")
+    s = SEARCHERS["profile"](gemm_recorded.space, seed=0, model=model)
+    with pytest.raises(ValueError, match="core"):
+        s.propose(1)
+
+
+def test_session_rejects_typo_searcher_kwargs(gemm_recorded):
+    session = TuningSession(gemm_recorded.space, seed=0)
+    ev = ReplayEvaluator(gemm_recorded)
+    with pytest.raises(TypeError, match="inst_reation"):
+        session.tune(budget=5, searcher="random", evaluator=ev,
+                     inst_reation=0.9)
+
+
+def test_run_search_budget_is_relative_to_entry(gemm_recorded):
+    ev = ReplayEvaluator(gemm_recorded)
+    for i in range(14):   # e.g. a training phase charged to the same account
+        ev.measure(i)
+    run_search(SEARCHERS["random"](gemm_recorded.space, seed=0), ev, 10)
+    assert ev.steps == 24   # full 10-step search budget after the 14
+
+
+def test_evaluator_history_is_public(gemm_recorded):
+    ev = ReplayEvaluator(gemm_recorded)
+    run_search(SEARCHERS["random"](gemm_recorded.space, seed=0), ev, 10)
+    hist = ev.history()
+    assert len(hist) == 10
+    assert all(rt == float(gemm_recorded.runtimes[i]) for i, rt in hist)
+    # trace and history agree step-for-step
+    assert [rt for _, rt in hist] == [rt for _, _, rt in ev.trace]
+
+
+def test_function_evaluator_runtime_only():
+    sp = TuningSpace([TuningParameter("X", (1, 2, 3, 4))])
+    ev = FunctionEvaluator(sp, lambda cfg: 1.0 / cfg["X"])
+    run_search(make_searcher("random", sp, seed=0), ev, len(sp))
+    assert ev.best_index == sp.index_of({"X": 4})
+    with pytest.raises(ProfilingUnsupported):
+        ev.profile(0)
+
+
+# =============================================================================
+# Golden equivalence: ask-tell == legacy loop, step for step
+# =============================================================================
+def _legacy_profile_search(space, model, cores, n, inst_reaction, seed, ev,
+                           max_steps):
+    """Verbatim port of the pre-ask-tell Algorithm 1 search loop."""
+    rng = np.random.default_rng(seed)
+    pred_cache = {}
+
+    def predict(i):
+        if i not in pred_cache:
+            pred_cache[i] = model.predict(space[i])
+        return pred_cache[i]
+
+    size = len(space)
+    c_profile = int(rng.integers(size))
+    while ev.steps < max_steps and not ev.exhausted():
+        pc = ev.profile(c_profile)
+        t = pc.runtime
+        b = bottleneck.analyze(pc, cores=cores)
+        delta_pc = reaction.compute_delta_pc(b, inst_reaction)
+        pc_prof = predict(c_profile)
+        raw = np.zeros(size)
+        mask = np.zeros(size, dtype=bool)
+        for k in range(size):
+            if k in ev.evaluated:
+                continue
+            mask[k] = True
+            raw[k] = scoring.score_configuration(delta_pc, pc_prof,
+                                                 predict(k))
+        if not mask.any():
+            return
+        weights = scoring.normalize_scores(raw)
+        for _ in range(n):
+            if ev.steps >= max_steps or not mask.any():
+                break
+            sel = scoring.weighted_choice(weights, rng, mask)
+            t_new = ev.measure(sel)
+            mask[sel] = False
+            if t_new <= t:
+                c_profile, t = sel, t_new
+        if ev.exhausted():
+            return
+
+
+@pytest.mark.parametrize("budget", [17, 40, 256])
+def test_profile_ask_tell_matches_legacy_trace(gemm_recorded, budget):
+    model = train_model(gemm_recorded, kind="exact")
+    for seed in range(5):
+        ev_old = ReplayEvaluator(gemm_recorded)
+        _legacy_profile_search(
+            gemm_recorded.space, model, cores=HW.cores, n=5,
+            inst_reaction=reaction.INST_REACTION_DEFAULT, seed=seed,
+            ev=ev_old, max_steps=budget)
+        ev_new = ReplayEvaluator(gemm_recorded)
+        s = SEARCHERS["profile"](gemm_recorded.space, seed=seed, model=model,
+                                 cores=HW.cores)
+        run_search(s, ev_new, budget)
+        assert ev_old.trace == ev_new.trace
+
+
+def test_random_ask_tell_matches_legacy_trace(gemm_recorded):
+    for seed in range(5):
+        ev_old = ReplayEvaluator(gemm_recorded)
+        rng = np.random.default_rng(seed)
+        for idx in rng.permutation(len(gemm_recorded.space))[:50]:
+            ev_old.measure(int(idx))
+        ev_new = ReplayEvaluator(gemm_recorded)
+        run_search(SEARCHERS["random"](gemm_recorded.space, seed=seed),
+                   ev_new, 50)
+        assert ev_old.trace == ev_new.trace
+
+
+# =============================================================================
+# The portable-model artifact (paper headline as a file)
+# =============================================================================
+def test_model_save_load_predict_round_trip(tmp_path, gemm_recorded_v4):
+    sp = gemm_recorded_v4.space
+    bm = BENCHMARKS["matmul"]
+    wl = lambda c: bm.workload_fn(c, bm.default_input)
+    session = TuningSession(sp, wl, hw=SPECS["tpu_v4"], seed=0)
+    model = session.train(kind="tree")
+    path = session.save_model(str(tmp_path / "tppc.json"))
+    # artifact is plain JSON
+    d = json.loads(open(path).read())
+    assert d["format"] == "repro.tppc_model" and d["kind"] == "tree"
+    # load into a session targeting DIFFERENT hardware
+    other = TuningSession(sp, wl, hw=SPECS["tpu_v6e"], seed=1)
+    loaded = other.load_model(path)
+    for idx in (0, 17, len(sp) - 1):
+        assert model.predict(sp[idx]) == loaded.predict(sp[idx])
+
+
+@pytest.mark.parametrize("kind", ["quadratic", "exact"])
+def test_other_model_kinds_round_trip(tmp_path, gemm_recorded_v4, kind):
+    from repro.tuning import model_from_dict, model_to_dict
+
+    sp = gemm_recorded_v4.space
+    model = train_model(gemm_recorded_v4, kind=kind)
+    blob = json.dumps(model_to_dict(model))
+    loaded = model_from_dict(json.loads(blob))  # space rebuilt from artifact
+    for idx in (3, 100):
+        p1, p2 = model.predict(sp[idx]), loaded.predict(sp[idx])
+        assert p1.keys() == p2.keys()
+        for k in p1:
+            assert p1[k] == pytest.approx(p2[k], rel=1e-12, abs=1e-12)
+
+
+def test_portable_artifact_steers_search_on_other_hardware(
+        tmp_path, gemm_recorded, gemm_recorded_v4):
+    """Acceptance: model trained on tpu_v4, shipped through JSON, steers
+    ProfileBasedSearcher on tpu_v5e to a well-performing config (<=1.1x
+    best) in fewer median steps than random search."""
+    bm = BENCHMARKS["matmul"]
+    sp = gemm_recorded.space
+    wl = lambda c: bm.workload_fn(c, bm.default_input)
+    trainer = TuningSession(sp, wl, hw=SPECS["tpu_v4"], seed=0)
+    trainer.train(sample="full", kind="tree")
+    path = trainer.save_model(str(tmp_path / "v4.json"))
+
+    session = TuningSession(sp, wl, hw=HW, seed=0)
+    model = session.load_model(path)
+
+    threshold = gemm_recorded.best_runtime * 1.1
+    repeats = 40
+
+    def median_steps(factory):
+        steps = []
+        for rep in range(repeats):
+            ev = ReplayEvaluator(gemm_recorded)
+            run_search(factory(rep), ev, len(sp))
+            found = next((s for s, _, rt in ev.trace if rt <= threshold),
+                         None)
+            assert found is not None  # full budget always finds it
+            steps.append(found)
+        return float(np.median(steps))
+
+    med_profile = median_steps(
+        lambda s: SEARCHERS["profile"](sp, seed=s, model=model,
+                                       cores=HW.cores))
+    med_random = median_steps(lambda s: SEARCHERS["random"](sp, seed=s))
+    assert med_profile < med_random
+
+
+# =============================================================================
+# TuningSession behaviour
+# =============================================================================
+def test_session_two_phase_and_result(gemm_recorded):
+    bm = BENCHMARKS["matmul"]
+    sp = gemm_recorded.space
+    wl = lambda c: bm.workload_fn(c, bm.default_input)
+    session = TuningSession(sp, wl, hw=HW, seed=0)
+    session.train(train_hw=SPECS["tpu_v4"])
+    result = session.tune(budget=25)
+    assert result.steps == 25
+    assert result.best_runtime > 0
+    assert result.history == sorted(result.history)
+    # any registry searcher works through the same entry point
+    r2 = session.tune(budget=10, searcher="basin_hopping")
+    assert r2.steps == 10
+
+
+def test_session_tune_with_explicit_evaluator(gemm_recorded):
+    session = TuningSession(gemm_recorded.space, seed=3)
+    ev = ReplayEvaluator(gemm_recorded)
+    result = session.tune(budget=15, searcher="random", evaluator=ev)
+    assert result.steps == 15 and ev.steps == 15
+
+
+# =============================================================================
+# Satellite guards
+# =============================================================================
+def test_convergence_curve_empty_traces_do_not_raise(gemm_recorded):
+    grid, mean, std = convergence_curve(
+        lambda s: SEARCHERS["random"](gemm_recorded.space, seed=s),
+        gemm_recorded, repeats=3, max_steps=0,
+        time_grid=np.array([1.0, 2.0]))
+    assert grid.shape == mean.shape == std.shape
+    assert np.isnan(mean).all()
+
+
+def test_load_model_rejects_incompatible_space(tmp_path, gemm_recorded_v4):
+    sp = gemm_recorded_v4.space
+    bm = BENCHMARKS["matmul"]
+    wl = lambda c: bm.workload_fn(c, bm.default_input)
+    trainer = TuningSession(sp, wl, hw=SPECS["tpu_v4"], seed=0)
+    trainer.train()
+    path = trainer.save_model(str(tmp_path / "gemm.json"))
+    other_space = BENCHMARKS["transpose"].make_space()
+    session = TuningSession(other_space, seed=0)
+    with pytest.raises(ValueError, match="incompatible tuning space"):
+        session.load_model(path)
+
+
+def test_session_rejects_seed_on_searcher_instance(gemm_recorded):
+    session = TuningSession(gemm_recorded.space, seed=0)
+    s = SEARCHERS["random"](gemm_recorded.space, seed=1)
+    ev = ReplayEvaluator(gemm_recorded)
+    with pytest.raises(TypeError, match="already-constructed"):
+        session.tune(budget=5, searcher=s, evaluator=ev, seed=7)
+
+
+def test_starchart_counts_build_steps_under_truncating_budget(gemm_recorded):
+    s = SEARCHERS["starchart"](gemm_recorded.space, seed=0)
+    ev = ReplayEvaluator(gemm_recorded)
+    run_search(s, ev, 10)   # budget ends inside the model-build phase
+    assert s.model_build_steps == ev.steps == 10
+
+
+def test_search_stats_never_found_reporting():
+    st = SearchStats(searcher="random", steps_to_well=[], times_to_well=[],
+                     never_found=7)
+    assert st.found_rate == 0.0
+    assert np.isnan(st.mean_steps) and np.isnan(st.median_steps)
+    assert "never found" in st.summary() and "7" in st.summary()
+    st2 = SearchStats(searcher="x", steps_to_well=[2, 4], times_to_well=[1.0, 2.0],
+                      never_found=1)
+    assert st2.found_rate == pytest.approx(2 / 3)
+    assert "1/3" in st2.summary()

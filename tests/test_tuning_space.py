@@ -1,6 +1,9 @@
 """Tuning-space construction and invariants (unit + property)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # seeded sampling shim (no pip deps)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import TuningParameter, TuningSpace, powers_of_two
 
