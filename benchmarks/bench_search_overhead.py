@@ -1,0 +1,286 @@
+"""Search-overhead benchmark: scalar vs vectorized scoring engine.
+
+The paper's Algorithm 1 re-scores the ENTIRE tuning space at every profiling
+step, and its benchmarks range from 210 to 205,216 configurations — so
+searcher overhead (not kernel measurement) dominates convergence time on
+large spaces unless the score/select pipeline is array-native.  This
+benchmark times the profile-searcher propose/observe loop on synthetic
+recorded spaces of ~1k / ~20k / ~200k configurations, driving
+
+* ``ScalarProfileBasedSearcher`` — the frozen pre-vectorization hot path
+  (per-config ``model.predict`` + ``score_configuration`` dict loops), and
+* ``ProfileBasedSearcher``       — the array-backed engine (whole-space
+  ``predict_matrix`` + ``score_space``),
+
+and writes ``BENCH_search_overhead.json`` so the perf trajectory is tracked
+from commit to commit.  Both engines produce step-for-step identical traces
+(tests/test_vectorized_golden.py) — this file measures only speed.
+
+Usage (from the repo root):
+
+    PYTHONPATH=src python -m benchmarks.bench_search_overhead \
+        [--spaces 1k,20k,200k] [--models exact,tree] [--steps 60]
+        [--repeats 3] [--out BENCH_search_overhead.json]
+        [--min-speedup RATIO]   # exit 1 below this scalar/vectorized ratio
+        [--ceiling-s SECONDS]   # exit 1 if any engine run exceeds it
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (DecisionTreeModel, ExactCounterModel, ReplayEvaluator,
+                        SPECS, TuningParameter, TuningSpace, run_search)
+from repro.core._scalar_reference import ScalarProfileBasedSearcher
+from repro.core.counters import PC_OPS, PC_STRESS, CounterSet
+from repro.core.evaluate import RecordedSpace
+from repro.core.searcher import ProfileBasedSearcher
+
+SCHEMA = "repro.bench_search_overhead"
+VERSION = 1
+
+# Space definitions sized like the paper's regimes (GEMM-full is 205,216).
+SPACE_PARAMS = {
+    "1k": (  # 1024 configs
+        ("bx", tuple(2**i for i in range(8))),
+        ("by", tuple(2**i for i in range(8))),
+        ("unroll", (1, 2, 4, 8)),
+        ("vec", (0, 1)),
+        ("prefetch", (0, 1)),
+    ),
+    "20k": (  # 16*16*10*2*2*2 = 20480 configs
+        ("bx", tuple(2**i for i in range(16))),
+        ("by", tuple(2**i for i in range(16))),
+        ("unroll", tuple(2**i for i in range(10))),
+        ("vec", (0, 1)),
+        ("prefetch", (0, 1)),
+        ("double_buffer", (0, 1)),
+    ),
+    "200k": (  # 36*36*10*2*2*2*2 = 207360 configs (paper max: 205,216)
+        ("bx", tuple(2**i for i in range(36))),
+        ("by", tuple(2**i for i in range(36))),
+        ("unroll", tuple(2**i for i in range(10))),
+        ("vec", (0, 1)),
+        ("prefetch", (0, 1)),
+        ("double_buffer", (0, 1)),
+        ("swizzle", (0, 1)),
+    ),
+}
+
+
+def synthetic_recorded(space_key: str, seed: int = 0) -> RecordedSpace:
+    """A deterministic synthetic (runtime, counters) record.
+
+    Ops counters are smooth functions of the feature matrix (so the TP→PC
+    models have structure to learn); stress utilizations are derived from
+    normalized ops; runtime rewards a planted optimum region.
+    """
+    rng = np.random.default_rng(seed)
+    space = TuningSpace(
+        [TuningParameter(n, v) for n, v in SPACE_PARAMS[space_key]],
+        name=f"synthetic_{space_key}")
+    fm = space.feature_matrix
+    n = len(space)
+    col = {p.name: j for j, p in enumerate(space.parameters)}
+    bx = np.log2(np.maximum(fm[:, col["bx"]], 1.0)) + 1.0
+    by = np.log2(np.maximum(fm[:, col["by"]], 1.0)) + 1.0
+    unroll = fm[:, col["unroll"]]
+    vec = fm[:, col["vec"]]
+
+    ops = {
+        "HBM_RD": 1e8 * (1.0 + 8.0 / bx) / (1.0 + vec),
+        "HBM_WR": 2e7 * (1.0 + 4.0 / by),
+        "VMEM_RD": 5e7 * bx * by / 16.0,
+        "VMEM_WR": 2e7 * by,
+        "SPILL_B": np.maximum(0.0, bx * by - 40.0) * 1e6,
+        "MXU_FLOPS": np.full(n, 4e9),
+        "VPU_OPS": 1e7 * unroll,
+        "ISSUE_OPS": 1e7 * (bx + by + unroll),
+        "GRID": 2.0 ** (16.0 - 0.5 * (bx + by)),
+        "VMEM_WS": bx * by * 4096.0,
+    }
+    runtime = (
+        1e-3
+        + 2e-4 * np.abs(bx - 5.0)
+        + 2e-4 * np.abs(by - 4.0)
+        + 1e-4 * (1.0 - vec)
+        + 5e-5 * np.abs(unroll - 4.0)
+        + 1e-4 * rng.random(n)
+    )
+    # stress utilizations in [0, 1], loosely proportional to the ops mix
+    def util(x):
+        x = np.asarray(x, dtype=np.float64)
+        return x / (x.max() or 1.0)
+
+    stress = {
+        "HBM_U": util(ops["HBM_RD"] + ops["HBM_WR"]),
+        "VMEM_U": util(ops["VMEM_RD"] + ops["VMEM_WR"]),
+        "CMEM_U": np.full(n, 0.05),
+        "ICI_U": np.zeros(n),
+        "MXU_U": util(ops["MXU_FLOPS"] / runtime),
+        "VPU_U": util(ops["VPU_OPS"] / runtime),
+        "TRANS_U": np.zeros(n),
+        "ISSUE_U": util(ops["ISSUE_OPS"] / runtime),
+        "CORE_E": np.minimum(1.0, ops["GRID"] / 256.0),
+        "LANE_E": np.clip(1.0 - 2.0 / (bx * by), 0.1, 1.0),
+        "VMEM_OCC": np.minimum(1.0, ops["VMEM_WS"] / 2**27),
+    }
+    op_names = list(ops)
+    op_cols = np.stack([ops[k] for k in op_names], axis=1)
+    st_names = list(stress)
+    st_cols = np.stack([stress[k] for k in st_names], axis=1)
+    counters: List[CounterSet] = []
+    for i in range(n):
+        counters.append(CounterSet(
+            ops=dict(zip(op_names, op_cols[i].tolist())),
+            stress=dict(zip(st_names, st_cols[i].tolist())),
+            runtime=float(runtime[i]),
+        ))
+    return RecordedSpace(space=space, runtimes=runtime, counters=counters,
+                         hw=SPECS["tpu_v5e"], input_tag=f"synth_{space_key}")
+
+
+def _make_model(kind: str, rec: RecordedSpace, train_cap: int = 4096):
+    if kind == "exact":
+        return ExactCounterModel(rec.space, rec.ops_list())
+    if kind == "tree":
+        rng = np.random.default_rng(0)
+        idxs = (np.arange(len(rec.space)) if len(rec.space) <= train_cap
+                else rng.choice(len(rec.space), size=train_cap, replace=False))
+        cfgs = [rec.space[int(i)] for i in idxs]
+        ops = [rec.counters[int(i)].ops for i in idxs]
+        return DecisionTreeModel(rec.space, cfgs, ops, rng=rng)
+    raise ValueError(f"unknown model kind {kind!r}")
+
+
+def _time_engine(factory, rec: RecordedSpace, steps: int, repeats: int
+                 ) -> Dict[str, float]:
+    totals = []
+    for rep in range(repeats):
+        searcher = factory(rep)
+        ev = ReplayEvaluator(rec)
+        t0 = time.perf_counter()
+        run_search(searcher, ev, steps)
+        totals.append(time.perf_counter() - t0)
+        assert ev.steps == steps, (ev.steps, steps)
+    # median is the steady-state number: with repeats >= 3 it excludes the
+    # one cold repetition that builds the shared prediction matrix (with
+    # repeats == 2 it averages cold and warm — cold_total_s tells them apart)
+    median_total = float(np.median(totals))
+    return {
+        "total_s": median_total,
+        "per_step_ms": median_total / steps * 1e3,
+        "mean_total_s": float(np.mean(totals)),
+        "cold_total_s": float(totals[0]),
+    }
+
+
+def run_benchmark(spaces, models, steps, repeats, ceiling_s=None,
+                  min_speedup=None, seed=0) -> Dict:
+    cores = SPECS["tpu_v5e"].cores
+    rows = []
+    violations = []
+    for space_key in spaces:
+        t0 = time.perf_counter()
+        rec = synthetic_recorded(space_key, seed=seed)
+        setup_s = time.perf_counter() - t0
+        print(f"[{space_key}] {len(rec.space)} configs "
+              f"(setup {setup_s:.1f}s)")
+        for kind in models:
+            model = _make_model(kind, rec)
+            engines = {
+                "scalar": lambda s: ScalarProfileBasedSearcher(
+                    rec.space, model=model, cores=cores, seed=s),
+                "vectorized": lambda s: ProfileBasedSearcher(
+                    rec.space, model=model, cores=cores, seed=s),
+            }
+            row = {"space": space_key, "n_configs": len(rec.space),
+                   "model": kind, "steps": steps, "repeats": repeats}
+            for name, factory in engines.items():
+                row[name] = _time_engine(factory, rec, steps, repeats)
+                print(f"  {kind:6s} {name:11s} "
+                      f"{row[name]['per_step_ms']:9.3f} ms/step "
+                      f"(total {row[name]['total_s']:.3f}s)")
+                if ceiling_s is not None and row[name]["total_s"] > ceiling_s:
+                    violations.append(
+                        f"{space_key}/{kind}/{name}: "
+                        f"{row[name]['total_s']:.1f}s > {ceiling_s}s")
+            row["speedup"] = (row["scalar"]["total_s"]
+                              / row["vectorized"]["total_s"])
+            print(f"  {kind:6s} speedup     {row['speedup']:9.1f}x")
+            if min_speedup is not None and row["speedup"] < min_speedup:
+                # the binding regression guard: the scalar/vectorized RATIO
+                # is contention-independent, so a reintroduced O(n²) scan or
+                # a silent fallback to the scalar path fails even on noisy
+                # CI runners where an absolute wall clock cannot bind
+                violations.append(
+                    f"{space_key}/{kind}: speedup {row['speedup']:.1f}x "
+                    f"< required {min_speedup:.1f}x")
+            rows.append(row)
+    speedup_20k = next((r["speedup"] for r in rows
+                        if r["space"] == "20k" and r["model"] == "exact"),
+                       None)
+    return {
+        "schema": SCHEMA,
+        "version": VERSION,
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "host": {"python": platform.python_version(),
+                 "numpy": np.__version__,
+                 "machine": platform.machine()},
+        "rows": rows,
+        "speedup_20k_exact": speedup_20k,
+        "meets_20x_target": (speedup_20k is not None and speedup_20k >= 20.0),
+        "violations": violations,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--spaces", default="1k,20k,200k")
+    ap.add_argument("--models", default="exact,tree")
+    ap.add_argument("--steps", type=int, default=60,
+                    help="empirical-test budget per search")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_search_overhead.json")
+    ap.add_argument("--ceiling-s", type=float, default=None,
+                    help="fail (exit 1) if any engine's median total "
+                    "(total_s) exceeds this wall-clock — absolute backstop "
+                    "against hangs")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail (exit 1) if any row's scalar/vectorized "
+                    "speedup falls below this ratio — the binding, "
+                    "contention-independent CI regression guard")
+    args = ap.parse_args(argv)
+    spaces = [s for s in args.spaces.split(",") if s]
+    unknown = [s for s in spaces if s not in SPACE_PARAMS]
+    if unknown:
+        ap.error(f"unknown spaces {unknown}; choose from "
+                 f"{sorted(SPACE_PARAMS)}")
+    models = [m for m in args.models.split(",") if m]
+
+    result = run_benchmark(spaces, models, args.steps, args.repeats,
+                           ceiling_s=args.ceiling_s,
+                           min_speedup=args.min_speedup)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"\nwrote {args.out}")
+    if result["speedup_20k_exact"] is not None:
+        print(f"20k exact-model speedup: "
+              f"{result['speedup_20k_exact']:.1f}x "
+              f"(target >= 20x: "
+              f"{'PASS' if result['meets_20x_target'] else 'FAIL'})")
+    if result["violations"]:
+        print("PERF GUARD VIOLATED:\n  " + "\n  ".join(result["violations"]),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,13 @@
 """Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
-sweep records (baseline + optimized)."""
+sweep records (baseline + optimized), plus a §Kernel-coverage table discovered
+through the registry (``repro.kernels.registry.BENCHMARKS``).
+
+Usage (from the repo root):
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments [--kernels-only]
+"""
+import argparse
 import json
-import sys
 
 
 def load(path):
@@ -19,11 +25,38 @@ def gib(x):
     return f"{x / 2**30:.2f}"
 
 
+def kernel_table():
+    """Tuning-space coverage per registered kernel benchmark — discovered
+    lazily via the decorator-based registry, so a new kernel package shows
+    up here without touching this script."""
+    from repro.kernels.registry import BENCHMARKS
+
+    print("### Kernel benchmark coverage (registry-discovered)\n")
+    print("| benchmark | configs | parameters | binary | inputs |")
+    print("|---|---|---|---|---|")
+    for name in BENCHMARKS:
+        bm = BENCHMARKS[name]
+        sp = bm.make_space()
+        params = ", ".join(
+            f"{p.name}({len(p.values)})" for p in sp.parameters)
+        print(f"| {name} | {len(sp)} | {params} "
+              f"| {len(sp.binary_parameters)} | {len(bm.inputs)} |")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels-only", action="store_true",
+                    help="print only the registry-discovered kernel table")
+    args = ap.parse_args()
+
+    kernel_table()
+    if args.kernels_only:
+        return
+
     base = load("dryrun_results.jsonl")
     opt = load("dryrun_results_opt.jsonl")
 
-    print("### Dry-run table (per device; single = 16x16/256 chips, "
+    print("\n### Dry-run table (per device; single = 16x16/256 chips, "
           "multi = 2x16x16/512 chips)\n")
     print("| arch | shape | mesh | status | args GiB | temp GiB | "
           "GFLOP/dev | coll GB/chip | compile s |")

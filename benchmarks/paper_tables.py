@@ -60,29 +60,15 @@ def recorded_gemm_full(hw: str) -> RecordedSpace:
                         SPECS[hw])
 
 
-class _Precomputed:
-    """Model wrapper with all predictions materialized once (the searcher is
-    re-instantiated per repetition; predictions are repetition-invariant)."""
-
-    def __init__(self, model, space):
-        self._by_index = {id(space[i]): model.predict(space[i])
-                          for i in range(len(space))}
-        self._space = space
-
-    def predict(self, cfg):
-        got = self._by_index.get(id(cfg))
-        if got is None:           # cfg dict not from this space instance
-            got = self._by_index[id(self._space[self._space.index_of(cfg)])]
-        return got
-
-
 @functools.lru_cache(maxsize=None)
 def _tree_model_pre(bench: str, model_hw: str, tune_hw: str,
                     input_key: Optional[str] = None,
                     model_input: Optional[str] = None):
-    model = train_model(recorded(bench, model_hw, model_input or input_key),
-                        kind="tree")
-    return _Precomputed(model, recorded(bench, tune_hw, input_key).space)
+    # no precompute wrapper needed: the searchers score against the
+    # model-keyed prediction matrix (repro.core.model.prediction_matrix),
+    # which is materialized once and shared across all repetitions
+    return train_model(recorded(bench, model_hw, model_input or input_key),
+                       kind="tree")
 
 
 def _fmt_row(name, cells, w=14):
@@ -203,9 +189,7 @@ def fig_convergence(reps: int = 60):
     # Fig. 8 analog: GEMM-full searched with the model from the REDUCED
     # GEMM space (<3% of configurations, fewer dims)
     rec_full = recorded_gemm_full("tpu_v5e")
-    model_small = _Precomputed(
-        train_model(recorded("matmul", "tpu_v4"), kind="tree"),
-        rec_full.space)
+    model_small = train_model(recorded("matmul", "tpu_v4"), kind="tree")
     grid = np.array([5.0, 10.0, 20.0, 40.0, 80.0])
     for label, factory in (
         ("profile", _searcher_factory("profile", rec_full.space,
@@ -250,14 +234,14 @@ def table9_cross_hw_starchart(reps: int = 40):
         rec_a = recorded(bench, "tpu_v4")
         thresh = rec_b.best_runtime * 1.1
         # Starchart: train runtime tree on hw A, walk predictions on hw B
-        from repro.core.model import _build_tree, _tree_predict
-        X = np.array([rec_a.space.vectorize(c) for c in rec_a.space])
+        from repro.core.model import _build_tree, _tree_predict_batch
+        X = rec_a.space.feature_matrix
         sc_steps = []
         for rep in range(reps):
             rngl = np.random.default_rng(rep)
             idx = rngl.permutation(len(rec_a.space))[:200]
             tree = _build_tree(X[idx], rec_a.runtimes[idx], 0, 12, 1)
-            order = np.argsort([_tree_predict(tree, x) for x in X])
+            order = np.argsort(_tree_predict_batch(tree, X))
             ev = ReplayEvaluator(rec_b)
             for i in order:
                 ev.measure(int(i))

@@ -18,7 +18,7 @@ from repro.core.evaluate import (CostModelEvaluator, FunctionEvaluator,
 from repro.core.hwspec import PORTABILITY_SET, PRODUCTION, SPECS, HardwareSpec
 from repro.core.model import (DecisionTreeModel, ExactCounterModel,
                               QuadraticRegressionModel,
-                              deliberate_training_sample)
+                              deliberate_training_sample, prediction_matrix)
 from repro.core.reaction import compute_delta_pc
 from repro.core.searcher import (SEARCHERS, BasinHoppingSearcher,
                                  ProfileBasedSearcher, ProfileLocalSearcher,
@@ -38,7 +38,7 @@ __all__ = [
     "run_search",
     "run_search_experiment", "steps_to_well_performing",
     "train_model", "train_model_deliberate", "deliberate_training_sample",
-    "powers_of_two",
+    "powers_of_two", "prediction_matrix",
     "BasinHoppingSearcher", "Candidate", "Config", "CostModelEvaluator",
     "CounterSet", "DecisionTreeModel", "EvalAccount", "Evaluator",
     "ExactCounterModel", "FunctionEvaluator", "HardwareSpec", "Observation",

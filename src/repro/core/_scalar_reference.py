@@ -1,0 +1,187 @@
+"""Frozen scalar (pre-vectorization) searcher implementations.
+
+These are verbatim ports of the per-config dict-walking hot path that
+``ProfileBasedSearcher`` / ``ProfileLocalSearcher`` used before the
+array-native scoring engine: ``model.predict`` one config at a time behind a
+dict cache, ``score_configuration`` in a Python loop over the space, and an
+O(n²) neighbourhood scan.
+
+They exist for two reasons and must NOT be "optimized":
+
+* golden equivalence — tests/test_vectorized_golden.py proves the vectorized
+  searchers replay these traces step-for-step at fixed seeds;
+* the overhead baseline — benchmarks/bench_search_overhead.py measures the
+  propose/observe speedup of the vectorized engine against exactly this code.
+
+Not registered in ``SEARCHERS``: internal measurement/verification aids only.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import bottleneck, reaction, scoring
+from repro.core.account import Candidate
+from repro.core.model import TPPCModel
+from repro.core.searcher import ProfileBasedSearcher, Searcher
+from repro.core.tuning_space import TuningSpace
+
+
+def scalar_neighbours(space: TuningSpace, idx: int) -> List[int]:
+    """The original O(n²-ish) full-scan 1-parameter neighbourhood."""
+    base = space[idx]
+    out = []
+    for j, cfg in enumerate(space):
+        if j == idx:
+            continue
+        diff = sum(1 for k in base if base[k] != cfg[k])
+        if diff == 1:
+            out.append(j)
+    return out
+
+
+class ScalarProfileBasedSearcher(Searcher):
+    """Algorithm 1 exactly as implemented before vectorization."""
+
+    name = "profile_scalar_reference"
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        model: Optional[TPPCModel] = None,
+        cores: Optional[int] = None,
+        n: int = 5,
+        inst_reaction: float = reaction.INST_REACTION_DEFAULT,
+        seed: int = 0,
+    ):
+        super().__init__(space, seed)
+        self.model = model
+        self.cores = cores
+        self.n = n
+        self.inst_reaction = inst_reaction
+        self._pred_cache: Dict[int, Dict[str, float]] = {}
+
+    _check_bound = ProfileBasedSearcher._check_bound
+
+    def _predict(self, idx: int) -> Dict[str, float]:
+        if idx not in self._pred_cache:
+            self._pred_cache[idx] = self.model.predict(self.space[idx])
+        return self._pred_cache[idx]
+
+    def _plan(self):
+        self._check_bound()
+        size = len(self.space)
+        evaluated: set = set()
+        c_profile = int(self.rng.integers(size))
+        while True:
+            obs = yield [Candidate(c_profile, profile=True)]
+            pc = obs[0].counters
+            t = pc.runtime
+            evaluated.add(c_profile)
+            b = bottleneck.analyze(pc, cores=self.cores)
+            delta_pc = reaction.compute_delta_pc(b, self.inst_reaction)
+            pc_prof = self._predict(c_profile)
+            raw = np.zeros(size)
+            mask = np.zeros(size, dtype=bool)
+            for k in range(size):
+                if k in evaluated:
+                    continue
+                mask[k] = True
+                raw[k] = scoring.score_configuration(
+                    delta_pc, pc_prof, self._predict(k)
+                )
+            if not mask.any():
+                return
+            weights = scoring.normalize_scores(raw)
+            picks: List[Candidate] = []
+            for _ in range(self.n):
+                if not mask.any():
+                    break
+                sel = scoring.weighted_choice(weights, self.rng, mask)
+                mask[sel] = False
+                picks.append(Candidate(int(sel)))
+            obs = yield picks
+            for o in obs:
+                evaluated.add(o.index)
+                if o.runtime <= t:
+                    c_profile, t = o.index, o.runtime
+
+
+class ScalarProfileLocalSearcher(ScalarProfileBasedSearcher):
+    """§3.9.1 gradient-following variant as implemented before vectorization."""
+
+    name = "profile_local_scalar_reference"
+
+    def __init__(
+        self,
+        space: TuningSpace,
+        model: Optional[TPPCModel] = None,
+        cores: Optional[int] = None,
+        n: int = 5,
+        local_frac: float = 0.6,
+        inst_reaction: float = reaction.INST_REACTION_DEFAULT,
+        seed: int = 0,
+    ):
+        super().__init__(space, model=model, cores=cores, n=n,
+                         inst_reaction=inst_reaction, seed=seed)
+        self.local_frac = local_frac
+        self._nbrs: Dict[int, list] = {}
+
+    def _neighbours(self, idx: int) -> list:
+        if idx not in self._nbrs:
+            self._nbrs[idx] = scalar_neighbours(self.space, idx)
+        return self._nbrs[idx]
+
+    def _plan(self):
+        self._check_bound()
+        size = len(self.space)
+        evaluated: set = set()
+        c_profile = int(self.rng.integers(size))
+        while True:
+            obs = yield [Candidate(c_profile, profile=True)]
+            pc = obs[0].counters
+            t = pc.runtime
+            evaluated.add(c_profile)
+            b = bottleneck.analyze(pc, cores=self.cores)
+            delta_pc = reaction.compute_delta_pc(b, self.inst_reaction)
+            pc_prof = self._predict(c_profile)
+
+            raw = np.zeros(size)
+            mask = np.zeros(size, dtype=bool)
+            for k in range(size):
+                if k in evaluated:
+                    continue
+                mask[k] = True
+                raw[k] = scoring.score_configuration(
+                    delta_pc, pc_prof, self._predict(k))
+            if not mask.any():
+                return
+            weights = scoring.normalize_scores(raw)
+
+            n_local = int(round(self.n * self.local_frac))
+            nbrs = [j for j in self._neighbours(c_profile)
+                    if j not in evaluated]
+            nbrs.sort(key=lambda j: raw[j], reverse=True)
+            local = nbrs[:n_local]
+            for j in local:
+                mask[j] = False
+            if local:
+                obs = yield [Candidate(int(j)) for j in local]
+                for o in obs:
+                    evaluated.add(o.index)
+                    if o.runtime <= t:
+                        c_profile, t = o.index, o.runtime
+            picks: List[Candidate] = []
+            for _ in range(self.n - min(n_local, len(nbrs))):
+                if not mask.any():
+                    break
+                sel = scoring.weighted_choice(weights, self.rng, mask)
+                mask[sel] = False
+                picks.append(Candidate(int(sel)))
+            if picks:
+                obs = yield picks
+                for o in obs:
+                    evaluated.add(o.index)
+                    if o.runtime <= t:
+                        c_profile, t = o.index, o.runtime

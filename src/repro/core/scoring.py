@@ -15,7 +15,7 @@ predicted change matches the required direction.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -45,6 +45,44 @@ def score_configuration(
         if p == 0.0 or c == 0.0:
             continue  # outside PC_used
         s += dpc * (c - p) / (c + p)
+    return s
+
+
+def score_space(
+    delta_pc: Dict[str, float],
+    pc_profile: np.ndarray,
+    pred_matrix: np.ndarray,
+    counter_index: Mapping[str, int],
+    pc_used_mask: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Eq. 16 for EVERY configuration at once (Algorithm 1 l.7).
+
+    ``pred_matrix`` is a model's ``predict_matrix`` output (n_configs ×
+    n_counters, columns named by ``counter_index``), ``pc_profile`` the row of
+    the profiled configuration, and ``pc_used_mask`` an optional precomputed
+    ``pred_matrix != 0`` (the PC_used membership — it only depends on the
+    model, so searchers compute it once per search, not per profiling step).
+
+    Accumulates per counter in ``delta_pc`` iteration order with masked
+    contributions forced to 0.0, so the result is bit-for-bit what a
+    ``score_configuration`` loop over the space produces — the vectorized
+    searcher replays the scalar searcher's traces exactly.
+    """
+    if pc_used_mask is None:
+        pc_used_mask = pred_matrix != 0.0
+    s = np.zeros(pred_matrix.shape[0], dtype=np.float64)
+    for name, dpc in delta_pc.items():
+        if dpc == 0.0:
+            continue
+        j = counter_index.get(name)
+        if j is None:
+            continue  # counter not modeled: prediction 0 -> outside PC_used
+        p = float(pc_profile[j])
+        if p == 0.0:
+            continue
+        c = pred_matrix[:, j]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            s += np.where(pc_used_mask[:, j], dpc * (c - p) / (c + p), 0.0)
     return s
 
 
@@ -94,4 +132,11 @@ def weighted_choice(
         if idxs.size == 0:
             raise RuntimeError("no unexplored configurations left")
         return int(rng.choice(idxs))
-    return int(rng.choice(len(w), p=w / tot))
+    # inlined ``rng.choice(len(w), p=w / tot)``: identical arithmetic and
+    # identical rng-stream consumption (one ``random()`` draw), minus the
+    # per-call probability re-validation — this runs once per biased step
+    # over the whole space, so the O(n) constant matters.  Equivalence with
+    # Generator.choice is pinned by tests/test_vectorized_golden.py.
+    cdf = (w / tot).cumsum()
+    cdf /= cdf[-1]
+    return min(int(cdf.searchsorted(rng.random(), side="right")), len(w) - 1)

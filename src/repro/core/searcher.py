@@ -40,7 +40,8 @@ import numpy as np
 
 from repro.core import bottleneck, reaction, scoring
 from repro.core.account import Candidate, Observation
-from repro.core.model import TPPCModel, _build_tree, _tree_predict
+from repro.core.model import (TPPCModel, _build_tree, _tree_predict_batch,
+                              prediction_matrix)
 from repro.core.tuning_space import TuningSpace
 
 # String-keyed registry of all searcher classes (the public lookup table).
@@ -220,13 +221,25 @@ class ProfileBasedSearcher(Searcher):
         self.cores = cores
         self.n = n
         self.inst_reaction = inst_reaction
-        # model predictions are config-indexed and reused across iterations
-        self._pred_cache: Dict[int, Dict[str, float]] = {}
+        # (matrix, name->column, PC_used mask) — built lazily (the model may
+        # be bound after construction) and keyed on the model identity
+        self._pred = None
+        self._pred_model = None
 
-    def _predict(self, idx: int) -> Dict[str, float]:
-        if idx not in self._pred_cache:
-            self._pred_cache[idx] = self.model.predict(self.space[idx])
-        return self._pred_cache[idx]
+    def _prediction(self):
+        """The model's whole-space prediction matrix, computed once.
+
+        Delegates to the module-level ``prediction_matrix`` cache, so the
+        expensive part is shared across searcher instances (the experiment
+        harness constructs one searcher per repetition); the per-search state
+        here only re-derives the column index and PC_used mask.
+        """
+        if self._pred is None or self._pred_model is not self.model:
+            names, matrix = prediction_matrix(self.model, self.space)
+            cols = {name: j for j, name in enumerate(names)}
+            self._pred = (matrix, cols, matrix != 0.0)
+            self._pred_model = self.model
+        return self._pred
 
     def _check_bound(self) -> None:
         """model and cores may be bound after construction (the registry's
@@ -245,29 +258,26 @@ class ProfileBasedSearcher(Searcher):
     def _plan(self):
         self._check_bound()
         size = len(self.space)
-        evaluated: set = set()
+        pred, cols, used = self._prediction()
+        evaluated = np.zeros(size, dtype=bool)
         c_profile = int(self.rng.integers(size))
         while True:
             # line 3: empirical measurement with performance counters
             obs = yield [Candidate(c_profile, profile=True)]
             pc = obs[0].counters
             t = pc.runtime
-            evaluated.add(c_profile)
+            evaluated[c_profile] = True
             # line 4: bottleneck analysis (on the autotuning architecture)
             b = bottleneck.analyze(pc, cores=self.cores)
             # line 5: required counter changes
             delta_pc = reaction.compute_delta_pc(b, self.inst_reaction)
-            # lines 6-14: score all unexplored configurations via the model
-            pc_prof = self._predict(c_profile)
-            raw = np.zeros(size)
-            mask = np.zeros(size, dtype=bool)
-            for k in range(size):
-                if k in evaluated:
-                    continue
-                mask[k] = True
-                raw[k] = scoring.score_configuration(
-                    delta_pc, pc_prof, self._predict(k)
-                )
+            # lines 6-14: score the whole space in one array pass (the
+            # prediction matrix is fixed; only the ΔPC re-weighting changes
+            # per profiling step)
+            raw = scoring.score_space(delta_pc, pred[c_profile], pred, cols,
+                                      used)
+            raw[evaluated] = 0.0
+            mask = ~evaluated
             if not mask.any():
                 return
             weights = scoring.normalize_scores(raw)
@@ -281,7 +291,7 @@ class ProfileBasedSearcher(Searcher):
                 picks.append(Candidate(int(sel)))
             obs = yield picks
             for o in obs:
-                evaluated.add(o.index)
+                evaluated[o.index] = True
                 if o.runtime <= t:
                     c_profile, t = o.index, o.runtime
 
@@ -298,14 +308,11 @@ class BasinHoppingSearcher(Searcher):
                  temperature: float = 1.0):
         super().__init__(space, seed)
         self.temperature = temperature
-        # neighbour lists are O(N^2) to build; cache lazily per index
-        self._nbrs: Dict[int, list] = {}
         self._known: Dict[int, float] = {}
 
     def _neighbours(self, idx: int) -> list:
-        if idx not in self._nbrs:
-            self._nbrs[idx] = self.space.neighbours(idx)
-        return self._nbrs[idx]
+        # the space's slot-hash index makes this O(degree) per query
+        return self.space.neighbours(idx)
 
     def _measure_g(self, idx: int):
         """Sub-plan: measure ``idx`` once, replaying cached runtimes."""
@@ -398,7 +405,7 @@ class StarchartSearcher(Searcher):
 
     def _plan(self):
         size = len(self.space)
-        X = np.array([self.space.vectorize(c) for c in self.space])
+        X = self.space.feature_matrix
         order = self.rng.permutation(size)
         n_val = min(self.n_validation, max(1, size // 4))
         val_idx = order[:n_val]
@@ -422,7 +429,7 @@ class StarchartSearcher(Searcher):
             tree = _build_tree(
                 X[np.array(train_idx)], np.asarray(y_train), 0, 12, 1
             )
-            pred = np.array([_tree_predict(tree, X[i]) for i in val_idx])
+            pred = _tree_predict_batch(tree, X[val_idx])
             rel_err = np.abs(pred - y_val) / np.maximum(y_val, 1e-12)
             if float(np.median(rel_err)) < self.target_med_err:
                 break
@@ -431,7 +438,7 @@ class StarchartSearcher(Searcher):
             return
         # prediction-ordered walk over the unexplored space
         explored = set(int(i) for i in val_idx) | set(train_idx)
-        pred_all = np.array([_tree_predict(tree, x) for x in X])
+        pred_all = _tree_predict_batch(tree, X)
         walk = [Candidate(int(i)) for i in np.argsort(pred_all)
                 if int(i) not in explored]
         if walk:
@@ -469,51 +476,38 @@ class ProfileLocalSearcher(Searcher):
         self.n = n
         self.local_frac = local_frac
         self.inst_reaction = inst_reaction
-        self._pred_cache: Dict[int, Dict[str, float]] = {}
-        self._nbrs: Dict[int, list] = {}
+        self._pred = None
+        self._pred_model = None
 
     _check_bound = ProfileBasedSearcher._check_bound
-
-    def _predict(self, idx: int) -> Dict[str, float]:
-        if idx not in self._pred_cache:
-            self._pred_cache[idx] = self.model.predict(self.space[idx])
-        return self._pred_cache[idx]
-
-    def _neighbours(self, idx: int) -> list:
-        if idx not in self._nbrs:
-            self._nbrs[idx] = self.space.neighbours(idx)
-        return self._nbrs[idx]
+    _prediction = ProfileBasedSearcher._prediction
 
     def _plan(self):
         self._check_bound()
         size = len(self.space)
-        evaluated: set = set()
+        pred, cols, used = self._prediction()
+        evaluated = np.zeros(size, dtype=bool)
         c_profile = int(self.rng.integers(size))
         while True:
             obs = yield [Candidate(c_profile, profile=True)]
             pc = obs[0].counters
             t = pc.runtime
-            evaluated.add(c_profile)
+            evaluated[c_profile] = True
             b = bottleneck.analyze(pc, cores=self.cores)
             delta_pc = reaction.compute_delta_pc(b, self.inst_reaction)
-            pc_prof = self._predict(c_profile)
 
-            raw = np.zeros(size)
-            mask = np.zeros(size, dtype=bool)
-            for k in range(size):
-                if k in evaluated:
-                    continue
-                mask[k] = True
-                raw[k] = scoring.score_configuration(
-                    delta_pc, pc_prof, self._predict(k))
+            raw = scoring.score_space(delta_pc, pred[c_profile], pred, cols,
+                                      used)
+            raw[evaluated] = 0.0
+            mask = ~evaluated
             if not mask.any():
                 return
             weights = scoring.normalize_scores(raw)
 
             n_local = int(round(self.n * self.local_frac))
             # local phase: best-scoring unexplored neighbours (gradient step)
-            nbrs = [j for j in self._neighbours(c_profile)
-                    if j not in evaluated]
+            nbrs = [j for j in self.space.neighbours(c_profile)
+                    if not evaluated[j]]
             nbrs.sort(key=lambda j: raw[j], reverse=True)
             local = nbrs[:n_local]
             for j in local:
@@ -521,7 +515,7 @@ class ProfileLocalSearcher(Searcher):
             if local:
                 obs = yield [Candidate(int(j)) for j in local]
                 for o in obs:
-                    evaluated.add(o.index)
+                    evaluated[o.index] = True
                     if o.runtime <= t:
                         c_profile, t = o.index, o.runtime
             # global phase: score-biased sampling (escape hatch)
@@ -535,6 +529,6 @@ class ProfileLocalSearcher(Searcher):
             if picks:
                 obs = yield picks
                 for o in obs:
-                    evaluated.add(o.index)
+                    evaluated[o.index] = True
                     if o.runtime <= t:
                         c_profile, t = o.index, o.runtime

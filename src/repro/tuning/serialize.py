@@ -104,12 +104,15 @@ def model_to_dict(model: TPPCModel, space: Optional[TuningSpace] = None) -> Dict
                            for name, v in model._fallback.items()}
     elif isinstance(model, ExactCounterModel):
         out["kind"] = "exact"
-        # counters are ordered by the model's own space — pair configs from
-        # the same enumeration, not the (possibly different) session space
+        # pair configs and counters from the same enumeration: the bound
+        # space's.  ``predict_index`` routes through the space→record remap,
+        # so re-serializing a ``from_pairs`` model whose space enumerates
+        # differently from the original artifact stays aligned (writing the
+        # raw record list here would silently shuffle the pairs).
         out["configs"] = [model.space[i] for i in range(len(model.space))]
         out["counters"] = [
-            {name: float(v) for name, v in cs.items()}
-            for cs in model._by_index
+            {name: float(v) for name, v in model.predict_index(i).items()}
+            for i in range(len(model.space))
         ]
     else:
         raise TypeError(f"cannot serialize model type {type(model).__name__}")

@@ -148,6 +148,18 @@ class TuningSession:
             self.model = model_from_dict(json.load(f), space=self.space)
         return self.model
 
+    def prediction_matrix(self):
+        """(counter_names, n_configs × n_counters) predictions of the
+        session's model over its space — the array the profile searchers
+        score against, shared/memoized per (model, space).  Useful for
+        inspecting what the portable model believes about the space without
+        running a search."""
+        if self.model is None:
+            raise ValueError("no model; call train() or load_model() first")
+        from repro.core.model import prediction_matrix
+
+        return prediction_matrix(self.model, self.space)
+
     # =========================================================================
     # Phase 2 — autotuning (on the hardware/input of interest)
     # =========================================================================

@@ -75,6 +75,70 @@ def test_property_size_product(na, nb):
         assert all(isinstance(x, float) for x in v)
 
 
+def test_non_numeric_values_stay_supported():
+    """The space is generic over what a parameter means (docstring claim):
+    values float() cannot convert encode as their declared index."""
+    sp = TuningSpace([TuningParameter("shard", ((1, 2), (2, 1), (4, 1))),
+                      TuningParameter("b", (0, 1))])
+    assert len(sp) == 6
+    assert sp.feature_matrix[:, 0].tolist() == [0.0, 0.0, 1.0, 1.0, 2.0, 2.0]
+    for i, cfg in enumerate(sp):
+        assert sp.index_of(cfg) == i
+    for nb in sp.neighbours(0):
+        diff = sum(1 for k in sp[0] if sp[0][k] != sp[nb][k])
+        assert diff == 1
+
+
+def test_tuple_valued_space_survives_json_round_trip():
+    """JSON turns tuple values into lists (unhashable): the space must still
+    construct, index and enumerate neighbours after deserialization."""
+    import json
+
+    from repro.tuning.serialize import space_from_dict, space_to_dict
+    sp = TuningSpace([TuningParameter("shard", ((1, 2), (2, 1), (4, 1))),
+                      TuningParameter("b", (0, 1))])
+    sp2 = space_from_dict(json.loads(json.dumps(space_to_dict(sp))))
+    assert len(sp2) == len(sp)
+    for i, cfg in enumerate(sp2):
+        assert sp2.index_of(cfg) == i
+    assert sp2.feature_matrix.tolist() == sp.feature_matrix.tolist()
+    assert [sp2.neighbours(i) for i in range(len(sp2))] \
+        == [sp.neighbours(i) for i in range(len(sp))]
+
+
+def test_index_of_rejects_encoding_coincidence():
+    """A numeric 0 must not alias the 0th declared string value."""
+    sp = TuningSpace([TuningParameter("s", ("a", "b"))])
+    assert sp.index_of({"s": "a"}) == 0
+    with pytest.raises(KeyError):
+        sp.index_of({"s": 0})
+
+
+def test_mixed_string_numeric_parameter_values():
+    """A parameter mixing strings and numerics must keep exact raw-value
+    index/neighbour semantics even though 'b' and 1 share a feature code."""
+    sp = TuningSpace([TuningParameter("x", ("a", "b", 1)),
+                      TuningParameter("y", (0, 1))])
+    for i, cfg in enumerate(sp):
+        assert sp.index_of(dict(cfg)) == i
+    for idx in range(len(sp)):
+        nbrs = sp.neighbours(idx)
+        assert len(nbrs) == len(set(nbrs))  # no duplicates
+        for nb in nbrs:
+            diff = sum(1 for k in sp[idx] if sp[idx][k] != sp[nb][k])
+            assert diff == 1
+
+
+def test_feature_matrix_and_subspace_keys_align():
+    sp = TuningSpace([TuningParameter("a", (1, 2, 3)),
+                      TuningParameter("flag", (0, 1)),
+                      TuningParameter("s", ("x", "y"))])
+    assert sp.vectorize_configs(sp.configs).tolist() \
+        == sp.feature_matrix.tolist()
+    assert sp.subspace_keys() == [sp.subspace_key(c) for c in sp]
+    assert sp.subspace_key_matrix.shape == (len(sp), 1)
+
+
 def test_powers_of_two():
     assert powers_of_two(8, 64) == (8, 16, 32, 64)
 

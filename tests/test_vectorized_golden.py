@@ -1,0 +1,325 @@
+"""Golden equivalence: the array-native scoring engine vs the scalar path.
+
+The vectorization PR must change SPEED only.  This suite pins:
+
+* ``predict_matrix`` == per-config ``predict`` for all three model families;
+* ``score_space`` == a ``score_configuration`` loop, bit for bit;
+* the inlined weighted draw == ``Generator.choice``, same rng stream;
+* vectorized ``ProfileBasedSearcher``/``ProfileLocalSearcher`` traces ==
+  the frozen scalar implementations (``repro.core._scalar_reference``),
+  step for step at fixed seeds;
+* the array-backed space (O(1) ``index_of``, hashed ``neighbours``,
+  vectorized deliberate sampling) == the original full scans.
+
+Runs on a jax-free synthetic recorded space so it stays fast in CI.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (DecisionTreeModel, ExactCounterModel,
+                        QuadraticRegressionModel, ReplayEvaluator, SPECS,
+                        TuningParameter, TuningSpace,
+                        deliberate_training_sample, prediction_matrix,
+                        run_search)
+from repro.core import counters as C
+from repro.core import scoring
+from repro.core._scalar_reference import (ScalarProfileBasedSearcher,
+                                          ScalarProfileLocalSearcher,
+                                          scalar_neighbours)
+from repro.core.counters import CounterSet, PC_OPS, PC_STRESS
+from repro.core.evaluate import RecordedSpace
+from repro.core.searcher import ProfileBasedSearcher, ProfileLocalSearcher
+
+CORES = SPECS["tpu_v5e"].cores
+
+
+def make_space():
+    return TuningSpace([
+        TuningParameter("bx", (1, 2, 4, 8, 16, 32)),
+        TuningParameter("by", (1, 2, 4, 8)),
+        TuningParameter("unroll", (1, 2, 4)),
+        TuningParameter("layout", ("row", "col")),
+        TuningParameter("vec", (0, 1)),
+    ], constraints=[lambda c: c["bx"] * c["by"] <= 128])
+
+
+@pytest.fixture(scope="module")
+def recorded():
+    rng = np.random.default_rng(7)
+    sp = make_space()
+    counters, runtimes = [], np.empty(len(sp))
+    for i, cfg in enumerate(sp):
+        scale = 2.0 if cfg["vec"] else 1.0
+        ops = {
+            C.HBM_RD: scale * (1e6 / cfg["bx"] + 1e4 * cfg["by"]),
+            C.HBM_WR: 1e5 + 1e3 * cfg["unroll"],
+            C.VMEM_RD: 1e5 * cfg["bx"] * cfg["by"],
+            C.MXU_FLOPS: 4e8,
+            C.VPU_OPS: 1e5 * cfg["unroll"],
+            C.ISSUE_OPS: 1e5 * (cfg["bx"] + cfg["by"]),
+            C.GRID: float(4096 // (cfg["bx"] * cfg["by"])),
+            C.VMEM_WS: 4096.0 * cfg["bx"] * cfg["by"],
+        }
+        stress = {k: float(rng.random()) for k in PC_STRESS}
+        rt = float(1e-3 + 1e-4 * abs(cfg["bx"] - 8) + 1e-4 * rng.random())
+        counters.append(CounterSet(ops=ops, stress=stress, runtime=rt))
+        runtimes[i] = rt
+    return RecordedSpace(space=sp, runtimes=runtimes, counters=counters,
+                         hw=SPECS["tpu_v5e"], input_tag="golden_synth")
+
+
+def _models(recorded):
+    sp = recorded.space
+    ops = recorded.ops_list()
+    return {
+        "exact": ExactCounterModel(sp, ops),
+        "tree": DecisionTreeModel(sp, list(sp), ops,
+                                  rng=np.random.default_rng(0)),
+        "quadratic": QuadraticRegressionModel(sp, list(sp), ops),
+    }
+
+
+# =============================================================================
+# predict_matrix == predict, per config per counter
+# =============================================================================
+@pytest.mark.parametrize("kind", ["exact", "tree", "quadratic"])
+def test_predict_matrix_matches_predict(recorded, kind):
+    model = _models(recorded)[kind]
+    sp = recorded.space
+    names, M = prediction_matrix(model, sp)
+    assert M.shape == (len(sp), len(names))
+    for i, cfg in enumerate(sp):
+        d = model.predict(cfg)
+        for j, name in enumerate(names):
+            assert M[i, j] == pytest.approx(d.get(name, 0.0),
+                                            rel=1e-12, abs=1e-12), \
+                (kind, i, name)
+    # tree and exact models are replay-exact, not just close
+    if kind in ("exact", "tree"):
+        for i, cfg in enumerate(sp):
+            d = model.predict(cfg)
+            for j, name in enumerate(names):
+                assert M[i, j] == d.get(name, 0.0)
+
+
+def test_prediction_matrix_is_cached_and_readonly(recorded):
+    model = _models(recorded)["exact"]
+    names1, m1 = prediction_matrix(model, recorded.space)
+    names2, m2 = prediction_matrix(model, recorded.space)
+    assert m1 is m2 and names1 == names2
+    with pytest.raises(ValueError):
+        m1[0, 0] = 1.0
+
+
+def test_minimal_tppc_subclass_still_searches(recorded):
+    """A TPPCModel subclass implementing only predict() (the documented
+    minimal interface) must keep working with the matrix-backed searchers."""
+    from repro.core.model import TPPCModel
+
+    class Minimal(TPPCModel):
+        def __init__(self, inner):
+            self.inner = inner
+
+        def predict(self, cfg):
+            return self.inner.predict(cfg)
+
+    inner = _models(recorded)["exact"]
+    model = Minimal(inner)
+    names, M = prediction_matrix(model, recorded.space)
+    ref_names, ref = prediction_matrix(inner, recorded.space)
+    for name in names:
+        assert np.array_equal(M[:, names.index(name)],
+                              ref[:, ref_names.index(name)])
+    ev = ReplayEvaluator(recorded)
+    run_search(ProfileBasedSearcher(recorded.space, model=model,
+                                    cores=CORES, seed=0), ev, 20)
+    assert ev.steps == 20
+
+
+def test_deliberate_sample_mixed_type_parameter():
+    """Feature codes alias 'b' and 1 — the sample must match raw values."""
+    sp = TuningSpace([TuningParameter("x", ("a", "b", 1, 2, 3)),
+                      TuningParameter("y", (0, 1))])
+    got = deliberate_training_sample(sp, values_per_param=2,
+                                     rng=np.random.default_rng(0))
+    keep = {"a", 3}  # endpoints of the declared list
+    expect = [i for i, cfg in enumerate(sp) if cfg["x"] in keep]
+    assert got == expect
+
+
+def test_prediction_matrix_duck_typed_model(recorded):
+    class Wrapped:  # only .predict — e.g. a third-party surrogate
+        def __init__(self, inner):
+            self.inner = inner
+
+        def predict(self, cfg):
+            return self.inner.predict(cfg)
+
+    model = _models(recorded)["exact"]
+    names, M = prediction_matrix(Wrapped(model), recorded.space)
+    ref_names, ref = prediction_matrix(model, recorded.space)
+    for name in names:
+        j, rj = names.index(name), ref_names.index(name)
+        assert np.array_equal(M[:, j], ref[:, rj])
+
+
+# =============================================================================
+# score_space == score_configuration loop (bitwise)
+# =============================================================================
+@pytest.mark.parametrize("kind", ["exact", "tree", "quadratic"])
+def test_score_space_matches_scalar_loop_bitwise(recorded, kind):
+    model = _models(recorded)[kind]
+    sp = recorded.space
+    names, M = prediction_matrix(model, sp)
+    cols = {n: j for j, n in enumerate(names)}
+    rng = np.random.default_rng(3)
+    for trial in range(5):
+        delta = {k: float(rng.uniform(-1, 1)) for k in PC_OPS}
+        for k in list(delta)[:: 3]:
+            delta[k] = 0.0  # exercise the dpc == 0 skip
+        prof = int(rng.integers(len(sp)))
+        vec = scoring.score_space(delta, M[prof], M, cols)
+        prof_pred = model.predict(sp[prof])
+        for i in range(len(sp)):
+            ref = scoring.score_configuration(delta, prof_pred,
+                                              model.predict(sp[i]))
+            if kind == "quadratic":  # dgemm vs dot: equal to fp round-off
+                assert vec[i] == pytest.approx(ref, rel=1e-12, abs=1e-12)
+            else:
+                assert vec[i] == ref, (trial, i)
+
+
+def test_weighted_choice_replicates_generator_choice():
+    """The inlined cdf draw must stay bit-compatible with rng.choice —
+    identical picks from identical streams (guards numpy-version drift)."""
+    n = 517
+    base = np.random.default_rng(11)
+    weights = base.random(n) * 256.0
+    mask = base.random(n) > 0.2
+    r_ours, r_np = np.random.default_rng(5), np.random.default_rng(5)
+    w = np.where(mask, weights, 0.0)
+    p = w / w.sum()
+    for _ in range(500):
+        ours = scoring.weighted_choice(weights, r_ours, mask)
+        ref = int(r_np.choice(n, p=p))
+        assert ours == ref
+
+
+# =============================================================================
+# searcher traces: vectorized == frozen scalar implementation
+# =============================================================================
+@pytest.mark.parametrize("kind", ["exact", "tree"])
+@pytest.mark.parametrize("budget", [13, 60, 10**9])
+def test_profile_searcher_trace_identical(recorded, kind, budget):
+    model = _models(recorded)[kind]
+    budget = min(budget, len(recorded.space))
+    for seed in range(6):
+        ev_s = ReplayEvaluator(recorded)
+        run_search(ScalarProfileBasedSearcher(
+            recorded.space, model=model, cores=CORES, seed=seed),
+            ev_s, budget)
+        ev_v = ReplayEvaluator(recorded)
+        run_search(ProfileBasedSearcher(
+            recorded.space, model=model, cores=CORES, seed=seed),
+            ev_v, budget)
+        assert ev_s.trace == ev_v.trace, (kind, seed, budget)
+
+
+@pytest.mark.parametrize("kind", ["exact", "tree"])
+def test_profile_local_searcher_trace_identical(recorded, kind):
+    model = _models(recorded)[kind]
+    for seed in range(6):
+        ev_s = ReplayEvaluator(recorded)
+        run_search(ScalarProfileLocalSearcher(
+            recorded.space, model=model, cores=CORES, seed=seed),
+            ev_s, 60)
+        ev_v = ReplayEvaluator(recorded)
+        run_search(ProfileLocalSearcher(
+            recorded.space, model=model, cores=CORES, seed=seed),
+            ev_v, 60)
+        assert ev_s.trace == ev_v.trace, (kind, seed)
+
+
+def test_quadratic_model_steers_both_engines(recorded):
+    """Quadratic predictions differ from the scalar path only at fp
+    round-off (dgemm vs dot) — both engines must still search sanely."""
+    model = _models(recorded)["quadratic"]
+    for seed in range(3):
+        ev_v = ReplayEvaluator(recorded)
+        run_search(ProfileBasedSearcher(
+            recorded.space, model=model, cores=CORES, seed=seed), ev_v, 40)
+        assert ev_v.steps == 40
+        assert ev_v.best_runtime < np.inf
+
+
+# =============================================================================
+# array-backed space == original scans
+# =============================================================================
+def test_feature_matrix_matches_vectorize():
+    sp = make_space()
+    fm = sp.feature_matrix
+    assert fm.shape == (len(sp), len(sp.parameters))
+    for i, cfg in enumerate(sp):
+        assert fm[i].tolist() == sp.vectorize(cfg)
+    with pytest.raises(ValueError):
+        fm[0, 0] = 99.0
+
+
+def test_index_of_matches_linear_scan():
+    sp = make_space()
+    for i, cfg in enumerate(sp):
+        assert sp.index_of(dict(cfg)) == i
+    with pytest.raises(KeyError):
+        sp.index_of({"bx": 3, "by": 1, "unroll": 1, "layout": "row",
+                     "vec": 0})
+    with pytest.raises(KeyError):
+        sp.index_of({"bx": 1})  # wrong key set
+
+
+def test_neighbours_match_full_scan():
+    sp = make_space()
+    for idx in range(len(sp)):
+        assert sp.neighbours(idx) == scalar_neighbours(sp, idx)
+
+
+def test_deliberate_sample_matches_scalar_scan():
+    sp = make_space()
+
+    def scalar_sample(space, values_per_param, seed):
+        rng = np.random.default_rng(seed)
+        keep = {}
+        for p in space.nonbinary_parameters:
+            vals = list(p.values)
+            if len(vals) <= values_per_param:
+                keep[p.name] = set(vals)
+            else:
+                picks = {vals[0], vals[-1]}
+                if values_per_param >= 3:
+                    picks.add(vals[len(vals) // 2])
+                while len(picks) < values_per_param:
+                    picks.add(vals[int(rng.integers(len(vals)))])
+                keep[p.name] = picks
+        return [i for i, cfg in enumerate(space)
+                if all(cfg[n] in keep[n] for n in keep)]
+
+    for vpp in (2, 3):
+        got = deliberate_training_sample(
+            sp, values_per_param=vpp, rng=np.random.default_rng(1))
+        assert got == scalar_sample(sp, vpp, 1)
+
+
+def test_exact_model_from_pairs_shuffled_order(recorded):
+    """from_pairs must remap record order to space order exactly once."""
+    sp = recorded.space
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(sp))
+    configs = [sp[int(i)] for i in perm]
+    counters = [recorded.counters[int(i)].ops for i in perm]
+    model = ExactCounterModel.from_pairs(sp, configs, counters)
+    for i in (0, 5, len(sp) - 1):
+        assert model.predict(sp[i]) == dict(recorded.counters[i].ops)
+        assert model.predict_index(i) == dict(recorded.counters[i].ops)
+    names, M = prediction_matrix(model, sp)
+    j = names.index(C.HBM_RD)
+    expect = [recorded.counters[i].ops[C.HBM_RD] for i in range(len(sp))]
+    assert np.array_equal(M[:, j], np.asarray(expect))
