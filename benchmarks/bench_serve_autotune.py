@@ -1,0 +1,261 @@
+"""Shifting-workload benchmark for the online serving autotuner.
+
+Replays a synthetic serving workload whose shape mix shifts through phases
+(short-prompt/short-gen → long/long → medium), against the deterministic
+``SyntheticServeBackend`` (cost model on a true hardware spec + seeded
+jitter + host overhead the portable model does not know about).  For every
+drift event it compares the drift-triggered online tuner against the oracle
+(exhaustive measurement of every feasible configuration on the same
+calibration wave) and counts live trials; then a SECOND run over the same
+``ConfigStore`` must reach the same configurations with **zero** live trials
+(pure reuse).  Writes ``BENCH_serve_autotune.json``.
+
+Acceptance targets (ISSUE 3): recovery ≥ 90% of oracle throughput within
+≤ 10 live trials per drift event; second run pure reuse.
+
+Usage (from the repo root):
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_autotune \
+        [--out BENCH_serve_autotune.json] [--min-recovery 0.9]
+        [--max-trials 10] [--ticks 6] [--requests 24] [--seed 0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.hwspec import SPECS
+from repro.serve.autotune import (OnlineAutotuner, ServeWorkloadStats,
+                                  ShapeBucketer, SyntheticServeBackend,
+                                  serve_space)
+from repro.serve.engine import Request
+from repro.tuning.store import ConfigStore
+
+SCHEMA = "repro.bench_serve_autotune"
+VERSION = 1
+
+# (mean prompt len, mean max-new) per phase of the shifting workload
+PHASES = ((12, 6), (80, 28), (40, 12))
+TRUE_HW = "tpu_v4"      # the hardware the synthetic backend "is"
+TRAIN_HW = "tpu_v5e"    # the portable model trains on DIFFERENT hardware
+
+
+def make_workload(phases, ticks_per_phase: int, requests_per_tick: int,
+                  bucketer: ShapeBucketer, seed: int) -> List[List[Request]]:
+    """Deterministic request stream: ``ticks_per_phase`` ticks per phase."""
+    rng = np.random.default_rng(seed)
+    stream: List[List[Request]] = []
+    uid = 0
+    for plen_c, new_c in phases:
+        for _ in range(ticks_per_phase):
+            tick = []
+            for _ in range(requests_per_tick):
+                plen = int(np.clip(rng.normal(plen_c, 2.0), 1,
+                                   bucketer.max_prompt))
+                new = int(np.clip(rng.normal(new_c, 1.0), 1,
+                                  bucketer.max_new))
+                tick.append(Request(uid=uid, prompt=np.ones(plen, np.int32),
+                                    max_new_tokens=new))
+                uid += 1
+            stream.append(tick)
+    return stream
+
+
+def oracle_best(backend: SyntheticServeBackend, space, bucketer, bucket,
+                calib) -> Dict:
+    """Exhaustive best over feasible configs on the same calibration wave
+    (out-of-band: does not touch the backend's trial accounting)."""
+    n = len(calib)
+    plen = max(len(r.prompt) for r in calib)
+    new = max(r.max_new_tokens for r in calib)
+    best_rt, best_cfg, feasible = float("inf"), None, 0
+    for i in range(len(space)):
+        cfg = space[i]
+        rt = backend.latency(cfg, n, plen, new)
+        if rt < 1e2:  # feasible
+            feasible += 1
+            if rt < best_rt:
+                best_rt, best_cfg = rt, dict(cfg)
+    return {"runtime_s": best_rt, "config": best_cfg,
+            "feasible_configs": feasible}
+
+
+def run_once(store: ConfigStore, stream, bucketer, stats, seed: int) -> Dict:
+    backend = SyntheticServeBackend(SPECS[TRUE_HW], stats, seed=seed)
+    tuner = OnlineAutotuner(backend, store=store, bucketer=bucketer,
+                            hw=SPECS[TRUE_HW], train_hw=SPECS[TRAIN_HW],
+                            stats=stats, seed=seed)
+    events = []
+    tokens = 0
+    for t, tick in enumerate(stream):
+        _, rep = tuner.serve(tick)
+        tokens += sum(r.max_new_tokens for r in tick)
+        if rep is not None and rep.drift:
+            calib = [r for r in tick
+                     if bucketer.request_bucket(r).key == rep.bucket]
+            calib = calib[: tuner.calib_n] or list(tick)[: tuner.calib_n]
+            bucket = bucketer.request_bucket(calib[0])
+            oracle = oracle_best(backend, tuner.space, bucketer, bucket,
+                                 calib)
+            tuned_rt = backend.latency(
+                rep.config, len(calib),
+                max(len(r.prompt) for r in calib),
+                max(r.max_new_tokens for r in calib))
+            events.append({
+                "tick": t,
+                "bucket": rep.bucket,
+                "reused": rep.reused,
+                "live_trials": rep.live_trials,
+                "config": rep.config,
+                "tuned_runtime_s": tuned_rt,
+                "oracle_runtime_s": oracle["runtime_s"],
+                "oracle_config": oracle["config"],
+                "feasible_configs": oracle["feasible_configs"],
+                # throughput recovery: oracle latency / achieved latency
+                "recovery": oracle["runtime_s"] / tuned_rt,
+            })
+    return {
+        "events": events,
+        "total_live_trials": int(backend.measure_calls),
+        "served_tokens": int(tokens),
+        "virtual_serve_time_s": float(backend.virtual_time),
+        "virtual_tok_per_s": float(tokens / backend.virtual_time)
+        if backend.virtual_time else None,
+    }
+
+
+def run_benchmark(ticks_per_phase: int, requests_per_tick: int, seed: int,
+                  store_path: str, min_recovery: float, max_trials: int
+                  ) -> Dict:
+    bucketer = ShapeBucketer(max_prompt=96, max_new=32)
+    stats = ServeWorkloadStats()
+    space = serve_space()
+    stream = make_workload(PHASES, ticks_per_phase, requests_per_tick,
+                           bucketer, seed)
+
+    store = ConfigStore(store_path)
+    run1 = run_once(store, stream, bucketer, stats, seed)
+    # second run: a FRESH tuner/backend over the SAME persisted store — the
+    # restart scenario; every drift event must be pure reuse
+    store2 = ConfigStore(store_path)
+    run2 = run_once(store2, stream, bucketer, stats, seed)
+
+    recoveries = [e["recovery"] for e in run1["events"]]
+    trials = [e["live_trials"] for e in run1["events"]]
+    same_cfg = all(
+        e2["config"] == e1["config"]
+        for e1, e2 in zip(run1["events"], run2["events"]))
+    summary = {
+        "drift_events_run1": len(run1["events"]),
+        "min_recovery": float(min(recoveries)) if recoveries else None,
+        "max_live_trials_per_event": int(max(trials)) if trials else 0,
+        "run2_total_live_trials": run2["total_live_trials"],
+        "run2_pure_reuse": (run2["total_live_trials"] == 0
+                            and all(e["reused"] for e in run2["events"])),
+        "run2_same_configs": same_cfg,
+        "meets_recovery_target": bool(recoveries
+                                      and min(recoveries) >= min_recovery),
+        "meets_trial_budget": bool(trials and max(trials) <= max_trials),
+    }
+    violations = []
+    if not summary["meets_recovery_target"]:
+        violations.append(
+            f"min recovery {summary['min_recovery']} < {min_recovery}")
+    if not summary["meets_trial_budget"]:
+        violations.append(
+            f"max live trials {summary['max_live_trials_per_event']} "
+            f"> {max_trials}")
+    if not summary["run2_pure_reuse"]:
+        violations.append(
+            f"second run spent {run2['total_live_trials']} live trials "
+            "(expected 0: pure store reuse)")
+    if not same_cfg:
+        violations.append("second run served different configs than run 1")
+    return {
+        "schema": SCHEMA,
+        "version": VERSION,
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "host": {"python": platform.python_version(),
+                 "numpy": np.__version__,
+                 "machine": platform.machine()},
+        "workload": {
+            "phases": [list(p) for p in PHASES],
+            "ticks_per_phase": ticks_per_phase,
+            "requests_per_tick": requests_per_tick,
+            "seed": seed,
+            "bucketer": {"max_prompt": bucketer.max_prompt,
+                         "max_new": bucketer.max_new},
+        },
+        "space": {"name": space.name, "n_configs": len(space),
+                  "parameters": {p.name: list(p.values)
+                                 for p in space.parameters}},
+        "hardware": {"true": TRUE_HW, "model_train": TRAIN_HW},
+        "targets": {"min_recovery": min_recovery,
+                    "max_live_trials": max_trials},
+        "run1": run1,
+        "run2": run2,
+        "summary": summary,
+        "violations": violations,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="BENCH_serve_autotune.json")
+    ap.add_argument("--store", default=None,
+                    help="ConfigStore path (default: fresh temp file, so "
+                    "run 1 always starts cold)")
+    ap.add_argument("--ticks", type=int, default=6,
+                    help="ticks per workload phase")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="requests per tick")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--min-recovery", type=float, default=0.9,
+                    help="fail (exit 1) if any drift event recovers less "
+                    "than this fraction of oracle throughput")
+    ap.add_argument("--max-trials", type=int, default=10,
+                    help="fail (exit 1) if any drift event spends more "
+                    "live trials than this")
+    args = ap.parse_args(argv)
+
+    if args.store is not None:
+        store_path = args.store
+        result = run_benchmark(args.ticks, args.requests, args.seed,
+                               store_path, args.min_recovery, args.max_trials)
+    else:
+        with tempfile.TemporaryDirectory() as td:
+            store_path = os.path.join(td, "serve_store.json")
+            result = run_benchmark(args.ticks, args.requests, args.seed,
+                                   store_path, args.min_recovery,
+                                   args.max_trials)
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    s = result["summary"]
+    print(f"wrote {args.out}")
+    print(f"drift events: {s['drift_events_run1']}, "
+          f"min recovery {s['min_recovery']:.3f} "
+          f"(target >= {args.min_recovery}: "
+          f"{'PASS' if s['meets_recovery_target'] else 'FAIL'})")
+    print(f"max live trials/event: {s['max_live_trials_per_event']} "
+          f"(target <= {args.max_trials}: "
+          f"{'PASS' if s['meets_trial_budget'] else 'FAIL'})")
+    print(f"second run: {s['run2_total_live_trials']} live trials "
+          f"(pure reuse: {'PASS' if s['run2_pure_reuse'] else 'FAIL'})")
+    if result["violations"]:
+        print("TARGETS VIOLATED:\n  " + "\n  ".join(result["violations"]),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

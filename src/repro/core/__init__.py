@@ -23,8 +23,9 @@ from repro.core.reaction import compute_delta_pc
 from repro.core.searcher import (SEARCHERS, BasinHoppingSearcher,
                                  ProfileBasedSearcher, ProfileLocalSearcher,
                                  RandomSearcher, Searcher, StarchartSearcher,
-                                 make_searcher, register_searcher,
-                                 resolve_searcher, run_search)
+                                 WarmStartSearcher, make_searcher,
+                                 register_searcher, resolve_searcher,
+                                 run_search)
 from repro.core.tuner import (SearchStats, TuneResult, autotune,
                               convergence_curve, run_search_experiment,
                               steps_to_well_performing, train_model,
@@ -47,4 +48,5 @@ __all__ = [
     "QuadraticRegressionModel", "RandomSearcher", "RecordedSpace",
     "ReplayEvaluator", "SEARCHERS", "SearchStats", "Searcher",
     "StarchartSearcher", "TuneResult", "TuningParameter", "TuningSpace",
+    "WarmStartSearcher",
 ]

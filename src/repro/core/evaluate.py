@@ -133,19 +133,37 @@ class FunctionEvaluator(Evaluator):
 
     Used to tune things with no counter story (e.g. serving batch sizes):
     ``profile`` raises ``ProfilingUnsupported``, so drive it with
-    counter-free searchers (random, basin hopping, starchart).
+    counter-free searchers (random, basin hopping, starchart, warm_start).
+
+    Cost model: ``elapsed`` accounts seconds actually spent in ``fn``.  With
+    ``cache=True`` (default) the first measurement of a config runs ``fn``
+    and charges its runtime; re-measurements of the same config are served
+    from the memo and charge **zero** additional elapsed — ``fn`` never
+    re-ran, so billing it again would overstate tuning cost.  This differs
+    from ``ReplayEvaluator`` deliberately: replay's clock is *simulated* and
+    charges every empirical test because each one stands in for a real
+    kernel launch.  Pass ``cache=False`` to genuinely re-run ``fn`` per
+    measurement (e.g. noisy live timings that should be re-sampled); each
+    test then pays its own cost, matching replay's re-measure semantics.
+    Steps/trace/history count every measurement in both modes.
     """
 
     def __init__(self, space: TuningSpace,
-                 fn: Callable[[Config], float]):
+                 fn: Callable[[Config], float],
+                 cache: bool = True):
         super().__init__(space)
         self.fn = fn
+        self.cache = cache
         self._cache: Dict[int, float] = {}
 
     def _evaluate(
         self, idx: int, profiled: bool
     ) -> Tuple[float, Optional[CounterSet], float]:
-        if idx not in self._cache:
-            self._cache[idx] = float(self.fn(self.space[idx]))
-        rt = self._cache[idx]
+        if not self.cache:
+            rt = float(self.fn(self.space[idx]))
+            return rt, None, rt
+        if idx in self._cache:
+            return self._cache[idx], None, 0.0  # memo hit: fn did not re-run
+        rt = float(self.fn(self.space[idx]))
+        self._cache[idx] = rt
         return rt, None, rt

@@ -191,6 +191,31 @@ class RandomSearcher(Searcher):
         yield [Candidate(int(i)) for i in order]
 
 
+@register_searcher("warm_start")
+class WarmStartSearcher(Searcher):
+    """Walks the space in a caller-supplied predicted-best order.
+
+    The order typically comes from a portable model's score/runtime ranking
+    (e.g. the serving tuner ranks configs by TP→PC_ops predictions executed
+    through the cost model), so a tight live budget — the paper's repeated-
+    autotuning scenario (ii) — only spends empirical tests on the few most
+    promising configurations.  Indices absent from ``order`` are appended in
+    seed-shuffled order as a fallback tail, so an exhaustive budget still
+    covers the space.
+    """
+
+    def __init__(self, space: TuningSpace, order: Optional[Sequence[int]] = None,
+                 seed: int = 0):
+        super().__init__(space, seed)
+        self.order = [int(i) for i in (order if order is not None else [])]
+
+    def _plan(self):
+        seen = set(self.order)
+        tail = [i for i in self.rng.permutation(len(self.space))
+                if int(i) not in seen]
+        yield [Candidate(int(i)) for i in list(self.order) + tail]
+
+
 @register_searcher("profile")
 class ProfileBasedSearcher(Searcher):
     """Algorithm 1: profile, detect bottlenecks, react, score, biased step.

@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --requests 8 --max-new 16
+
+``--autotune`` serves through the online shape-bucketed tuner instead of a
+fixed configuration: requests are bucketed by (prompt length, max-new)
+deciles, the dominant bucket's configuration comes from the ``ConfigStore``
+(``--store``; zero live trials on a hit) or from a handful of live
+warm-started trials on a miss, and freshly tuned configs persist for the
+next run.
 """
 from __future__ import annotations
 
@@ -27,6 +34,15 @@ def main():
     ap.add_argument("--tune-batch", action="store_true",
                     help="pick batch size by timed trials through the "
                          "ask-tell tuning API before serving")
+    ap.add_argument("--autotune", action="store_true",
+                    help="serve through the online shape-bucketed tuner "
+                         "(drift-triggered live trials, store-backed reuse)")
+    ap.add_argument("--store", default=None,
+                    help="ConfigStore JSON path for --autotune (tuned "
+                         "configs/models persist across runs; default: "
+                         "in-memory)")
+    ap.add_argument("--live-trials", type=int, default=8,
+                    help="max live trials per drift event for --autotune")
     args = ap.parse_args()
 
     arch = (SMOKES if args.smoke else ARCHS)[args.arch]
@@ -37,11 +53,42 @@ def main():
                                         size=int(rng.integers(4, 16))),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
+
+    if args.autotune:
+        from repro.serve.autotune import (EngineBackend, OnlineAutotuner,
+                                          ShapeBucketer, serve_space,
+                                          stats_from_model)
+        from repro.tuning.store import ConfigStore
+
+        backend = EngineBackend(model, rng=jax.random.PRNGKey(0))
+        tuner = OnlineAutotuner(
+            backend,
+            store=ConfigStore(args.store),
+            bucketer=ShapeBucketer(max_prompt=args.max_seq,
+                                   max_new=max(1, args.max_new)),
+            space=serve_space(max_seqs=tuple(sorted(
+                {args.max_seq, args.max_seq // 2, 2 * args.max_seq}))),
+            stats=stats_from_model(model),
+            max_live_trials=args.live_trials,
+            hardware_name=jax.default_backend(),
+        )
+        t0 = time.time()
+        out, rep = tuner.serve(reqs)
+        dt = time.time() - t0
+        n = sum(len(v) for v in out.values())
+        if rep is not None:
+            print(f"[serve] bucket={rep.bucket} "
+                  f"{'reused stored config' if rep.reused else 'tuned live'} "
+                  f"(trials={rep.live_trials}) -> {rep.config}")
+        print(f"[serve] {len(reqs)} requests, {n} tokens in {dt:.1f}s "
+              f"({n/max(dt, 1e-9):.1f} tok/s)")
+        return 0
+
     batch = args.batch
     if args.tune_batch:
+        params = model.init(jax.random.PRNGKey(0))  # one copy for all trials
         factory = lambda b: ServeEngine(model, batch_size=b,
-                                        max_seq=args.max_seq,
-                                        rng=jax.random.PRNGKey(0))
+                                        max_seq=args.max_seq, params=params)
         batch, best_s, hist = tune_engine_batch(factory, reqs)
         print(f"[serve] tuned batch_size={batch} "
               f"({best_s:.2f}s best of {len(hist)} trials)")

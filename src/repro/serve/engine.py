@@ -53,9 +53,12 @@ class ServeEngine:
         return out
 
     def _run_wave(self, wave: List[Request]) -> Dict[int, List[int]]:
-        b = self.batch
+        # A partial wave (the queue tail) is masked to its true size: padding
+        # it to self.batch would prefill+decode ghost slots for the full step
+        # count — pure wasted compute that also skews wave timings.
+        n = len(wave)
         plen = max(len(r.prompt) for r in wave)
-        toks = np.zeros((b, plen), np.int32)
+        toks = np.zeros((n, plen), np.int32)
         for i, r in enumerate(wave):
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
         batch = {"tokens": jnp.asarray(toks)}
@@ -63,8 +66,13 @@ class ServeEngine:
                                            max_seq=self.max_seq)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         steps = max(r.max_new_tokens for r in wave)
-        done = np.zeros(b, bool)
-        gen: List[List[int]] = [[] for _ in range(b)]
+        done = np.zeros(n, bool)
+        gen: List[List[int]] = [[] for _ in range(n)]
+        # an exhausted budget means no generated tokens at all — enforce the
+        # limit before the first append, not after it
+        for i, r in enumerate(wave):
+            if r.max_new_tokens <= 0:
+                done[i] = True
         for _ in range(steps):
             for i, r in enumerate(wave):
                 if not done[i]:
@@ -72,12 +80,35 @@ class ServeEngine:
                     if (int(next_tok[i]) == r.eos_id
                             or len(gen[i]) >= r.max_new_tokens):
                         done[i] = True
-            if done[:len(wave)].all():
+            if done.all():
                 break
             logits, cache = self._decode(self.params, cache,
                                          {"tokens": next_tok[:, None]})
             next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return {r.uid: gen[i] for i, r in enumerate(wave)}
+
+    def warmup(self, prompt_len: int = 4, wave_size: Optional[int] = None
+               ) -> None:
+        """Run one untimed dummy wave so prefill and at least one decode step
+        are compiled before any timed serving/tuning measurement."""
+        n = min(wave_size if wave_size is not None else self.batch,
+                self.batch)
+        plen = max(1, min(prompt_len, self.max_seq - 2))
+        reqs = [Request(uid=-1 - i, prompt=np.ones(plen, np.int32),
+                        max_new_tokens=2) for i in range(n)]
+        self.generate(reqs)
+
+    def warmup_for(self, n_requests: int, prompt_len: int = 4) -> None:
+        """Warm every wave size ``generate(n_requests requests)`` will run:
+        the full-batch wave and the masked partial tail (distinct jitted
+        decode shapes) — so a timed run over ``n_requests`` compiles
+        nothing."""
+        n = max(1, int(n_requests))
+        sizes = {min(self.batch, n)}
+        if n % self.batch:
+            sizes.add(n % self.batch)
+        for size in sorted(sizes):
+            self.warmup(prompt_len=prompt_len, wave_size=size)
 
 
 def tune_engine_batch(
@@ -86,11 +117,17 @@ def tune_engine_batch(
     batch_sizes: Tuple[int, ...] = (1, 2, 4, 8),
     budget: Optional[int] = None,
     seed: int = 0,
+    warmup: bool = True,
 ):
     """Pick the engine batch size by timed end-to-end trials, driven through
     the shared ask-tell tuning API (``FunctionEvaluator`` + registry
     searcher — no counters exist for a serving loop, so the search is
     runtime-only).
+
+    Engines are built once per batch size and reused across repeated trials,
+    and each engine serves one untimed warmup wave before its first timed
+    trial — otherwise the timed region includes first-call JIT compilation
+    of prefill/decode, which scales with batch size and biases selection.
 
     ``engine_factory(batch_size) -> ServeEngine``.  Returns
     (best_batch_size, best_seconds, history) where history is the public
@@ -104,13 +141,24 @@ def tune_engine_batch(
 
     space = TuningSpace([TuningParameter("BATCH", tuple(batch_sizes))],
                         name="serve_batch")
+    engines: Dict[int, ServeEngine] = {}
+
+    def _engine(b: int) -> ServeEngine:
+        if b not in engines:
+            eng = engines[b] = engine_factory(b)
+            # warm every wave shape the timed run will hit (full + tail)
+            if warmup and hasattr(eng, "warmup_for"):
+                eng.warmup_for(len(requests))
+            elif warmup and hasattr(eng, "warmup"):
+                eng.warmup()
+        return engines[b]
 
     def timed_run(cfg) -> float:
-        engine = engine_factory(int(cfg["BATCH"]))
-        t0 = _time.time()
+        engine = _engine(int(cfg["BATCH"]))
+        t0 = _time.perf_counter()
         engine.generate([dataclasses.replace(r, generated=None)
                          for r in requests])
-        return _time.time() - t0
+        return _time.perf_counter() - t0
 
     ev = FunctionEvaluator(space, timed_run)
     run_search(make_searcher("random", space, seed=seed), ev,

@@ -12,6 +12,9 @@ The coherent surface over the paper's two-phase method:
   (replay, cost model, real compiles, timed callables).
 * ``model_to_dict``/``model_from_dict`` — JSON round-trip for trained
   TP→PC_ops models (the portability artifact).
+* ``ConfigStore`` — persistent JSON store of tuned configs + model artifacts
+  keyed by (space name, input-shape bucket, hardware); the substrate for
+  the online serving tuner's zero-trial reuse.
 
 Quickstart::
 
@@ -37,14 +40,15 @@ from repro.core.tuner import TuneResult, train_model, train_model_deliberate
 from repro.tuning.serialize import (model_from_dict, model_to_dict,
                                     space_from_dict, space_to_dict)
 from repro.tuning.session import TuningSession
+from repro.tuning.store import ConfigStore, StoreEntry, store_key
 
 __all__ = [
-    "Candidate", "CostModelEvaluator", "EvalAccount", "Evaluator",
-    "FunctionEvaluator", "Observation", "ProfilingUnsupported",
-    "RecordedSpace", "ReplayEvaluator", "SEARCHERS", "Searcher",
+    "Candidate", "ConfigStore", "CostModelEvaluator", "EvalAccount",
+    "Evaluator", "FunctionEvaluator", "Observation", "ProfilingUnsupported",
+    "RecordedSpace", "ReplayEvaluator", "SEARCHERS", "Searcher", "StoreEntry",
     "TuneResult", "TuningSession", "make_searcher", "model_from_dict",
     "model_to_dict", "record_space", "register_searcher",
     "resolve_searcher", "run_search",
-    "space_from_dict", "space_to_dict", "train_model",
+    "space_from_dict", "space_to_dict", "store_key", "train_model",
     "train_model_deliberate",
 ]

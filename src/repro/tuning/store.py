@@ -1,0 +1,209 @@
+"""``ConfigStore`` — persistent tuned-config + model-artifact store.
+
+The paper's motivation (ii): autotuning must be *repeated* whenever the
+processed-data characteristics change, and a portable TP→PC model makes each
+repetition cheap.  In a serving system that repetition happens online — the
+request mix shifts, the engine retunes — so the results must outlive the
+process: the second time a workload shape shows up (or the service restarts)
+the tuned configuration is reused with ZERO live trials.
+
+The store is one JSON file holding two artifact kinds under the same key
+``(space name, input-shape bucket, hardware)``:
+
+* **entries** — tuned configurations (`config`, `runtime`, `trials`, free-form
+  `meta`), written by the online tuner after live trials;
+* **models**  — trained TP→PC_ops model artifacts in the
+  ``repro.tuning.serialize`` JSON format, so the warm-start ranking that
+  keeps live-trial counts small is itself persistent and shippable across
+  machines (``TuningSession.save_model_to_store``/``load_model_from_store``).
+
+Schema (``format: repro.config_store``, version 1)::
+
+    {
+      "format": "repro.config_store",
+      "version": 1,
+      "entries": {
+        "serve_online|p1n1|tpu_v5e": {
+          "space": "serve_online", "bucket": "p1n1", "hardware": "tpu_v5e",
+          "config": {"BATCH": 8, "MAX_SEQ": 64},
+          "runtime": 0.0123,          # best measured seconds
+          "trials": 6,                # live empirical tests spent tuning it
+          "meta": {...}               # free-form (e.g. ask-tell history)
+        }, ...
+      },
+      "models": { "<same key>": <repro.tppc_model artifact>, ... }
+    }
+
+Writes are atomic (tempfile + ``os.replace``) and auto-saved when the store
+is bound to a path; ``ConfigStore()`` with no path is a process-local cache
+with the same API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Dict, Iterator, Optional
+
+from repro.core.model import TPPCModel
+from repro.core.tuning_space import Config, TuningSpace
+from repro.tuning.serialize import model_from_dict, model_to_dict
+
+FORMAT = "repro.config_store"
+VERSION = 1
+_SEP = "|"
+
+
+def store_key(space: str, bucket: str, hardware: str) -> str:
+    """Canonical ``space|bucket|hardware`` key (fields must not contain |)."""
+    parts = (str(space), str(bucket), str(hardware))
+    for p in parts:
+        if _SEP in p:
+            raise ValueError(f"store key field {p!r} contains {_SEP!r}")
+    return _SEP.join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreEntry:
+    """One tuned configuration for one (space, bucket, hardware)."""
+
+    space: str
+    bucket: str
+    hardware: str
+    config: Config
+    runtime: float              # best measured seconds at tuning time
+    trials: int                 # live empirical tests spent finding it
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def key(self) -> str:
+        return store_key(self.space, self.bucket, self.hardware)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "space": self.space, "bucket": self.bucket,
+            "hardware": self.hardware, "config": dict(self.config),
+            "runtime": float(self.runtime), "trials": int(self.trials),
+            "meta": self.meta,
+        }
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "StoreEntry":
+        return StoreEntry(
+            space=d["space"], bucket=d["bucket"], hardware=d["hardware"],
+            config=dict(d["config"]), runtime=float(d["runtime"]),
+            trials=int(d["trials"]), meta=dict(d.get("meta", {})),
+        )
+
+
+class ConfigStore:
+    """JSON-backed artifact store for tuned configs and TP→PC models.
+
+    ``path=None`` keeps everything in memory (same API, nothing persisted);
+    with a path, the file is loaded if it exists and every ``put`` /
+    ``put_model`` re-saves atomically.
+    """
+
+    def __init__(self, path: Optional[str] = None, autosave: bool = True):
+        self.path = path
+        self.autosave = autosave
+        self._entries: Dict[str, StoreEntry] = {}
+        self._models: Dict[str, Dict] = {}
+        if path is not None and os.path.exists(path):
+            self.load(path)
+
+    # -- tuned configs ---------------------------------------------------------
+    def get(self, space: str, bucket: str, hardware: str
+            ) -> Optional[StoreEntry]:
+        return self._entries.get(store_key(space, bucket, hardware))
+
+    def put(self, space: str, bucket: str, hardware: str, config: Config,
+            runtime: float, trials: int,
+            meta: Optional[Dict[str, Any]] = None) -> StoreEntry:
+        entry = StoreEntry(space=space, bucket=bucket, hardware=hardware,
+                           config=dict(config), runtime=float(runtime),
+                           trials=int(trials), meta=dict(meta or {}))
+        self._entries[entry.key] = entry
+        self._autosave()
+        return entry
+
+    def entries(self) -> Iterator[StoreEntry]:
+        return iter(self._entries.values())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    # -- model artifacts -------------------------------------------------------
+    def get_model_dict(self, space: str, bucket: str, hardware: str
+                       ) -> Optional[Dict]:
+        return self._models.get(store_key(space, bucket, hardware))
+
+    def put_model_dict(self, space: str, bucket: str, hardware: str,
+                       artifact: Dict) -> None:
+        self._models[store_key(space, bucket, hardware)] = artifact
+        self._autosave()
+
+    def load_model(self, space: str, bucket: str, hardware: str,
+                   bind_space: Optional[TuningSpace] = None
+                   ) -> Optional[TPPCModel]:
+        """Reconstruct a stored model, optionally bound to an existing space
+        (compatibility-checked by the serializer)."""
+        d = self.get_model_dict(space, bucket, hardware)
+        if d is None:
+            return None
+        return model_from_dict(d, space=bind_space)
+
+    def save_model(self, space: str, bucket: str, hardware: str,
+                   model: TPPCModel,
+                   model_space: Optional[TuningSpace] = None) -> None:
+        self.put_model_dict(space, bucket, hardware,
+                            model_to_dict(model, model_space))
+
+    # -- persistence -----------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "format": FORMAT,
+            "version": VERSION,
+            "entries": {k: e.to_dict() for k, e in
+                        sorted(self._entries.items())},
+            "models": {k: m for k, m in sorted(self._models.items())},
+        }
+
+    def save(self, path: Optional[str] = None) -> str:
+        """Atomic write: serialize to a temp file, then ``os.replace``."""
+        path = path if path is not None else self.path
+        if path is None:
+            raise ValueError("ConfigStore has no path; pass save(path=...)")
+        d = os.path.dirname(os.path.abspath(path)) or "."
+        fd, tmp = tempfile.mkstemp(prefix=".config_store.", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.to_dict(), f, indent=1)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return path
+
+    def load(self, path: str) -> "ConfigStore":
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("format") != FORMAT:
+            raise ValueError(
+                f"not a {FORMAT} artifact: format={d.get('format')!r}")
+        if d.get("version") != VERSION:
+            raise ValueError(
+                f"unsupported {FORMAT} version {d.get('version')!r}")
+        self._entries = {k: StoreEntry.from_dict(e)
+                         for k, e in d.get("entries", {}).items()}
+        self._models = dict(d.get("models", {}))
+        return self
+
+    def _autosave(self) -> None:
+        if self.path is not None and self.autosave:
+            self.save()

@@ -16,6 +16,10 @@ from repro.kernels.nbody.space import NBodyInput
 from repro.kernels.registry import BENCHMARKS
 from repro.kernels.transpose.space import TransposeInput
 
+# interpret-mode kernel execution dominates the suite's wall clock; these
+# sweeps run as a separate CI job (pytest -m slow)
+pytestmark = pytest.mark.slow
+
 RNG = np.random.default_rng(42)
 
 

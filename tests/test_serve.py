@@ -1,11 +1,59 @@
-"""Serving engine: batched generate, slot waves, determinism."""
+"""Serving engine: batched generate, slot waves, determinism, and the
+partial-wave / token-budget / tuning-timing regression tests."""
+import dataclasses
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import SMOKES
 from repro.models.registry import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, tune_engine_batch
+
+
+class EchoModel:
+    """Deterministic fake model: next token = (last token + 1) % VOCAB.
+
+    jit-compatible prefill/decode with the registry ``Model`` calling
+    convention, so engine behavior (wave masking, budgets, EOS) is testable
+    exactly, without weights or a real forward pass.
+    """
+
+    VOCAB = 32
+
+    def init(self, rng):
+        return {"w": jnp.zeros((1,))}
+
+    def _logits(self, tok):
+        nxt = (tok + 1) % self.VOCAB
+        return jax.nn.one_hot(nxt, self.VOCAB, dtype=jnp.float32)[:, None, :]
+
+    def prefill(self, params, batch, max_seq):
+        last = batch["tokens"][:, -1].astype(jnp.int32)
+        return self._logits(last), (last + 1) % self.VOCAB
+
+    def decode(self, params, cache, batch):
+        tok = batch["tokens"][:, 0].astype(jnp.int32)
+        return self._logits(tok), (tok + 1) % self.VOCAB
+
+
+def echo_engine(batch_size, max_seq=32):
+    return ServeEngine(EchoModel(), batch_size=batch_size, max_seq=max_seq,
+                       rng=jax.random.PRNGKey(0))
+
+
+def _count_decodes(engine):
+    """Wrap ``engine._decode`` to record decode-call token shapes."""
+    calls = []
+    orig = engine._decode
+
+    def counting(params, cache, batch):
+        calls.append(tuple(batch["tokens"].shape))
+        return orig(params, cache, batch)
+
+    engine._decode = counting
+    return calls
 
 
 @pytest.fixture(scope="module")
@@ -45,3 +93,115 @@ def test_generate_deterministic(engine):
     a = engine.generate(_reqs(2, rng1))
     b = engine.generate(_reqs(2, rng2))
     assert a == b
+
+
+# =============================================================================
+# Edge cases + bugfix regressions (deterministic fake model)
+# =============================================================================
+def test_echo_model_sequence():
+    out = echo_engine(2).generate(
+        [Request(uid=0, prompt=np.array([5], np.int32), max_new_tokens=4)])
+    assert out[0] == [6, 7, 8, 9]
+
+
+def test_partial_wave_masks_ghost_slots():
+    """Regression: a partial wave must prefill/decode only its true size —
+    pre-fix, zero-padded ghost slots ran the full decode loop."""
+    eng = echo_engine(4)
+    calls = _count_decodes(eng)
+    reqs = [Request(uid=i, prompt=np.array([3 + i], np.int32),
+                    max_new_tokens=3) for i in range(2)]
+    out = eng.generate(reqs)
+    assert out == {0: [4, 5, 6], 1: [5, 6, 7]}
+    assert calls, "expected at least one decode step"
+    assert all(shape == (2, 1) for shape in calls), calls
+
+
+def test_partial_wave_matches_full_wave_output_and_steps():
+    """A 2-request wave must produce identical output and decode-step count
+    whether the engine batch is exactly 2 or has 2 ghost slots."""
+    reqs = [Request(uid=i, prompt=np.array([10 + i], np.int32),
+                    max_new_tokens=4) for i in range(2)]
+    full = echo_engine(2)
+    partial = echo_engine(4)
+    full_calls = _count_decodes(full)
+    partial_calls = _count_decodes(partial)
+    out_full = full.generate([dataclasses.replace(r) for r in reqs])
+    out_partial = partial.generate([dataclasses.replace(r) for r in reqs])
+    assert out_full == out_partial
+    assert len(full_calls) == len(partial_calls)
+
+
+def test_max_new_tokens_zero_gets_no_tokens():
+    """Regression: a 0-budget request batched with longer ones received one
+    generated token (append ran before the length check)."""
+    reqs = [Request(uid=0, prompt=np.array([5], np.int32), max_new_tokens=0),
+            Request(uid=1, prompt=np.array([7], np.int32), max_new_tokens=3)]
+    out = echo_engine(2).generate(reqs)
+    assert out[0] == []
+    assert out[1] == [8, 9, 10]
+
+
+def test_all_zero_budget_wave_never_decodes():
+    eng = echo_engine(2)
+    calls = _count_decodes(eng)
+    out = eng.generate([Request(uid=i, prompt=np.array([4], np.int32),
+                                max_new_tokens=0) for i in range(2)])
+    assert out == {0: [], 1: []}
+    assert calls == []
+
+
+def test_eos_mid_wave():
+    """One request hits EOS early; its slot stops appending while the other
+    runs to its full budget."""
+    reqs = [Request(uid=0, prompt=np.array([5], np.int32), max_new_tokens=6,
+                    eos_id=7),
+            Request(uid=1, prompt=np.array([20], np.int32), max_new_tokens=6)]
+    out = echo_engine(2).generate(reqs)
+    assert out[0] == [6, 7]                        # stops at EOS (included)
+    assert out[1] == [21, 22, 23, 24, 25, 26]      # full budget
+
+
+def test_empty_request_list():
+    assert echo_engine(2).generate([]) == {}
+
+
+def test_engine_warmup_compiles_decode():
+    eng = echo_engine(2, max_seq=16)
+    calls = _count_decodes(eng)
+    eng.warmup()
+    assert len(calls) >= 1
+
+
+# =============================================================================
+# tune_engine_batch: warmup + engine reuse (JIT-bias regression)
+# =============================================================================
+class _FakeEngine:
+    def __init__(self, batch, log, builds):
+        self.batch = batch
+        self.log = log
+        builds[batch] = builds.get(batch, 0) + 1
+
+    def warmup(self):
+        self.log.append(("warmup", self.batch))
+
+    def generate(self, requests):
+        self.log.append(("generate", self.batch))
+        return {r.uid: [] for r in requests}
+
+
+def test_tune_engine_batch_warms_up_and_reuses_engines():
+    """Regression: each trial must serve an untimed warmup wave before its
+    timed run (pre-fix, first-call JIT compilation was inside the timed
+    region) and engines must be built once per batch size."""
+    log, builds = [], {}
+    reqs = [Request(uid=i, prompt=np.array([1], np.int32), max_new_tokens=2)
+            for i in range(4)]
+    best, best_s, hist = tune_engine_batch(
+        lambda b: _FakeEngine(b, log, builds), reqs, batch_sizes=(1, 2, 4))
+    assert set(builds) == {1, 2, 4} and all(v == 1 for v in builds.values())
+    assert len(hist) == 3
+    for b in (1, 2, 4):
+        events = [kind for kind, eb in log if eb == b]
+        assert events[0] == "warmup", (b, events)
+        assert events.count("generate") >= 1

@@ -1,0 +1,281 @@
+"""Online serving autotuner: shape buckets, ConfigStore persistence, drift
+detection, warm-started live tuning, and the golden ask-tell trace."""
+import json
+import os
+
+import numpy as np
+import pytest
+from test_serve import EchoModel
+
+from repro.core.hwspec import SPECS
+from repro.serve.autotune import (INFEASIBLE_S, EngineBackend,
+                                  OnlineAutotuner, ServeWorkloadStats,
+                                  ShapeBucketer, SyntheticServeBackend,
+                                  serve_space, serve_workload_fn)
+from repro.serve.engine import Request
+from repro.tuning import TuningSession
+from repro.tuning.store import ConfigStore, StoreEntry, store_key
+
+HW_TRUE = SPECS["tpu_v4"]
+HW_TRAIN = SPECS["tpu_v5e"]
+STATS = ServeWorkloadStats()
+
+
+def reqs(plen, new, n=8, uid0=0):
+    return [Request(uid=uid0 + i, prompt=np.ones(plen, np.int32),
+                    max_new_tokens=new) for i in range(n)]
+
+
+def make_tuner(store=None, seed=0, **kw):
+    backend = SyntheticServeBackend(HW_TRUE, STATS, seed=seed)
+    tuner = OnlineAutotuner(
+        backend, store=store, bucketer=ShapeBucketer(max_prompt=96,
+                                                     max_new=32),
+        hw=HW_TRUE, train_hw=HW_TRAIN, stats=STATS, seed=seed, **kw)
+    return tuner, backend
+
+
+# =============================================================================
+# Shape buckets
+# =============================================================================
+def test_bucketer_deciles():
+    b = ShapeBucketer(max_prompt=100, max_new=50)
+    assert b.bucket_of(0, 0).key == "p0n0"
+    assert b.bucket_of(19, 9).key == "p1n1"
+    assert b.bucket_of(99, 49).key == "p9n9"
+    assert b.bucket_of(500, 500).key == "p9n9"   # clamped to the top decile
+
+
+def test_bucket_rep_shape_is_upper_edge():
+    b = ShapeBucketer(max_prompt=100, max_new=50)
+    bucket = b.bucket_of(12, 6)
+    assert bucket.key == "p1n1"
+    assert b.rep_shape(bucket) == (20, 10)
+
+
+def test_serve_workload_fn_amortizes_weight_reads():
+    wl = serve_workload_fn(16, 12, 6, STATS)
+    rd1 = wl({"BATCH": 1, "MAX_SEQ": 32})["HBM_RD"]
+    rd8 = wl({"BATCH": 8, "MAX_SEQ": 32})["HBM_RD"]
+    assert rd8 < rd1 / 4  # fewer waves -> fewer weight streams
+
+
+# =============================================================================
+# ConfigStore
+# =============================================================================
+def test_store_key_rejects_separator():
+    with pytest.raises(ValueError):
+        store_key("a|b", "c", "d")
+
+
+def test_config_store_round_trip(tmp_path):
+    path = str(tmp_path / "store.json")
+    store = ConfigStore(path)
+    entry = store.put("serve_online", "p1n1", "tpu_v4",
+                      config={"BATCH": 8, "MAX_SEQ": 32},
+                      runtime=0.012, trials=6, meta={"history": [[15, 0.012]]})
+    assert isinstance(entry, StoreEntry)
+    # autosaved: a fresh store sees the entry
+    again = ConfigStore(path)
+    got = again.get("serve_online", "p1n1", "tpu_v4")
+    assert got is not None
+    assert got.config == {"BATCH": 8, "MAX_SEQ": 32}
+    assert got.trials == 6
+    assert got.meta["history"] == [[15, 0.012]]
+    assert again.get("serve_online", "p9n9", "tpu_v4") is None
+    # the file is schema-tagged JSON
+    with open(path) as f:
+        d = json.load(f)
+    assert d["format"] == "repro.config_store" and d["version"] == 1
+
+
+def test_config_store_in_memory_has_no_file(tmp_path):
+    store = ConfigStore()
+    store.put("s", "b", "h", config={"X": 1}, runtime=1.0, trials=1)
+    assert len(store) == 1
+    with pytest.raises(ValueError):
+        store.save()
+
+
+def test_session_model_store_round_trip(tmp_path):
+    """TuningSession <-> ConfigStore: train, persist, reload bound to the
+    same space — the portable-model artifact survives the store."""
+    space = serve_space()
+    wl = serve_workload_fn(16, 20, 7, STATS)
+    session = TuningSession(space, wl, hw=HW_TRUE, seed=0)
+    session.train(train_hw=HW_TRAIN, kind="tree", sample="full")
+    store = ConfigStore(str(tmp_path / "store.json"))
+    session.save_model_to_store(store, "p1n1")
+    fresh = TuningSession(space, wl, hw=HW_TRUE, seed=0)
+    model = fresh.load_model_from_store(store, "p1n1")
+    assert model is not None
+    ref = session.model.predict(space[3])
+    got = model.predict(space[3])
+    assert got.keys() == ref.keys()
+    for k in ref:
+        assert got[k] == pytest.approx(ref[k])
+    assert fresh.load_model_from_store(store, "p9n9") is None
+
+
+# =============================================================================
+# Online tuner: drift, retune, reuse
+# =============================================================================
+def test_first_tick_tunes_then_steady_state_is_free():
+    tuner, backend = make_tuner()
+    _, rep = tuner.serve(reqs(12, 6))
+    assert rep.drift and not rep.reused
+    assert 0 < rep.live_trials <= tuner.max_live_trials
+    _, rep2 = tuner.serve(reqs(12, 6, uid0=100))
+    assert not rep2.drift and rep2.live_trials == 0
+    assert backend.measure_calls == rep.live_trials
+
+
+def test_drift_triggers_retune_and_return_is_reuse():
+    tuner, backend = make_tuner(window=8)
+    _, r0 = tuner.serve(reqs(12, 6))
+    _, r1 = tuner.serve(reqs(80, 28, uid0=100))
+    assert r1.drift and not r1.reused and r1.live_trials > 0
+    assert r1.config["MAX_SEQ"] >= 80 + 28  # feasible for the new bucket
+    # the mix returns to the first bucket: store hit, zero live trials
+    _, r2 = tuner.serve(reqs(12, 6, uid0=200))
+    assert r2.drift and r2.reused and r2.live_trials == 0
+    assert r2.config == r0.config
+
+
+def test_store_persists_across_tuner_restarts(tmp_path):
+    path = str(tmp_path / "store.json")
+    tuner1, _ = make_tuner(store=ConfigStore(path))
+    _, rep1 = tuner1.serve(reqs(12, 6))
+    assert rep1.live_trials > 0
+    # "restart": fresh tuner + backend over the same file
+    tuner2, backend2 = make_tuner(store=ConfigStore(path))
+    _, rep2 = tuner2.serve(reqs(12, 6))
+    assert rep2.drift and rep2.reused and rep2.live_trials == 0
+    assert rep2.config == rep1.config
+    assert backend2.measure_calls == 0
+
+
+def test_model_artifact_is_persisted(tmp_path):
+    path = str(tmp_path / "store.json")
+    store = ConfigStore(path)
+    tuner, _ = make_tuner(store=store)
+    tuner.serve(reqs(12, 6))
+    assert store.get_model_dict("serve_online", "p1n1", "tpu_v4") is not None
+
+
+def test_ranking_excludes_infeasible_max_seq():
+    tuner, _ = make_tuner()
+    bucket = tuner.bucketer.bucket_of(80, 28)
+    plen, new = tuner.bucketer.rep_shape(bucket)
+    for i in tuner.ranking(bucket):
+        assert tuner.space[i]["MAX_SEQ"] >= plen + new
+
+
+def test_live_trials_never_exceed_budget():
+    tuner, _ = make_tuner(max_live_trials=3)
+    _, rep = tuner.serve(reqs(12, 6))
+    assert rep.live_trials <= 3
+
+
+def test_oversize_top_decile_requests_tune_feasibly():
+    """Regression: requests clamped into the top decile can exceed the
+    bucket's representative edge; tuning must only trial configs the real
+    calibration wave fits in (not persist an infeasible 'best')."""
+    backend = SyntheticServeBackend(HW_TRUE, STATS, seed=0)
+    tuner = OnlineAutotuner(
+        backend, bucketer=ShapeBucketer(max_prompt=16, max_new=8),
+        space=serve_space(batch_sizes=(1, 2, 4), max_seqs=(16, 32, 64)),
+        hw=HW_TRUE, train_hw=HW_TRAIN, stats=STATS, seed=0)
+    _, rep = tuner.serve(reqs(40, 8))    # plen 40 >> max_prompt 16
+    assert rep.config["MAX_SEQ"] >= 48   # fits the real calibration wave
+    entry = tuner.store.get(tuner.space.name, rep.bucket, "tpu_v4")
+    assert entry.runtime < INFEASIBLE_S  # never persisted a garbage trial
+
+
+# =============================================================================
+# Golden ask-tell trace (fixed seed, deterministic fake engine)
+# =============================================================================
+# First drift event of the p1n1 bucket under seed 0: the warm_start searcher
+# walks the portable model's predicted-runtime ranking; index = 5*batch_idx
+# + seq_idx over BATCH (1,2,4,8,16) x MAX_SEQ (32,64,96,128,192).
+GOLDEN_P1N1_TRIAL_ORDER = [15, 16, 10, 11, 12, 13, 14, 17]
+GOLDEN_P1N1_CONFIG = {"BATCH": 8, "MAX_SEQ": 32}
+
+
+def test_golden_ask_tell_trace():
+    tuner, _ = make_tuner()
+    _, rep = tuner.serve(reqs(12, 6))
+    assert rep.bucket == "p1n1"
+    assert [i for i, _ in rep.history] == GOLDEN_P1N1_TRIAL_ORDER
+    assert rep.config == GOLDEN_P1N1_CONFIG
+    # the winning trial's runtime is what the store records
+    runtimes = dict(rep.history)
+    best_idx = tuner.space.index_of(rep.config)
+    assert min(runtimes.values()) == pytest.approx(runtimes[best_idx])
+
+
+def test_golden_trace_is_reproducible():
+    t1, _ = make_tuner()
+    t2, _ = make_tuner()
+    _, r1 = t1.serve(reqs(12, 6))
+    _, r2 = t2.serve(reqs(12, 6))
+    assert r1.history == r2.history
+    assert r1.config == r2.config
+
+
+# =============================================================================
+# Backends
+# =============================================================================
+def test_synthetic_backend_is_deterministic_and_feasibility_aware():
+    b1 = SyntheticServeBackend(HW_TRUE, STATS, seed=3)
+    b2 = SyntheticServeBackend(HW_TRUE, STATS, seed=3)
+    cfg = {"BATCH": 4, "MAX_SEQ": 64}
+    r = reqs(12, 6)
+    assert b1.measure(cfg, r) == b2.measure(cfg, r)
+    assert b1.measure({"BATCH": 4, "MAX_SEQ": 32}, reqs(40, 12)) \
+        == INFEASIBLE_S
+
+
+def test_engine_backend_shares_params_and_warms_tail_waves():
+    backend = EngineBackend(EchoModel(), seq_round=16)
+    backend.measure({"BATCH": 2, "MAX_SEQ": 16}, reqs(3, 2, n=3))
+    backend.measure({"BATCH": 2, "MAX_SEQ": 32}, reqs(3, 2, n=3))
+    # 3 requests under batch 2 -> full wave (2) AND masked tail (1) warmed
+    assert backend._warmed[(2, 16)] == {1, 2}
+    # one parameter set shared by every trial engine
+    assert all(e.params is backend.params for e in backend.engines.values())
+
+
+def test_engine_backend_measures_and_serves_real_engine():
+    backend = EngineBackend(EchoModel(), seq_round=16)
+    cfg = {"BATCH": 2, "MAX_SEQ": 16}
+    r = reqs(3, 2, n=3)
+    dt = backend.measure(cfg, r)
+    assert dt > 0.0
+    assert backend.measure({"BATCH": 2, "MAX_SEQ": 4}, r) == INFEASIBLE_S
+    out = backend.serve(cfg, r)
+    assert set(out) == {0, 1, 2}
+    assert all(len(v) == 2 for v in out.values())
+    # oversize stragglers bump the cache length instead of failing
+    out2 = backend.serve({"BATCH": 2, "MAX_SEQ": 4}, r)
+    assert set(out2) == {0, 1, 2}
+
+
+def test_online_tuner_with_real_engine_backend(tmp_path):
+    stats = ServeWorkloadStats(param_bytes=1e6, d_model=32, n_layers=2)
+    backend = EngineBackend(EchoModel(), seq_round=16)
+    store = ConfigStore(str(tmp_path / "store.json"))
+    tuner = OnlineAutotuner(
+        backend, store=store, bucketer=ShapeBucketer(max_prompt=8, max_new=4),
+        space=serve_space(batch_sizes=(1, 2), max_seqs=(16, 32)),
+        hw=SPECS["tpu_v5e"], stats=stats, max_live_trials=3, seed=0)
+    out, rep = tuner.serve(reqs(4, 2, n=4))
+    assert rep.drift and 0 < rep.live_trials <= 3
+    assert all(len(v) == 2 for v in out.values())
+    assert store.get(tuner.space.name, rep.bucket, "tpu_v5e") is not None
+
+
+def test_empty_tick_is_a_noop():
+    tuner, _ = make_tuner()
+    out, rep = tuner.serve([])
+    assert out == {} and rep is None

@@ -106,8 +106,10 @@ _SUBPROCESS_PROG = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_multidevice_train_step_subprocess():
-    """Real 8-device SPMD execution (numerics, not just compile)."""
+    """Real 8-device SPMD execution (numerics, not just compile) — by far
+    the suite's single slowest test (minutes of subprocess XLA compiles)."""
     r = subprocess.run(
         [sys.executable, "-c", _SUBPROCESS_PROG],
         capture_output=True, text=True, timeout=600,

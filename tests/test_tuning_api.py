@@ -105,6 +105,45 @@ def test_function_evaluator_runtime_only():
         ev.profile(0)
 
 
+def test_function_evaluator_cache_hit_charges_nothing():
+    """Regression: a re-measure served from the memo cache must not charge
+    ``fn``'s runtime again — the function never re-ran."""
+    calls = []
+    sp = TuningSpace([TuningParameter("X", (1, 2))])
+    ev = FunctionEvaluator(sp, lambda cfg: calls.append(cfg["X"]) or 0.5)
+    assert ev.measure(0) == 0.5
+    assert ev.measure(0) == 0.5
+    assert calls == [1]                      # fn ran once
+    assert ev.steps == 2                     # both tests counted
+    assert len(ev.history()) == 2
+    assert ev.elapsed == pytest.approx(0.5)  # pre-fix: 1.0
+
+
+def test_function_evaluator_uncached_rerun_pays_per_test():
+    """``cache=False`` re-runs fn per measurement; each test pays its own
+    cost (Replay-consistent re-measure accounting)."""
+    calls = []
+    sp = TuningSpace([TuningParameter("X", (1, 2))])
+    ev = FunctionEvaluator(sp, lambda cfg: calls.append(cfg["X"]) or 0.5,
+                           cache=False)
+    ev.measure(0)
+    ev.measure(0)
+    assert calls == [1, 1]
+    assert ev.steps == 2
+    assert ev.elapsed == pytest.approx(1.0)
+
+
+def test_warm_start_searcher_follows_order_then_covers_space():
+    sp = TuningSpace([TuningParameter("X", (1, 2, 3, 4))])
+    ev = FunctionEvaluator(sp, lambda cfg: float(cfg["X"]))
+    s = SEARCHERS["warm_start"](sp, seed=0, order=[2, 0])
+    run_search(s, ev, len(sp))
+    idxs = [i for i, _ in ev.history()]
+    assert idxs[:2] == [2, 0]                # warm-start prefix, in order
+    assert sorted(idxs) == [0, 1, 2, 3]      # fallback tail covers the rest
+    assert ev.best_index == 0
+
+
 # =============================================================================
 # Golden equivalence: ask-tell == legacy loop, step for step
 # =============================================================================
