@@ -1,0 +1,309 @@
+"""Fleet orchestration benchmark: wall-clock speedup + warm-start savings.
+
+Two experiments on the deterministic synthetic backend (registry kernel
+workloads priced through the cost model, scheduled on a virtual clock — so
+every number is bit-reproducible):
+
+1. **Speedup** — the same six cold tuning jobs (3 kernels × 2 hardware
+   targets, fixed random-search trial budgets, identical work by
+   construction) run sequentially (1 worker, ``in_flight=1``) and as a
+   fleet (``--workers`` workers, ``in_flight=--workers``); the ratio of
+   simulated wall-clocks is the orchestration speedup.  Target: ≥ 3× at 4
+   workers.  ``--threads`` additionally replays the fleet on the real
+   ``ThreadWorkerPool`` (measurement callables sleep their simulated cost)
+   to show the same speedup on honest wall time.
+
+2. **Warm start** — a fresh shared ``ConfigStore``: wave 1 tunes 3 kernels
+   cold on the first hardware (training + publishing portable TP→PC_ops
+   artifacts on completion), wave 2 tunes the same kernels on the second
+   hardware, warm-starting from the nearest stored artifact.  Convergence
+   = completed trials until within 1.1× of that (kernel, hardware)'s
+   exhaustive best (the paper's well-performing criterion).  Target:
+   warm-started jobs converge in ≤ half the trials of cold jobs (mean).
+
+Writes ``BENCH_fleet.json``; exits non-zero when a target is violated.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet [--smoke] [--threads]
+        [--out BENCH_fleet.json] [--min-speedup 3] [--max-warm-ratio 0.5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import SPECS, record_space
+from repro.core.evaluate import TEST_OVERHEAD
+from repro.fleet import (FleetTuner, ThreadWorkerPool, VirtualWorkerPool,
+                         job_from_registry)
+from repro.kernels.registry import BENCHMARKS
+from repro.tuning import ConfigStore
+
+SCHEMA = "repro.bench_fleet"
+VERSION = 1
+
+KERNELS = (("matmul", "2048"), ("transpose", "8192"), ("conv2d", "4096"))
+HW = ("tpu_v4", "tpu_v5e")
+WELL_FACTOR = 1.1
+
+
+def _result_row(r, threshold: Optional[float] = None) -> Dict:
+    row = {
+        "job": r.job, "bucket": r.bucket, "hardware": r.hardware,
+        "searcher": r.searcher, "warm_started": r.warm_started,
+        "trials": r.trials, "best_runtime_s": r.best_runtime,
+        "best_config": r.best_config, "elapsed_s": r.elapsed,
+        "busy_s": r.busy,
+    }
+    if threshold is not None:
+        row["well_threshold_s"] = threshold
+        row["trials_to_well"] = r.trials_to_threshold(threshold)
+    return row
+
+
+def _cold_jobs(budget: int, seed: int) -> List:
+    return [job_from_registry(k, inp, hw, budget=budget, seed=seed,
+                              searcher="random")
+            for k, inp in KERNELS for hw in HW]
+
+
+def run_speedup(workers: int, budget: int, seed: int,
+                threads: bool) -> Dict:
+    """Identical cold work, scheduled 1-wide vs ``workers``-wide."""
+    def run(n_workers: int) -> Dict:
+        pool = VirtualWorkerPool(workers=n_workers)
+        rep = FleetTuner(_cold_jobs(budget, seed), pool, store=None,
+                         in_flight=n_workers, publish_models=False).run()
+        return {"workers": n_workers, "in_flight": n_workers,
+                "elapsed_s": rep.elapsed, "busy_s": rep.busy,
+                "trials": int(sum(r.trials for r in rep.results))}
+
+    seq = run(1)
+    fleet = run(workers)
+    out = {
+        "jobs": len(KERNELS) * len(HW),
+        "budget_per_job": budget,
+        "sequential": seq,
+        "fleet": fleet,
+        "speedup": seq["elapsed_s"] / fleet["elapsed_s"],
+        "identical_work": seq["trials"] == fleet["trials"]
+        and abs(seq["busy_s"] - fleet["busy_s"]) < 1e-9,
+    }
+    if threads:
+        out["thread"] = run_thread_speedup(workers, budget, seed)
+    return out
+
+
+def run_thread_speedup(workers: int, budget: int, seed: int,
+                       target_busy_s: float = 3.0) -> Dict:
+    """Same fleet on REAL threads: each measurement sleeps its simulated
+    cost (scaled so the sequential run is ~``target_busy_s`` of honest
+    wall time), so the reported speedup is genuine concurrency."""
+    def make_jobs(scale: float) -> List:
+        jobs = _cold_jobs(budget, seed)
+        for job in jobs:
+            space, wl, hw = job.space, job.workload_fn, job.hw_spec()
+            def eval_fn(index, profile, _space=space, _wl=wl, _hw=hw,
+                        _scale=scale):
+                from repro.core import costmodel
+                cs = costmodel.execute(_wl(_space[index]), _hw)
+                cost = (float(cs.runtime) + TEST_OVERHEAD) * _scale
+                time.sleep(cost)
+                return float(cs.runtime), None, cost
+            job.eval_fn = eval_fn
+        return jobs
+
+    # pre-compute total simulated cost to pick the sleep scale
+    busy = 0.0
+    for k, inp in KERNELS:
+        bm = BENCHMARKS[k]
+        space = bm.make_space()
+        # the random searcher at this seed visits this exact prefix
+        order = np.random.default_rng(seed).permutation(len(space))
+        for hw in HW:
+            rec = record_space(space, lambda c: bm.workload_fn(
+                c, bm.inputs[inp]), SPECS[hw])
+            busy += float(sum(rec.runtimes[i] + TEST_OVERHEAD
+                              for i in order[:budget]))
+    scale = target_busy_s / busy
+
+    def run(n_workers: int) -> Dict:
+        pool = ThreadWorkerPool(workers=n_workers)
+        try:
+            t0 = time.perf_counter()
+            rep = FleetTuner(make_jobs(scale), pool, store=None,
+                             in_flight=n_workers,
+                             publish_models=False).run()
+            wall = time.perf_counter() - t0
+        finally:
+            pool.close()
+        return {"workers": n_workers, "wall_s": wall,
+                "busy_s": rep.busy,
+                "trials": int(sum(r.trials for r in rep.results))}
+
+    seq = run(1)
+    fleet = run(workers)
+    return {"sleep_scale": scale, "sequential": seq, "fleet": fleet,
+            "speedup": seq["wall_s"] / fleet["wall_s"]}
+
+
+def run_warmstart(workers: int, budget: int, seed: int,
+                  store_path: str) -> Dict:
+    """Wave 1 cold on HW[0] (publishes artifacts), wave 2 warm on HW[1]."""
+    store = ConfigStore(store_path)
+    pool = VirtualWorkerPool(workers=workers)
+    waves = []
+    for hw in HW:
+        jobs = [job_from_registry(k, inp, hw, budget=budget, seed=seed)
+                for k, inp in KERNELS]
+        rep = FleetTuner(jobs, pool, store=store, in_flight=workers).run()
+        rows = []
+        for r in rep.results:
+            kernel = r.job.split("/", 1)[0]
+            bm = BENCHMARKS[kernel]
+            rec = record_space(
+                bm.make_space(),
+                lambda c: bm.workload_fn(c, bm.inputs[r.bucket]),
+                SPECS[hw])
+            rows.append(_result_row(
+                r, threshold=rec.best_runtime * WELL_FACTOR))
+        waves.append({"hardware": hw, "elapsed_s": rep.elapsed,
+                      "busy_s": rep.busy, "jobs": rows})
+
+    def t2w(row) -> int:
+        # censored at the budget when never reached (conservative)
+        v = row["trials_to_well"]
+        return int(v) if v is not None else int(row["trials"])
+
+    cold = [t2w(row) for row in waves[0]["jobs"]]
+    warm = [t2w(row) for row in waves[1]["jobs"]]
+    return {
+        "budget_per_job": budget,
+        "well_factor": WELL_FACTOR,
+        "wave1_cold": waves[0],
+        "wave2_warm": waves[1],
+        "cold_trials_to_well": cold,
+        "warm_trials_to_well": warm,
+        "cold_mean_trials_to_well": float(np.mean(cold)),
+        "warm_mean_trials_to_well": float(np.mean(warm)),
+        "warm_cold_ratio": float(np.mean(warm) / np.mean(cold)),
+        "all_wave2_warm_started": all(row["warm_started"]
+                                      for row in waves[1]["jobs"]),
+        "store_entries": len(store),
+    }
+
+
+def run_benchmark(workers: int, budget: int, warm_budget: int, seed: int,
+                  store_path: str, min_speedup: float,
+                  max_warm_ratio: float, threads: bool) -> Dict:
+    speedup = run_speedup(workers, budget, seed, threads)
+    warm = run_warmstart(workers, warm_budget, seed, store_path)
+    summary = {
+        "speedup": speedup["speedup"],
+        "meets_speedup_target": speedup["speedup"] >= min_speedup,
+        "identical_work": speedup["identical_work"],
+        "warm_cold_ratio": warm["warm_cold_ratio"],
+        "meets_warmstart_target":
+            warm["warm_cold_ratio"] <= max_warm_ratio,
+        "all_wave2_warm_started": warm["all_wave2_warm_started"],
+    }
+    violations = []
+    if not summary["meets_speedup_target"]:
+        violations.append(
+            f"fleet speedup {summary['speedup']:.2f}x < {min_speedup}x")
+    if not summary["identical_work"]:
+        violations.append("sequential and fleet runs did different work")
+    if not summary["meets_warmstart_target"]:
+        violations.append(
+            f"warm/cold trials-to-well ratio "
+            f"{summary['warm_cold_ratio']:.3f} > {max_warm_ratio}")
+    if not summary["all_wave2_warm_started"]:
+        violations.append("a wave-2 job failed to warm-start from the store")
+    return {
+        "schema": SCHEMA,
+        "version": VERSION,
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "host": {"python": platform.python_version(),
+                 "numpy": np.__version__,
+                 "machine": platform.machine()},
+        "workload": {
+            "kernels": [list(k) for k in KERNELS],
+            "hardware": list(HW),
+            "seed": seed,
+        },
+        "targets": {"min_speedup": min_speedup,
+                    "max_warm_ratio": max_warm_ratio,
+                    "workers": workers},
+        "speedup": speedup,
+        "warmstart": warm,
+        "summary": summary,
+        "violations": violations,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--budget", type=int, default=24,
+                    help="per-job trial budget for the speedup experiment")
+    ap.add_argument("--warm-budget", type=int, default=60,
+                    help="per-job trial budget for the warm-start waves")
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--store", default=None,
+                    help="warm-start store path (default: fresh temp file)")
+    ap.add_argument("--min-speedup", type=float, default=3.0)
+    ap.add_argument("--max-warm-ratio", type=float, default=0.5)
+    ap.add_argument("--threads", action="store_true",
+                    help="also measure the real ThreadWorkerPool speedup")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: smaller budgets, no thread timing")
+    args = ap.parse_args(argv)
+
+    budget, warm_budget, threads = args.budget, args.warm_budget, args.threads
+    if args.smoke:
+        budget, warm_budget, threads = 18, 40, False
+
+    if args.store is not None:
+        result = run_benchmark(args.workers, budget, warm_budget, args.seed,
+                               args.store, args.min_speedup,
+                               args.max_warm_ratio, threads)
+    else:
+        with tempfile.TemporaryDirectory() as td:
+            result = run_benchmark(args.workers, budget, warm_budget,
+                                   args.seed,
+                                   os.path.join(td, "fleet_store.json"),
+                                   args.min_speedup, args.max_warm_ratio,
+                                   threads)
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    s = result["summary"]
+    print(f"wrote {args.out}")
+    print(f"fleet speedup at {args.workers} workers: {s['speedup']:.2f}x "
+          f"(target >= {args.min_speedup}x: "
+          f"{'PASS' if s['meets_speedup_target'] else 'FAIL'})")
+    if "thread" in result["speedup"]:
+        print(f"  real thread-pool speedup: "
+              f"{result['speedup']['thread']['speedup']:.2f}x")
+    print(f"warm/cold trials-to-well: "
+          f"{result['warmstart']['warm_mean_trials_to_well']:.1f} / "
+          f"{result['warmstart']['cold_mean_trials_to_well']:.1f} "
+          f"= {s['warm_cold_ratio']:.3f} (target <= {args.max_warm_ratio}: "
+          f"{'PASS' if s['meets_warmstart_target'] else 'FAIL'})")
+    if result["violations"]:
+        print("TARGETS VIOLATED:\n  " + "\n  ".join(result["violations"]),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,12 +10,15 @@ Public API:
     autotune / train_model / run_search_experiment
 """
 from repro.core.account import (Candidate, EvalAccount, Evaluator,
-                                Observation, ProfilingUnsupported)
+                                Observation, ProfilingUnsupported, Ticket)
 from repro.core.bottleneck import analyze
 from repro.core.counters import PC_OPS, PC_STRESS, CounterSet
 from repro.core.evaluate import (CostModelEvaluator, FunctionEvaluator,
-                                 RecordedSpace, ReplayEvaluator, record_space)
-from repro.core.hwspec import PORTABILITY_SET, PRODUCTION, SPECS, HardwareSpec
+                                 RecordedSpace, ReplayEvaluator,
+                                 VirtualAsyncEvaluator, record_space)
+from repro.core.hwspec import (PORTABILITY_SET, PRODUCTION, SPECS,
+                               HardwareSpec, fingerprint, hardware_key,
+                               normalize_name)
 from repro.core.model import (DecisionTreeModel, ExactCounterModel,
                               QuadraticRegressionModel,
                               deliberate_training_sample, prediction_matrix)
@@ -25,9 +28,10 @@ from repro.core.searcher import (SEARCHERS, BasinHoppingSearcher,
                                  RandomSearcher, Searcher, StarchartSearcher,
                                  WarmStartSearcher, make_searcher,
                                  register_searcher, resolve_searcher,
-                                 run_search)
+                                 run_search, sequential_run_search)
 from repro.core.tuner import (SearchStats, TuneResult, autotune,
-                              convergence_curve, run_search_experiment,
+                              convergence_curve, predicted_runtimes,
+                              run_search_experiment,
                               steps_to_well_performing, train_model,
                               train_model_deliberate)
 from repro.core.tuning_space import (Config, TuningParameter, TuningSpace,
@@ -35,11 +39,12 @@ from repro.core.tuning_space import (Config, TuningParameter, TuningSpace,
 
 __all__ = [
     "analyze", "autotune", "compute_delta_pc", "convergence_curve",
-    "make_searcher", "record_space", "register_searcher", "resolve_searcher",
-    "run_search",
+    "fingerprint", "hardware_key", "make_searcher", "normalize_name",
+    "record_space", "register_searcher", "resolve_searcher",
+    "run_search", "sequential_run_search",
     "run_search_experiment", "steps_to_well_performing",
     "train_model", "train_model_deliberate", "deliberate_training_sample",
-    "powers_of_two", "prediction_matrix",
+    "powers_of_two", "predicted_runtimes", "prediction_matrix",
     "BasinHoppingSearcher", "Candidate", "Config", "CostModelEvaluator",
     "CounterSet", "DecisionTreeModel", "EvalAccount", "Evaluator",
     "ExactCounterModel", "FunctionEvaluator", "HardwareSpec", "Observation",
@@ -47,6 +52,6 @@ __all__ = [
     "ProfileBasedSearcher", "ProfileLocalSearcher", "ProfilingUnsupported",
     "QuadraticRegressionModel", "RandomSearcher", "RecordedSpace",
     "ReplayEvaluator", "SEARCHERS", "SearchStats", "Searcher",
-    "StarchartSearcher", "TuneResult", "TuningParameter", "TuningSpace",
-    "WarmStartSearcher",
+    "StarchartSearcher", "Ticket", "TuneResult", "TuningParameter",
+    "TuningSpace", "VirtualAsyncEvaluator", "WarmStartSearcher",
 ]

@@ -11,13 +11,31 @@ virtual-TPU cost model (``CostModelEvaluator``), real compiles
                              raise ``ProfilingUnsupported``);
   * ``measure_many(batch)`` — evaluate a batch of ``Candidate``s, returning
                              ``Observation``s (the hook for async/parallel
-                             tuning backends).
+                             tuning backends);
+  * ``submit(batch)`` /
+    ``collect()``           — the asynchronous form of the same protocol:
+                             ``submit`` hands candidates to the evaluator
+                             without waiting, ``collect`` returns finished
+                             ``Observation``s (possibly out of submission
+                             order).  The base class provides a synchronous
+                             shim (submit queues, collect evaluates), so
+                             every existing evaluator is already a valid —
+                             if serial — async backend.
 
 Accounting — steps, simulated wall-clock, per-step trace, best-so-far — is
 the paper's primary metric and must be identical across evaluators, so it
 lives in one place: ``EvalAccount``.  Searchers and the experiment harness
 read it through public accessors (``steps``, ``trace``, ``history()``) and
 never through evaluator internals.
+
+Cost accounting under concurrency: ``elapsed`` is the completion-time
+frontier (the wall-clock at which the latest finished test completed) and
+``busy`` is the sum of per-test costs (worker-seconds).  A sequential
+evaluator records through ``record`` where the two coincide; concurrent
+backends record through ``record_completion`` in completion order, so the
+trace stays sorted by *when results became known* — which is what
+best-so-far convergence curves must be ordered by — rather than by
+submission order.
 """
 from __future__ import annotations
 
@@ -51,6 +69,14 @@ class Observation:
     elapsed: float = 0.0                    # simulated tuning wall-clock so far
 
 
+@dataclasses.dataclass(frozen=True)
+class Ticket:
+    """Receipt for a submitted-but-not-yet-collected empirical test."""
+
+    uid: int
+    candidate: Candidate
+
+
 class EvalAccount:
     """Steps / elapsed / trace / best bookkeeping shared by all evaluators.
 
@@ -62,21 +88,44 @@ class EvalAccount:
     def __init__(self) -> None:
         self.steps: int = 0
         self.elapsed: float = 0.0
+        self.busy: float = 0.0
         self.trace: List[Tuple[int, float, float]] = []
         self.history: List[Tuple[int, float]] = []
         self.evaluated: Set[int] = set()
         self.best_runtime: float = float("inf")
         self.best_index: Optional[int] = None
 
-    def record(self, idx: int, runtime: float, cost: float) -> None:
-        self.steps += 1
-        self.elapsed += cost
+    def _note(self, idx: int, runtime: float) -> None:
         self.evaluated.add(idx)
         if runtime < self.best_runtime:
             self.best_runtime = runtime
             self.best_index = idx
-        self.trace.append((self.steps, self.elapsed, runtime))
         self.history.append((idx, runtime))
+
+    def record(self, idx: int, runtime: float, cost: float) -> None:
+        """Sequential completion: the clock advances by the test's cost."""
+        self.steps += 1
+        self.elapsed += cost
+        self.busy += cost
+        self._note(idx, runtime)
+        self.trace.append((self.steps, self.elapsed, runtime))
+
+    def record_completion(self, idx: int, runtime: float, cost: float,
+                          finished_at: float) -> None:
+        """Concurrent completion at wall-clock ``finished_at``.
+
+        Must be called in completion order (collect() guarantees this): the
+        trace then stays sorted by when each result became known, so
+        best-so-far curves are correct even when tests finish out of
+        submission order.  ``elapsed`` advances to the completion frontier;
+        ``cost`` accrues to ``busy`` (worker-seconds) only — under
+        ``k``-way concurrency the wall-clock is NOT the sum of costs.
+        """
+        self.steps += 1
+        self.elapsed = max(self.elapsed, float(finished_at))
+        self.busy += cost
+        self._note(idx, runtime)
+        self.trace.append((self.steps, float(finished_at), runtime))
 
 
 class Evaluator:
@@ -90,6 +139,8 @@ class Evaluator:
     def __init__(self, space: TuningSpace):
         self.space = space
         self.account = EvalAccount()
+        self._pending: List[Ticket] = []    # submitted, not yet collected
+        self._ticket_uid = 0
 
     # -- accounting accessors (read-only views over the account) ---------------
     @property
@@ -99,6 +150,10 @@ class Evaluator:
     @property
     def elapsed(self) -> float:
         return self.account.elapsed
+
+    @property
+    def busy(self) -> float:
+        return self.account.busy
 
     @property
     def trace(self) -> List[Tuple[int, float, float]]:
@@ -164,3 +219,41 @@ class Evaluator:
             out.append(Observation(index=c.index, runtime=rt, counters=cs,
                                    step=self.steps, elapsed=self.elapsed))
         return out
+
+    # -- asynchronous protocol (default synchronous shim) ----------------------
+    def submit(self, candidates: Sequence[Union[Candidate, int]]
+               ) -> List[Ticket]:
+        """Hand candidates to the evaluator without waiting for results.
+
+        The base implementation only queues them; real async backends
+        override submit/collect to start work immediately.  Either way the
+        contract is the same: every submitted candidate is eventually
+        returned by ``collect`` exactly once, and accounting happens at
+        collection (completion) time.
+        """
+        tickets = []
+        for c in candidates:
+            if not isinstance(c, Candidate):
+                c = Candidate(int(c))
+            t = Ticket(uid=self._ticket_uid, candidate=c)
+            self._ticket_uid += 1
+            self._pending.append(t)
+            tickets.append(t)
+        return tickets
+
+    def collect(self, timeout: Optional[float] = None) -> List[Observation]:
+        """Return finished observations for submitted candidates.
+
+        The synchronous shim evaluates everything pending, in submission
+        order, right now — which makes ``submit``+``collect`` through this
+        shim bit-identical to ``measure_many`` (and hence the ``in_flight=1``
+        event-driven driver bit-identical to the sequential one).  Async
+        backends instead block up to ``timeout`` for at least one completion
+        and return observations in completion order.
+        """
+        pending, self._pending = self._pending, []
+        return self.measure_many([t.candidate for t in pending])
+
+    def outstanding(self) -> int:
+        """Number of submitted-but-not-yet-collected empirical tests."""
+        return len(self._pending)

@@ -11,18 +11,23 @@ steps and simulated wall-clock (profiled runs are slower — §4.6).
 no counters, so only counter-free searchers can drive it).
 
 All evaluators implement the shared ``repro.core.account.Evaluator``
-protocol: ``measure`` / ``profile`` / ``measure_many`` plus the uniform
-``EvalAccount`` bookkeeping (steps, elapsed, trace, history, best).
+protocol: ``measure`` / ``profile`` / ``measure_many`` / ``submit`` /
+``collect`` plus the uniform ``EvalAccount`` bookkeeping (steps, elapsed,
+busy, trace, history, best).  ``VirtualAsyncEvaluator`` wraps any of them
+in a simulated ``workers``-lane concurrent backend (deterministic virtual
+clock) — the reference implementation of the async half of the protocol.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+import heapq
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import costmodel
-from repro.core.account import Evaluator
+from repro.core.account import (Candidate, Evaluator, Observation,
+                                ProfilingUnsupported, Ticket)
 from repro.core.counters import CounterSet
 from repro.core.hwspec import HardwareSpec
 from repro.core.tuning_space import Config, TuningSpace
@@ -167,3 +172,72 @@ class FunctionEvaluator(Evaluator):
         rt = float(self.fn(self.space[idx]))
         self._cache[idx] = rt
         return rt, None, rt
+
+
+class VirtualAsyncEvaluator(Evaluator):
+    """Simulated ``workers``-lane concurrency over any inner evaluator.
+
+    ``submit`` dispatches each candidate to the earliest-free virtual
+    worker; ``collect`` returns the earliest-*finishing* outstanding test,
+    so completions come back out of submission order exactly as they would
+    from a real device pool (a cheap config submitted after an expensive one
+    finishes first).  Accounting goes through
+    ``EvalAccount.record_completion``: the trace is ordered by completion
+    time, ``elapsed`` is the completion frontier (wall-clock of a
+    ``workers``-wide fleet), and ``busy`` is the familiar sum of per-test
+    costs — with ``workers=1`` the two coincide and the behaviour degrades
+    to the sequential evaluator's.
+
+    The inner evaluator is used only for its pure ``_evaluate`` hook (all
+    bookkeeping lives on THIS account); it must not be driven concurrently
+    elsewhere.
+    """
+
+    def __init__(self, inner: Evaluator, workers: int = 4):
+        super().__init__(inner.space)
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.inner = inner
+        self.workers = int(workers)
+        self._free = [0.0] * self.workers    # per-worker next-free time
+        self._now = 0.0                      # time of the last collection
+        self._heap: List[Tuple[float, int, Candidate, float,
+                               Optional[CounterSet], float]] = []
+        self._seq = 0
+
+    def _evaluate(self, idx: int, profiled: bool
+                  ) -> Tuple[float, Optional[CounterSet], float]:
+        return self.inner._evaluate(idx, profiled)
+
+    def submit(self, candidates: Sequence[Union[Candidate, int]]
+               ) -> List[Ticket]:
+        tickets = []
+        for c in candidates:
+            if not isinstance(c, Candidate):
+                c = Candidate(int(c))
+            rt, cs, cost = self.inner._evaluate(c.index, c.profile)
+            if c.profile and cs is None:
+                raise ProfilingUnsupported(
+                    f"{type(self.inner).__name__} cannot collect "
+                    "performance counters")
+            w = min(range(self.workers), key=lambda i: self._free[i])
+            start = max(self._now, self._free[w])
+            finish = start + cost
+            self._free[w] = finish
+            heapq.heappush(self._heap, (finish, self._seq, c, rt, cs, cost))
+            tickets.append(Ticket(uid=self._seq, candidate=c))
+            self._seq += 1
+        return tickets
+
+    def collect(self, timeout: Optional[float] = None) -> List[Observation]:
+        """Pop the earliest-finishing outstanding test ([] if none)."""
+        if not self._heap:
+            return []
+        finish, _, c, rt, cs, cost = heapq.heappop(self._heap)
+        self._now = max(self._now, finish)
+        self.account.record_completion(c.index, rt, cost, finish)
+        return [Observation(index=c.index, runtime=rt, counters=cs,
+                            step=self.steps, elapsed=self.elapsed)]
+
+    def outstanding(self) -> int:
+        return len(self._heap)

@@ -12,7 +12,8 @@ Numbers are public per-chip peaks.  ``v5e`` is the production dry-run target
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+import re
+from typing import Dict, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,5 +87,63 @@ PORTABILITY_SET: Tuple[str, ...] = ("tpu_v4", "tpu_v5e", "tpu_v5p", "tpu_v6e")
 PRODUCTION = TPU_V5E
 
 
+def _squash(name: str) -> str:
+    """Alphanumeric-only lowercase form used for drift-tolerant matching."""
+    return re.sub(r"[^a-z0-9]", "", str(name).lower())
+
+
+def normalize_name(name: str) -> str:
+    """Canonical hardware-name string, stable under naming drift.
+
+    Resolves to a registered spec's name whenever the alphanumeric forms
+    match ("TPUv4", "tpu-v4", "TPU_V4" → "tpu_v4"); otherwise returns a
+    lower_snake_case normalization of the given name, so even unregistered
+    hardware gets a deterministic identity.
+    """
+    sq = _squash(name)
+    for canon in SPECS:
+        if _squash(canon) == sq:
+            return canon
+    norm = re.sub(r"[^a-z0-9]+", "_", str(name).strip().lower()).strip("_")
+    return norm or "unknown"
+
+
 def get(name: str) -> HardwareSpec:
-    return SPECS[name]
+    """Spec by name, tolerating naming drift via ``normalize_name``.
+
+    Raises ``KeyError`` (with the registered names) only when even the
+    normalized form is unknown.
+    """
+    if name in SPECS:
+        return SPECS[name]
+    canon = normalize_name(name)
+    if canon in SPECS:
+        return SPECS[canon]
+    raise KeyError(
+        f"unknown hardware {name!r} (normalized: {canon!r}); "
+        f"registered: {sorted(SPECS)}")
+
+
+def fingerprint(spec: HardwareSpec) -> str:
+    """Stable identity for hardware outside the registry: the normalized
+    name plus the declared peak matmul throughput and HBM bandwidth — two
+    machines that agree on all three are the same tuning target for the
+    cost model's purposes."""
+    return (f"{normalize_name(spec.name)}"
+            f"-{spec.mxu_flops / 1e12:.0f}tf-{spec.hbm_bw / 1e9:.0f}gbs")
+
+
+def hardware_key(hw: Union[str, HardwareSpec]) -> str:
+    """Canonical ``ConfigStore`` hardware key.
+
+    Registered hardware (by spec or any naming-drift variant of its name)
+    maps to the registry name, so "tpu_v4" and "TPUv4" share store entries;
+    unregistered specs fall back to their ``fingerprint`` and unregistered
+    name strings to their normalized form.
+    """
+    if isinstance(hw, HardwareSpec):
+        canon = normalize_name(hw.name)
+        # normalize_name resolves to a registry name exactly when the
+        # squashed forms match, so this is the registered/unregistered test
+        return canon if canon in SPECS else fingerprint(hw)
+    return normalize_name(hw)

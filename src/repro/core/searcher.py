@@ -135,19 +135,53 @@ class Searcher:
         run_search(self, ev, max_steps)
 
 
-def run_search(searcher: Searcher, ev, max_steps: int) -> None:
-    """The uniform ask-tell driver loop used by every call site.
-
-    ``max_steps`` is relative to the evaluator's state on entry, so an
-    evaluator that already spent steps (e.g. on a training phase) still gets
-    a full search budget.
-    """
+def sequential_run_search(searcher: Searcher, ev, max_steps: int) -> None:
+    """The original synchronous driver, kept verbatim as the golden
+    reference: ``run_search(..., in_flight=1)`` must replay it bit-for-bit
+    (full trace, not just the best — see tests/test_fleet.py)."""
     start = ev.steps
     while ev.steps - start < max_steps and not ev.exhausted():
         cands = searcher.propose(max_steps - (ev.steps - start))
         if not cands:
             return
         searcher.observe(ev.measure_many(cands))
+
+
+def run_search(searcher: Searcher, ev, max_steps: int,
+               in_flight: int = 1) -> None:
+    """The uniform event-driven ask-tell driver used by every call site.
+
+    Keeps up to ``in_flight`` candidates outstanding on the evaluator:
+    while earlier submissions are still measuring, the searcher is asked for
+    more (a generator-backed searcher that is waiting on its current batch
+    simply returns ``[]`` and the driver collects instead).  With the
+    default synchronous submit/collect shim and ``in_flight=1`` this is
+    provably trace-identical to ``sequential_run_search``: the same
+    candidates are proposed in the same order, evaluated one at a time, and
+    recorded with identical (steps, elapsed, runtime) rows.
+
+    ``max_steps`` budgets *submissions* relative to the evaluator's state on
+    entry (an evaluator that already spent steps on a training phase still
+    gets a full search budget); everything submitted is drained before
+    returning, so the account always ends with zero outstanding tests.
+    """
+    if in_flight < 1:
+        raise ValueError(f"in_flight must be >= 1, got {in_flight}")
+    submitted = 0
+    while True:
+        while (submitted < max_steps and ev.outstanding() < in_flight
+               and not ev.exhausted()):
+            k = min(in_flight - ev.outstanding(), max_steps - submitted)
+            cands = searcher.propose(k)
+            if not cands:
+                break   # searcher finished, or waiting on outstanding tests
+            ev.submit(cands)
+            submitted += len(cands)
+        if ev.outstanding() == 0:
+            return
+        obs = ev.collect()
+        if obs:
+            searcher.observe(obs)
 
 
 def resolve_searcher(searcher) -> Type[Searcher]:

@@ -11,6 +11,7 @@ searcher exists for.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, Tuple
 
@@ -40,7 +41,10 @@ class CompiledStepEvaluator(Evaluator):
     Implements the shared evaluator protocol; the ``cost`` charged per
     empirical test is the real compile wall-clock (0 on compile-cache hits),
     so ``elapsed`` is honest tuning time in this expensive-measurement
-    regime.
+    regime.  Each test times its own compile (the shared
+    ``compile_seconds`` total is lock-guarded), so an async driver that
+    overlaps compiles still charges every test its true cost instead of a
+    racy delta of the shared counter.
     """
 
     def __init__(self, arch_name: str, shape_name: str,
@@ -51,9 +55,10 @@ class CompiledStepEvaluator(Evaluator):
         self.hbm_bytes = hbm_bytes
         self.verbose = verbose
         self._cache: Dict[int, CounterSet] = {}
+        self._lock = threading.Lock()
         self.compile_seconds = 0.0
 
-    def _counters_for(self, cfg: Config) -> CounterSet:
+    def _counters_for(self, cfg: Config) -> Tuple[CounterSet, float]:
         from repro.distributed.sharding import default_rules
         from repro.launch import dryrun
 
@@ -68,7 +73,9 @@ class CompiledStepEvaluator(Evaluator):
             rules_overrides=rules_override,
             verbose=False,
         )
-        self.compile_seconds += time.time() - t0
+        compile_s = time.time() - t0
+        with self._lock:
+            self.compile_seconds += compile_s
         rf = rec["roofline"]
         mem_live = rec["memory"]["peak_bytes"]
         compute_s, memory_s = rf["compute_s"], rf["memory_s"]
@@ -105,13 +112,16 @@ class CompiledStepEvaluator(Evaluator):
         if self.verbose:
             print(f"  [step-tune] {cfg} -> {runtime*1e3:8.1f}ms"
                   f"{' (OOM)' if oom else ''}")
-        return cs
+        return cs, compile_s
 
     def _evaluate(
         self, idx: int, profiled: bool
     ) -> Tuple[float, CounterSet, float]:
-        before = self.compile_seconds
-        if idx not in self._cache:
-            self._cache[idx] = self._counters_for(self.space[idx])
-        cs = self._cache[idx]
-        return float(cs.runtime), cs, self.compile_seconds - before
+        with self._lock:
+            cs = self._cache.get(idx)
+        if cs is not None:
+            return float(cs.runtime), cs, 0.0
+        cs, compile_s = self._counters_for(self.space[idx])
+        with self._lock:
+            self._cache[idx] = cs
+        return float(cs.runtime), cs, compile_s

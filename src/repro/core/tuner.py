@@ -21,16 +21,39 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import costmodel
+from repro.core import counters as C
 from repro.core.evaluate import (CostModelEvaluator, RecordedSpace,
                                  ReplayEvaluator, record_space)
 from repro.core.hwspec import HardwareSpec
 from repro.core.model import (DecisionTreeModel, ExactCounterModel,
                               QuadraticRegressionModel, TPPCModel,
-                              deliberate_training_sample)
+                              deliberate_training_sample, prediction_matrix)
 from repro.core.searcher import ProfileBasedSearcher, Searcher
 from repro.core.tuning_space import Config, TuningSpace
 
 WELL_PERFORMING_FACTOR = 1.1  # paper §4.1
+
+
+def predicted_runtimes(model: TPPCModel, space: TuningSpace,
+                       hw: HardwareSpec) -> np.ndarray:
+    """Whole-space predicted runtimes: the portable model's PC_ops
+    predictions priced through the cost model on ``hw``.
+
+    The warm-start substrate shared by the serving tuner's ranking and the
+    fleet's ``predicted_runtime_order``: negative predictions are clamped
+    to zero and non-ops columns dropped before pricing.  One scalar
+    ``costmodel.execute`` per config — fine at serving/fleet space sizes
+    (tens to ~1k); batch ``execute`` before pointing this at paper-scale
+    (200k) spaces.
+    """
+    names, mat = prediction_matrix(model, space)
+    pred = np.empty(len(space), dtype=np.float64)
+    for i in range(len(space)):
+        ops = {k: max(0.0, float(v)) for k, v in zip(names, mat[i])
+               if k in C.PC_OPS}
+        pred[i] = costmodel.execute(ops, hw).runtime
+    return pred
 
 
 # =============================================================================

@@ -1,0 +1,31 @@
+"""``repro.fleet`` — asynchronous fleet orchestration for autotuning.
+
+Keeps N empirical tests in flight across many (kernel × input bucket ×
+hardware) tuning jobs: ``TuningJob``s are scheduled by a ``FleetTuner``
+over a worker pool (deterministic virtual clock, in-process threads, or
+per-lane subprocesses), share one concurrency-safe ``ConfigStore``, and
+warm-start from the nearest stored TP→PC model artifact.
+
+    from repro.fleet import (FleetTuner, VirtualWorkerPool,
+                             job_from_registry)
+    from repro.tuning import ConfigStore
+
+    jobs = [job_from_registry("matmul", "2048", hw, budget=24)
+            for hw in ("tpu_v4", "tpu_v5e")]
+    report = FleetTuner(jobs, VirtualWorkerPool(workers=4),
+                        store=ConfigStore("fleet_store.json")).run()
+
+CLI: ``python -m repro.launch.fleet``; benchmark:
+``python -m benchmarks.bench_fleet`` (writes ``BENCH_fleet.json``).
+"""
+from repro.fleet.job import JobResult, TuningJob, job_from_registry
+from repro.fleet.pool import (SubprocessWorkerPool, ThreadWorkerPool,
+                              VirtualWorkerPool, WorkItem, WorkResult)
+from repro.fleet.tuner import (FleetReport, FleetTuner,
+                               predicted_runtime_order)
+
+__all__ = [
+    "FleetReport", "FleetTuner", "JobResult", "SubprocessWorkerPool",
+    "ThreadWorkerPool", "TuningJob", "VirtualWorkerPool", "WorkItem",
+    "WorkResult", "job_from_registry", "predicted_runtime_order",
+]

@@ -1,0 +1,110 @@
+"""``TuningJob`` / ``JobResult`` — the unit of fleet work.
+
+A job is one (kernel × input bucket × hardware) autotuning task: a tuning
+space, the portable workload model for that input, the hardware target, and
+a trial budget.  The fleet schedules many of them over one worker pool and
+records each through its own ``EvalAccount`` (completion-ordered trace), so
+per-job convergence stays comparable to single-job tuning while the pool's
+wall-clock amortizes across the whole fleet.
+
+Jobs built from the kernel registry (``job_from_registry``) also carry
+their ``(kernel, input_key)`` provenance, which is what subprocess worker
+backends ship across the process boundary instead of the (unpicklable)
+workload closure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+from repro.core import hwspec
+from repro.core.hwspec import HardwareSpec
+from repro.core.tuning_space import Config, TuningSpace
+
+
+@dataclasses.dataclass
+class TuningJob:
+    """One (kernel × input bucket × hardware) autotuning task."""
+
+    name: str
+    space: TuningSpace
+    workload_fn: Callable[[Config], Dict[str, float]]
+    hardware: Union[str, HardwareSpec]
+    bucket: str = "default"          # input-shape bucket / input tag
+    budget: int = 25                 # empirical-test budget
+    seed: int = 0
+    searcher: Optional[str] = None   # None = auto: warm_start on a stored
+    #                                  artifact hit, else ``cold_searcher``
+    cold_searcher: str = "random"
+    kernel: Optional[str] = None     # registry provenance (subprocess pools)
+    input_key: Optional[str] = None
+    # override measurement: (index, profile) -> (runtime, counters, cost).
+    # Default None = price workload_fn through the cost model on `hardware`
+    # with the replay cost structure.  Thread pools time fn() wall-clock, so
+    # a blocking eval_fn here is how real timed measurements plug in.
+    eval_fn: Optional[Callable] = None
+
+    def hw_spec(self) -> HardwareSpec:
+        if isinstance(self.hardware, HardwareSpec):
+            return self.hardware
+        return hwspec.get(self.hardware)
+
+    @property
+    def hardware_key(self) -> str:
+        """Normalized store key for this job's hardware target."""
+        return hwspec.hardware_key(self.hardware)
+
+
+def job_from_registry(kernel: str, input_key: str,
+                      hardware: Union[str, HardwareSpec],
+                      budget: int = 25, seed: int = 0,
+                      searcher: Optional[str] = None,
+                      cold_searcher: str = "random") -> TuningJob:
+    """Build a job from a registered kernel benchmark + named input."""
+    from repro.kernels.registry import BENCHMARKS
+
+    bm = BENCHMARKS[kernel]
+    if input_key not in bm.inputs:
+        raise KeyError(f"kernel {kernel!r} has no input {input_key!r}; "
+                       f"available: {sorted(bm.inputs)}")
+    inp = bm.inputs[input_key]
+    hw_key = hwspec.hardware_key(hardware)
+    return TuningJob(
+        name=f"{kernel}/{input_key}@{hw_key}",
+        space=bm.make_space(),
+        workload_fn=lambda cfg: bm.workload_fn(cfg, inp),
+        hardware=hardware,
+        bucket=input_key,
+        budget=budget,
+        seed=seed,
+        searcher=searcher,
+        cold_searcher=cold_searcher,
+        kernel=kernel,
+        input_key=input_key,
+    )
+
+
+@dataclasses.dataclass
+class JobResult:
+    """Outcome of one fleet job, read off its completion-ordered account."""
+
+    job: str
+    bucket: str
+    hardware: str
+    searcher: str
+    warm_started: bool
+    best_index: int
+    best_config: Config
+    best_runtime: float
+    trials: int                  # empirical tests completed
+    elapsed: float               # job's completion frontier on the pool clock
+    busy: float                  # worker-seconds spent on this job
+    trace: List[Tuple[int, float, float]]
+    history: List[Tuple[int, float]]
+
+    def trials_to_threshold(self, threshold: float) -> Optional[int]:
+        """Completed trials until runtime <= threshold (None: never)."""
+        for steps, _, rt in self.trace:
+            if rt <= threshold:
+                return steps
+        return None

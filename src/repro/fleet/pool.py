@@ -1,0 +1,341 @@
+"""Worker pools: the fleet's asynchronous measurement substrate.
+
+All pools speak the same submit/collect protocol as the async evaluator
+layer, but at fleet scope — one pool serves empirical tests from MANY jobs,
+so a job whose searcher is waiting on its current batch never idles a
+worker that another job could use:
+
+* ``VirtualWorkerPool``    — deterministic simulated concurrency: work is
+  evaluated eagerly (the cost-model workloads are pure) and completion
+  times are scheduled on a virtual clock with ``workers`` parallel lanes.
+  The benchmark/test backend: bit-reproducible, no threads.
+* ``ThreadWorkerPool``     — real in-process concurrency over a
+  ``ThreadPoolExecutor``; costs and completion times are measured
+  wall-clock.  For measurement callables that genuinely block (timed
+  kernels, RPCs to devices).
+* ``SubprocessWorkerPool`` — one persistent worker *process* per lane,
+  speaking JSON-lines over stdin/stdout (``repro.fleet.worker_main``).
+  Workers can bring up their own multi-device jax runtime (the
+  ``launch/mesh.py`` host-mesh machinery via
+  ``--xla_force_host_platform_device_count``), which is the shape of a real
+  per-device fleet backend; work items must carry a serializable
+  ``payload`` (registry kernel + input + hardware + config index) instead
+  of a closure.
+
+``WorkItem.fn`` is a zero-arg callable returning ``(runtime, counters,
+cost)`` — the same triple as ``Evaluator._evaluate`` — used by the
+in-process pools; ``WorkItem.payload`` is the serializable description used
+by subprocess pools.  ``WorkResult.finished_at`` is on the pool's clock
+(virtual seconds or wall seconds since pool start).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+import os
+import queue
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.counters import CounterSet
+
+EvalFn = Callable[[], Tuple[float, Optional[CounterSet], float]]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkItem:
+    """One empirical test, addressed back to its job by name."""
+
+    uid: int
+    job: str
+    index: int
+    profile: bool = False
+    fn: Optional[EvalFn] = None
+    payload: Optional[Dict[str, Any]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkResult:
+    uid: int
+    job: str
+    index: int
+    runtime: float
+    counters: Optional[CounterSet]
+    cost: float          # worker-seconds this test occupied a lane
+    finished_at: float   # completion time on the pool clock
+    error: Optional[str] = None
+
+
+class VirtualWorkerPool:
+    """Deterministic ``workers``-lane scheduling on a virtual clock.
+
+    ``submit`` evaluates the item's pure ``fn`` immediately, assigns the
+    test to the earliest-free lane (started no earlier than the last
+    collection — the moment the orchestrator could have decided to submit),
+    and schedules its completion; ``collect`` pops the earliest-finishing
+    outstanding test and advances the clock to it.  ``elapsed()`` is the
+    makespan so far — the fleet's simulated wall-clock.
+    """
+
+    def __init__(self, workers: int = 4):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.workers = int(workers)
+        self._free = [0.0] * self.workers
+        self._now = 0.0
+        self._heap: List[Tuple[float, int, WorkItem, float,
+                               Optional[CounterSet], float]] = []
+        self._seq = 0
+
+    def submit(self, item: WorkItem) -> None:
+        rt, cs, cost = item.fn()
+        lane = min(range(self.workers), key=lambda i: self._free[i])
+        start = max(self._now, self._free[lane])
+        finish = start + cost
+        self._free[lane] = finish
+        heapq.heappush(self._heap, (finish, self._seq, item, rt, cs, cost))
+        self._seq += 1
+
+    def collect(self, timeout: Optional[float] = None) -> WorkResult:
+        if not self._heap:
+            raise RuntimeError("collect() with no outstanding work")
+        finish, _, item, rt, cs, cost = heapq.heappop(self._heap)
+        self._now = max(self._now, finish)
+        return WorkResult(uid=item.uid, job=item.job, index=item.index,
+                          runtime=rt, counters=cs, cost=cost,
+                          finished_at=finish)
+
+    def outstanding(self) -> int:
+        return len(self._heap)
+
+    def elapsed(self) -> float:
+        return self._now
+
+    def close(self) -> None:
+        pass
+
+
+class ThreadWorkerPool:
+    """Real in-process concurrency: ``workers`` threads, wall-clock costs.
+
+    Suited to measurement callables that release the GIL or block (device
+    RPCs, subprocess compiles, sleeps); a pure-Python compute-bound ``fn``
+    will serialize on the GIL and show no speedup.
+    """
+
+    def __init__(self, workers: int = 4):
+        from concurrent.futures import ThreadPoolExecutor
+
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.workers = int(workers)
+        self._ex = ThreadPoolExecutor(max_workers=self.workers,
+                                      thread_name_prefix="fleet-worker")
+        self._t0 = time.perf_counter()
+        self._done: "queue.Queue[WorkResult]" = queue.Queue()
+        self._outstanding = 0
+
+    def _run(self, item: WorkItem) -> None:
+        start = time.perf_counter()
+        try:
+            rt, cs, _ = item.fn()
+            err = None
+        except Exception as e:                      # surfaced at collect()
+            rt, cs, err = float("inf"), None, f"{type(e).__name__}: {e}"
+        end = time.perf_counter()
+        self._done.put(WorkResult(
+            uid=item.uid, job=item.job, index=item.index, runtime=rt,
+            counters=cs, cost=end - start, finished_at=end - self._t0,
+            error=err))
+
+    def submit(self, item: WorkItem) -> None:
+        self._outstanding += 1
+        self._ex.submit(self._run, item)
+
+    def collect(self, timeout: Optional[float] = None) -> WorkResult:
+        res = self._done.get(timeout=timeout)
+        self._outstanding -= 1
+        if res.error is not None:
+            raise RuntimeError(
+                f"worker failed on {res.job}[{res.index}]: {res.error}")
+        return res
+
+    def outstanding(self) -> int:
+        return self._outstanding
+
+    def elapsed(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def close(self) -> None:
+        self._ex.shutdown(wait=False, cancel_futures=True)
+
+
+class SubprocessWorkerPool:
+    """``workers`` persistent evaluation processes over JSON-lines pipes.
+
+    Each worker runs ``python -m repro.fleet.worker_main`` with its own
+    interpreter (and, with ``devices_per_worker > 0``, its own jax host
+    runtime of that many devices brought up through the ``launch/mesh.py``
+    host-mesh machinery).  Work items must carry a ``payload`` naming a
+    registered kernel workload; results stream back on a reader thread per
+    worker, so ``collect`` sees completions in real finish order across the
+    whole pool.
+    """
+
+    def __init__(self, workers: int = 2, devices_per_worker: int = 0,
+                 startup_timeout: float = 120.0):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.workers = int(workers)
+        self._t0 = time.perf_counter()
+        self._done: "queue.Queue[WorkResult]" = queue.Queue()
+        self._outstanding = 0
+        self._items: Dict[int, WorkItem] = {}
+        self._owner: Dict[int, int] = {}   # uid -> worker lane
+        self._lock = threading.Lock()
+        self._procs: List[subprocess.Popen] = []
+        self._busy = [0] * self.workers    # in-flight per worker (least-loaded)
+        self._dead = [False] * self.workers
+        self._readers: List[threading.Thread] = []
+
+        import repro
+
+        src_dir = os.path.dirname(os.path.dirname(
+            os.path.abspath(repro.__file__)))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_dir + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        cmd = [sys.executable, "-m", "repro.fleet.worker_main",
+               "--devices", str(int(devices_per_worker))]
+        for w in range(self.workers):
+            p = subprocess.Popen(cmd, stdin=subprocess.PIPE,
+                                 stdout=subprocess.PIPE, env=env, text=True,
+                                 bufsize=1)
+            self._procs.append(p)
+            t = threading.Thread(target=self._reader, args=(w, p),
+                                 daemon=True)
+            t.start()
+            self._readers.append(t)
+        # handshake: a ping per worker proves imports/devices came up
+        try:
+            for p in self._procs:
+                p.stdin.write(json.dumps({"op": "ping"}) + "\n")
+                p.stdin.flush()
+            deadline = time.perf_counter() + startup_timeout
+            for _ in range(self.workers):
+                remaining = max(0.1, deadline - time.perf_counter())
+                try:
+                    res = self._done.get(timeout=remaining)
+                except queue.Empty:
+                    raise RuntimeError(
+                        f"fleet worker produced no handshake within "
+                        f"{startup_timeout:.0f}s (its stderr goes to this "
+                        "process's stderr — check for import/device "
+                        "errors)") from None
+                if res.error is not None:
+                    raise RuntimeError(f"fleet worker failed to start: "
+                                       f"{res.error}")
+        except BaseException:
+            self.close()           # don't leak the surviving workers
+            raise
+
+    def _reader(self, worker: int, p: subprocess.Popen) -> None:
+        for line in p.stdout:
+            try:
+                msg = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if msg.get("op") == "pong":
+                self._done.put(WorkResult(uid=-1, job="", index=-1,
+                                          runtime=0.0, counters=None,
+                                          cost=0.0, finished_at=0.0,
+                                          error=msg.get("error")))
+                continue
+            with self._lock:
+                item = self._items.pop(msg["uid"], None)
+                self._owner.pop(msg["uid"], None)
+                self._busy[worker] -= 1
+            if item is None:
+                continue
+            cs = None
+            if "ops" in msg:
+                cs = CounterSet(ops=msg["ops"], stress=msg["stress"],
+                                runtime=float(msg["runtime"]))
+            self._done.put(WorkResult(
+                uid=item.uid, job=item.job, index=item.index,
+                runtime=float(msg.get("runtime", float("inf"))),
+                counters=cs, cost=float(msg.get("cost", 0.0)),
+                finished_at=time.perf_counter() - self._t0,
+                error=msg.get("error")))
+        # stdout EOF: the worker exited.  During close() nothing is in
+        # flight on it; otherwise it died mid-run — fail its lost items so
+        # collect() raises instead of blocking forever, and stop routing
+        # new work to the lane.
+        with self._lock:
+            self._dead[worker] = True
+            lost = [uid for uid, w in self._owner.items() if w == worker]
+            items = [self._items.pop(uid) for uid in lost]
+            for uid in lost:
+                del self._owner[uid]
+        now = time.perf_counter() - self._t0
+        for item in items:
+            self._done.put(WorkResult(
+                uid=item.uid, job=item.job, index=item.index,
+                runtime=float("inf"), counters=None, cost=0.0,
+                finished_at=now,
+                error=f"worker process {worker} exited "
+                      f"(rc={p.poll()}) with this test in flight"))
+
+    def submit(self, item: WorkItem) -> None:
+        if item.payload is None:
+            raise ValueError(
+                "SubprocessWorkerPool needs serializable payloads "
+                "(build jobs with fleet.job_from_registry)")
+        with self._lock:
+            alive = [i for i in range(self.workers) if not self._dead[i]]
+            if not alive:
+                raise RuntimeError("all fleet worker processes have died")
+            worker = min(alive, key=lambda i: self._busy[i])
+            self._busy[worker] += 1
+            self._items[item.uid] = item
+            self._owner[item.uid] = worker
+        req = dict(item.payload)
+        req.update(uid=item.uid, index=int(item.index),
+                   profile=bool(item.profile))
+        p = self._procs[worker]
+        p.stdin.write(json.dumps(req) + "\n")
+        p.stdin.flush()
+        self._outstanding += 1
+
+    def collect(self, timeout: Optional[float] = None) -> WorkResult:
+        res = self._done.get(timeout=timeout)
+        self._outstanding -= 1
+        if res.error is not None:
+            raise RuntimeError(
+                f"worker failed on {res.job}[{res.index}]: {res.error}")
+        return res
+
+    def outstanding(self) -> int:
+        return self._outstanding
+
+    def elapsed(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def close(self) -> None:
+        for p in self._procs:
+            try:
+                if p.stdin and not p.stdin.closed:
+                    p.stdin.write(json.dumps({"op": "shutdown"}) + "\n")
+                    p.stdin.flush()
+                    p.stdin.close()
+            except (BrokenPipeError, OSError):
+                pass
+        for p in self._procs:
+            try:
+                p.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                p.kill()

@@ -1,0 +1,292 @@
+"""``FleetTuner`` — many tuning jobs, one worker pool, one shared store.
+
+The paper's value proposition is amortization: sample counters once,
+converge fast on *other* inputs and *other* GPUs.  The fleet orchestrator
+operationalizes that at deployment scale:
+
+* every ``TuningJob`` (kernel × input bucket × hardware) gets its own
+  ask-tell searcher and its own completion-ordered ``EvalAccount``;
+* one worker pool evaluates candidates from ALL jobs concurrently — when a
+  job's searcher is between batches, its workers serve other jobs, so the
+  fleet's wall-clock approaches ``total busy work / workers``;
+* one concurrency-safe ``ConfigStore`` collects tuned configs and trained
+  TP→PC_ops model artifacts under ``(space, bucket, hardware)`` keys;
+* a job with no explicit searcher warm-starts from the NEAREST stored
+  artifact (exact key → same bucket on other hardware → same hardware on
+  another bucket → same space), walking the model's predicted-runtime
+  ranking on its own hardware — so adding a device or a shape to the fleet
+  costs a handful of trials instead of a fresh search; with no artifact it
+  falls back to its ``cold_searcher`` and, on completion, trains and
+  publishes the missing model for the next arrival.
+
+Scheduling is round-robin over jobs with unfilled budgets, keeping up to
+``in_flight`` tests outstanding pool-wide; completions are drained one at a
+time and fed back to the owning searcher, so the loop is event-driven end
+to end (no barrier between jobs or between batches of one job).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import costmodel, hwspec
+from repro.core.account import EvalAccount, Observation
+from repro.core.hwspec import HardwareSpec
+from repro.core.model import TPPCModel
+from repro.core.searcher import WarmStartSearcher, make_searcher
+from repro.core.tuner import predicted_runtimes
+from repro.core.tuning_space import TuningSpace
+from repro.fleet.job import JobResult, TuningJob
+from repro.fleet.pool import WorkItem
+from repro.tuning.session import TuningSession
+from repro.tuning.store import ConfigStore
+
+
+def predicted_runtime_order(model: TPPCModel, space: TuningSpace,
+                            hw: HardwareSpec) -> List[int]:
+    """Config indices best-predicted-first: the portable model's PC_ops
+    predictions priced through the cost model on the target hardware — the
+    ranking a warm-started job walks."""
+    return [int(i) for i in
+            np.argsort(predicted_runtimes(model, space, hw), kind="stable")]
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """What one ``FleetTuner.run()`` did, across all jobs."""
+
+    results: List[JobResult]
+    elapsed: float       # pool wall-clock consumed by this run (makespan)
+    busy: float          # worker-seconds across all jobs
+    in_flight: int
+    workers: int
+
+    def by_job(self) -> Dict[str, JobResult]:
+        return {r.job: r for r in self.results}
+
+
+class _JobState:
+    """Orchestrator-side bookkeeping for one job."""
+
+    def __init__(self, job: TuningJob):
+        self.job = job
+        self.account = EvalAccount()
+        self.searcher = None
+        self.searcher_name = ""
+        self.warm_started = False
+        self.submitted = 0
+        self.pending = 0
+        self.done = False
+        self.result: Optional[JobResult] = None
+        self.hw = job.hw_spec()
+        self.hw_key = job.hardware_key
+
+    def payload_for(self, index: int, profile: bool) -> Optional[dict]:
+        if self.job.kernel is None:
+            return None
+        p = {"kernel": self.job.kernel, "input": self.job.input_key,
+             "index": int(index), "profile": bool(profile)}
+        if self.hw_key in hwspec.SPECS:
+            p["hw"] = self.hw_key
+        else:
+            # fingerprint keys aren't resolvable by name on the worker
+            # side — ship the spec's declared numbers instead
+            p["hw_spec"] = dataclasses.asdict(self.hw)
+        return p
+
+
+class FleetTuner:
+    """Schedule many ``TuningJob``s over one pool and one shared store.
+
+    ``in_flight`` defaults to the pool's worker count — more keeps lanes
+    busy across searcher latencies, fewer throttles.  ``publish_models``
+    makes cold jobs train and store the portable TP→PC_ops model for their
+    key on completion (the artifact later arrivals warm-start from).
+    """
+
+    def __init__(self, jobs: Sequence[TuningJob], pool,
+                 store: Optional[ConfigStore] = None,
+                 in_flight: Optional[int] = None,
+                 publish_models: bool = True,
+                 model_kind: str = "tree",
+                 verbose: bool = False):
+        if not jobs:
+            raise ValueError("FleetTuner needs at least one job")
+        names = [j.name for j in jobs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"job names must be unique, got {names}")
+        self.jobs = list(jobs)
+        self.pool = pool
+        self.store = store
+        self.in_flight = int(in_flight if in_flight is not None
+                             else pool.workers)
+        self.publish_models = publish_models
+        self.model_kind = model_kind
+        self.verbose = verbose
+        self._uid = 0
+
+    # -- per-job setup ---------------------------------------------------------
+    def _start(self, js: _JobState) -> None:
+        """Bind a searcher on first schedule: explicit name, or warm-start
+        from the nearest stored artifact, or the cold fallback."""
+        if js.searcher is not None:
+            return
+        job = js.job
+        model = None
+        if self.store is not None:
+            model, key = self.store.load_nearest_model(
+                job.space.name, job.bucket, js.hw_key, bind_space=job.space)
+            if model is not None and self.verbose:
+                print(f"[fleet] {job.name}: warm start from {key}")
+        if job.searcher is not None:
+            js.searcher_name = job.searcher
+            js.searcher = make_searcher(
+                job.searcher, job.space, seed=job.seed,
+                model=model, cores=js.hw.cores)
+        elif model is not None:
+            js.warm_started = True
+            js.searcher_name = "warm_start"
+            js.searcher = WarmStartSearcher(
+                job.space,
+                order=predicted_runtime_order(model, job.space, js.hw),
+                seed=job.seed)
+        else:
+            js.searcher_name = job.cold_searcher
+            js.searcher = make_searcher(job.cold_searcher, job.space,
+                                        seed=job.seed)
+
+    def _eval_fn(self, js: _JobState, index: int, profile: bool):
+        """Pure measurement closure for in-process pools: the job's
+        portable workload priced through the cost model on its hardware,
+        with the replay cost structure (profiled tests pay the multi-pass
+        slowdown)."""
+        from repro.core.evaluate import (PROFILE_FIXED, PROFILE_SLOWDOWN,
+                                         TEST_OVERHEAD)
+
+        if js.job.eval_fn is not None:
+            custom = js.job.eval_fn
+            return lambda: custom(index, profile)
+
+        space, wl, hw = js.job.space, js.job.workload_fn, js.hw
+
+        def fn():
+            cs = costmodel.execute(wl(space[index]), hw)
+            rt = float(cs.runtime)
+            if profile:
+                return rt, cs, rt * PROFILE_SLOWDOWN + TEST_OVERHEAD \
+                    + PROFILE_FIXED
+            return rt, None, rt + TEST_OVERHEAD
+
+        return fn
+
+    # -- the event loop --------------------------------------------------------
+    def run(self) -> FleetReport:
+        states = [_JobState(j) for j in self.jobs]
+        by_name = {js.job.name: js for js in states}
+        n = len(states)
+        t_start = self.pool.elapsed()
+        rr = 0
+        while True:
+            # saturate the pool: a rotating cursor over jobs, advanced one
+            # position per visit (a submit resumes scanning at the NEXT
+            # job, so lanes spread fairly); stop once a full lap produced
+            # nothing — no job can offer work right now
+            fruitless = 0
+            while self.pool.outstanding() < self.in_flight and fruitless < n:
+                js = states[rr]
+                rr = (rr + 1) % n
+                if js.done or js.submitted >= js.job.budget:
+                    fruitless += 1
+                    continue
+                self._start(js)
+                cands = js.searcher.propose(1)
+                if not cands:
+                    # waiting on its batch (pending > 0) or exhausted
+                    if js.pending == 0 and js.searcher.done:
+                        self._finalize(js)
+                    fruitless += 1
+                    continue
+                c = cands[0]
+                self.pool.submit(WorkItem(
+                    uid=self._uid, job=js.job.name, index=c.index,
+                    profile=c.profile,
+                    fn=self._eval_fn(js, c.index, c.profile),
+                    payload=js.payload_for(c.index, c.profile)))
+                self._uid += 1
+                js.submitted += 1
+                js.pending += 1
+                fruitless = 0
+            if self.pool.outstanding() == 0:
+                break       # nothing running and nothing schedulable
+            res = self.pool.collect()
+            js = by_name[res.job]
+            js.pending -= 1
+            # job accounts run on THIS run's clock (the pool may have
+            # served earlier runs), so per-job elapsed stays comparable to
+            # the report's makespan
+            js.account.record_completion(res.index, res.runtime, res.cost,
+                                         res.finished_at - t_start)
+            js.searcher.observe([Observation(
+                index=res.index, runtime=res.runtime, counters=res.counters,
+                step=js.account.steps, elapsed=js.account.elapsed)])
+            if js.pending == 0 and js.submitted >= js.job.budget:
+                self._finalize(js)
+        for js in states:   # jobs whose searcher dried up mid-fill
+            if not js.done:
+                self._finalize(js)
+        results = [js.result for js in states]
+        return FleetReport(
+            results=results,
+            elapsed=self.pool.elapsed() - t_start,
+            busy=float(sum(r.busy for r in results)),
+            in_flight=self.in_flight,
+            workers=self.pool.workers)
+
+    # -- completion ------------------------------------------------------------
+    def _finalize(self, js: _JobState) -> None:
+        job, acct = js.job, js.account
+        if acct.best_index is None:
+            raise RuntimeError(f"job {job.name} made no empirical tests "
+                               "(budget <= 0 or empty space?)")
+        js.done = True
+        js.result = JobResult(
+            job=job.name, bucket=job.bucket, hardware=js.hw_key,
+            searcher=js.searcher_name, warm_started=js.warm_started,
+            best_index=acct.best_index,
+            best_config=dict(job.space[acct.best_index]),
+            best_runtime=acct.best_runtime, trials=acct.steps,
+            elapsed=acct.elapsed, busy=acct.busy,
+            trace=list(acct.trace), history=list(acct.history))
+        if self.store is None:
+            return
+        # batch the entry + model artifact into ONE locked read-merge-write
+        # (each autosave re-parses the whole file — at fleet scale two per
+        # completion is measurable lock/IO churn on the event loop)
+        was_autosave, self.store.autosave = self.store.autosave, False
+        try:
+            self.store.put(
+                job.space.name, job.bucket, js.hw_key,
+                config=js.result.best_config, runtime=acct.best_runtime,
+                trials=acct.steps,
+                meta={"job": job.name, "searcher": js.searcher_name,
+                      "warm_started": js.warm_started})
+            if self.publish_models and self.store.get_model_dict(
+                    job.space.name, job.bucket, js.hw_key) is None:
+                # train the portable TP→PC_ops model this job was missing
+                # and publish it — the next (input, hardware) arrival
+                # warm-starts from it
+                session = TuningSession(job.space, job.workload_fn,
+                                        hw=js.hw, seed=job.seed)
+                session.train(kind=self.model_kind, sample="deliberate")
+                session.save_model_to_store(self.store, job.bucket,
+                                            js.hw_key)
+        finally:
+            self.store.autosave = was_autosave
+        if was_autosave and self.store.path is not None:
+            self.store.save()
+        if self.verbose:
+            print(f"[fleet] {job.name}: best {acct.best_runtime*1e3:.3f}ms "
+                  f"in {acct.steps} trials "
+                  f"({'warm' if js.warm_started else 'cold'})")

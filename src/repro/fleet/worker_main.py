@@ -1,0 +1,92 @@
+"""Fleet worker subprocess: a JSON-lines evaluation server.
+
+One of these runs per ``SubprocessWorkerPool`` lane.  Requests name a
+registered kernel workload (``{"kernel", "input", "hw", "index", "uid",
+"profile"}``); the worker rebuilds the workload model from the registry,
+prices it through the cost model on the named hardware, and replies with
+``{"uid", "runtime", "cost"}`` (plus ``ops``/``stress`` when profiled).
+
+With ``--devices N`` the worker brings up its own N-device jax host runtime
+(``--xla_force_host_platform_device_count``) and builds a mesh through the
+``launch/mesh.py`` machinery — the same per-process multi-device shape the
+8-device dry-run integration uses, so a real device-backed ``run()``
+payload drops in without changing the pool protocol.
+
+Protocol extras: ``{"op": "ping"}`` → ``{"op": "pong", "devices": n}``
+(startup handshake), ``{"op": "shutdown"}`` or EOF → exit.  Errors are
+reported per-request (``{"uid", "error", ...}``), never by crashing the
+worker.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0,
+                    help="bring up a jax host runtime with this many "
+                    "devices (0: pure-numpy cost-model evaluation)")
+    args = ap.parse_args(argv)
+
+    mesh = None
+    n_devices = 0
+    if args.devices > 0:
+        import os
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.devices}")
+        import jax
+
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(data=args.devices)
+        n_devices = len(jax.devices())
+
+    from repro.core import costmodel, hwspec
+    from repro.kernels.registry import BENCHMARKS
+
+    spaces = {}     # kernel -> TuningSpace (configs resolved by index)
+
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        req = json.loads(line)
+        op = req.get("op")
+        if op == "shutdown":
+            break
+        if op == "ping":
+            print(json.dumps({"op": "pong", "devices": n_devices,
+                              "mesh": bool(mesh)}), flush=True)
+            continue
+        out = {"uid": req.get("uid")}
+        try:
+            bm = BENCHMARKS[req["kernel"]]
+            if req["kernel"] not in spaces:
+                spaces[req["kernel"]] = bm.make_space()
+            space = spaces[req["kernel"]]
+            cfg = space[int(req["index"])]
+            inp = bm.inputs[req["input"]]
+            if "hw_spec" in req:        # unregistered hardware: by numbers
+                hw = hwspec.HardwareSpec(**req["hw_spec"])
+            else:
+                hw = hwspec.get(req["hw"])
+            t0 = time.perf_counter()
+            cs = costmodel.execute(bm.workload_fn(cfg, inp), hw)
+            out["runtime"] = float(cs.runtime)
+            out["cost"] = time.perf_counter() - t0
+            if req.get("profile"):
+                out["ops"] = {k: float(v) for k, v in cs.ops.items()}
+                out["stress"] = {k: float(v) for k, v in cs.stress.items()}
+        except Exception as e:      # report per-request, keep serving
+            out["error"] = f"{type(e).__name__}: {e}"
+        print(json.dumps(out), flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

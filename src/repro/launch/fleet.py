@@ -1,0 +1,132 @@
+"""Fleet tuning CLI: many (kernel × input × hardware) jobs, one pool.
+
+Builds ``TuningJob``s from the kernel registry for every requested
+(kernel, hardware) pair, runs them through a ``FleetTuner`` over the
+chosen worker backend, and persists tuned configs + portable model
+artifacts into a shared ``ConfigStore`` — so re-running with more hardware
+(or more shapes) warm-starts from what the fleet already learned.
+
+    PYTHONPATH=src python -m repro.launch.fleet \
+        --kernels matmul,transpose --hw tpu_v4,tpu_v5e \
+        --store fleet_store.json --workers 4 --budget 25
+
+    # subprocess lanes, each with its own 2-device jax host runtime
+    PYTHONPATH=src python -m repro.launch.fleet --backend subprocess \
+        --workers 2 --devices-per-worker 2 --kernels matmul --hw tpu_v5e
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def build_pool(backend: str, workers: int, devices_per_worker: int):
+    from repro.fleet import (SubprocessWorkerPool, ThreadWorkerPool,
+                             VirtualWorkerPool)
+
+    if backend == "virtual":
+        return VirtualWorkerPool(workers=workers)
+    if backend == "thread":
+        return ThreadWorkerPool(workers=workers)
+    if backend == "subprocess":
+        return SubprocessWorkerPool(workers=workers,
+                                    devices_per_worker=devices_per_worker)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--kernels", default="matmul,transpose",
+                    help="comma-separated registry kernel names")
+    ap.add_argument("--inputs", default=None,
+                    help="comma-separated input keys, one per kernel "
+                    "(default: each kernel's default input)")
+    ap.add_argument("--hw", default="tpu_v4,tpu_v5e",
+                    help="comma-separated hardware names (naming drift ok: "
+                    "TPUv4 == tpu_v4)")
+    ap.add_argument("--backend", default="virtual",
+                    choices=("virtual", "thread", "subprocess"))
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--devices-per-worker", type=int, default=0,
+                    help="subprocess backend: jax host devices per worker")
+    ap.add_argument("--in-flight", type=int, default=None,
+                    help="outstanding tests pool-wide (default: --workers)")
+    ap.add_argument("--budget", type=int, default=25,
+                    help="empirical-test budget per job")
+    ap.add_argument("--searcher", default=None,
+                    help="force one searcher for every job (default: "
+                    "warm_start on store hit, random cold)")
+    ap.add_argument("--store", default=None,
+                    help="shared ConfigStore path (default: in-memory)")
+    ap.add_argument("--no-publish", action="store_true",
+                    help="do not train/publish missing model artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write a JSON report here")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.fleet import FleetTuner, job_from_registry
+    from repro.kernels.registry import BENCHMARKS
+    from repro.tuning import ConfigStore
+
+    kernels = [k.strip() for k in args.kernels.split(",") if k.strip()]
+    hws = [h.strip() for h in args.hw.split(",") if h.strip()]
+    if args.inputs is not None:
+        inputs = [i.strip() for i in args.inputs.split(",")]
+        if len(inputs) != len(kernels):
+            raise SystemExit("--inputs must list one key per --kernels entry")
+    else:
+        inputs = []
+        for k in kernels:
+            bm = BENCHMARKS[k]
+            inputs.append(next(key for key, v in bm.inputs.items()
+                               if v is bm.default_input))
+
+    jobs = [job_from_registry(k, inp, hw, budget=args.budget,
+                              seed=args.seed, searcher=args.searcher)
+            for k, inp in zip(kernels, inputs) for hw in hws]
+    store = ConfigStore(args.store)
+    pool = build_pool(args.backend, args.workers, args.devices_per_worker)
+    t0 = time.time()
+    try:
+        report = FleetTuner(jobs, pool, store=store,
+                            in_flight=args.in_flight,
+                            publish_models=not args.no_publish,
+                            verbose=args.verbose).run()
+    finally:
+        pool.close()
+    wall = time.time() - t0
+
+    print(f"[fleet] {len(jobs)} jobs on {args.backend} backend "
+          f"({pool.workers} workers, in_flight={report.in_flight})")
+    for r in sorted(report.results, key=lambda r: r.job):
+        print(f"  {r.job:40s} {'warm' if r.warm_started else 'cold':4s} "
+              f"{r.trials:3d} trials  best {r.best_runtime*1e3:9.3f}ms  "
+              f"{r.best_config}")
+    print(f"[fleet] pool clock {report.elapsed:.3f}s for "
+          f"{report.busy:.3f} worker-seconds of measurement "
+          f"(x{report.busy / max(report.elapsed, 1e-12):.2f} concurrency); "
+          f"host wall {wall:.1f}s")
+    if args.store:
+        print(f"[fleet] store -> {args.store} ({len(store)} entries)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({
+                "backend": args.backend, "workers": pool.workers,
+                "in_flight": report.in_flight,
+                "pool_elapsed_s": report.elapsed, "busy_s": report.busy,
+                "host_wall_s": wall,
+                "jobs": [{
+                    "job": r.job, "bucket": r.bucket, "hardware": r.hardware,
+                    "searcher": r.searcher, "warm_started": r.warm_started,
+                    "trials": r.trials, "best_runtime_s": r.best_runtime,
+                    "best_config": r.best_config,
+                } for r in report.results],
+            }, f, indent=2)
+        print(f"[fleet] -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--searcher", default="profile",
                     choices=sorted(SEARCHERS))
     ap.add_argument("--budget", type=int, default=10)
+    ap.add_argument("--in-flight", type=int, default=1,
+                    help="outstanding empirical tests to keep submitted "
+                    "(the compile evaluator is thread-safe; >1 only pays "
+                    "off with an async evaluation backend)")
     ap.add_argument("--train-samples", type=int, default=14)
     ap.add_argument("--save-model", default=None)
     ap.add_argument("--load-model", default=None)
@@ -59,7 +63,8 @@ def main():
     ev_tune._cache.update(ev._cache)
     extra = {"n": 3} if needs_model else {}
     result = session.tune(budget=args.budget, searcher=args.searcher,
-                          evaluator=ev_tune, **extra)
+                          evaluator=ev_tune, in_flight=args.in_flight,
+                          **extra)
     print(f"[tune] {args.searcher}: best {result.best_runtime*1e3:.1f}ms "
           f"after {result.steps} empirical tests")
     print(f"[tune] best config: {result.best_config}")

@@ -40,9 +40,9 @@ import numpy as np
 from repro.core import costmodel
 from repro.core import counters as C
 from repro.core.evaluate import FunctionEvaluator
-from repro.core.hwspec import PRODUCTION, HardwareSpec
-from repro.core.model import prediction_matrix
+from repro.core.hwspec import PRODUCTION, HardwareSpec, hardware_key
 from repro.core.searcher import WarmStartSearcher, run_search
+from repro.core.tuner import predicted_runtimes
 from repro.core.tuning_space import Config, TuningParameter, TuningSpace
 from repro.serve.engine import Request, ServeEngine
 from repro.tuning.session import TuningSession
@@ -371,6 +371,7 @@ class OnlineAutotuner:
         window: int = 32,
         calib_n: int = 16,
         model_kind: str = "tree",
+        in_flight: int = 1,
         seed: int = 0,
     ):
         self.backend = backend
@@ -380,9 +381,13 @@ class OnlineAutotuner:
         self.hw = hw
         self.train_hw = train_hw if train_hw is not None else hw
         self.stats = stats if stats is not None else ServeWorkloadStats()
-        self.hardware_name = (hardware_name if hardware_name is not None
-                              else hw.name)
+        # normalized so store hits survive naming drift ("TPUv4" == "tpu_v4")
+        self.hardware_name = hardware_key(
+            hardware_name if hardware_name is not None else hw)
         self.max_live_trials = int(max_live_trials)
+        # outstanding live trials kept in flight by the async search driver
+        # (1 = sequential; >1 pays off once the backend measures async)
+        self.in_flight = int(in_flight)
         self.calib_n = int(calib_n)
         self.model_kind = model_kind
         self.seed = int(seed)
@@ -427,12 +432,7 @@ class OnlineAutotuner:
         the live calibration wave actually fits in.
         """
         model = self._model_for(bucket)
-        names, mat = prediction_matrix(model, self.space)
-        pred_rt = np.empty(len(self.space), dtype=np.float64)
-        for i in range(len(self.space)):
-            ops = {k: max(0.0, float(v)) for k, v in zip(names, mat[i])
-                   if k in C.PC_OPS}
-            pred_rt[i] = costmodel.execute(ops, self.hw).runtime
+        pred_rt = predicted_runtimes(model, self.space, self.hw)
         plen, new = self.bucketer.rep_shape(bucket)
         need = max(plen + new, min_seq if min_seq is not None else 0)
         order = [int(i) for i in np.argsort(pred_rt, kind="stable")
@@ -457,7 +457,8 @@ class OnlineAutotuner:
         ev = FunctionEvaluator(
             self.space, lambda cfg: self.backend.measure(cfg, calib))
         searcher = WarmStartSearcher(self.space, order=order, seed=self.seed)
-        run_search(searcher, ev, min(self.max_live_trials, len(order)))
+        run_search(searcher, ev, min(self.max_live_trials, len(order)),
+                   in_flight=self.in_flight)
         plen, new = self.bucketer.rep_shape(bucket)
         entry = self.store.put(
             self.space.name, bucket.key, self.hardware_name,

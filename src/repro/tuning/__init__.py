@@ -30,12 +30,13 @@ Quickstart::
     result = session.tune(budget=25)
 """
 from repro.core.account import (Candidate, EvalAccount, Evaluator,
-                                Observation, ProfilingUnsupported)
+                                Observation, ProfilingUnsupported, Ticket)
 from repro.core.evaluate import (CostModelEvaluator, FunctionEvaluator,
-                                 RecordedSpace, ReplayEvaluator, record_space)
+                                 RecordedSpace, ReplayEvaluator,
+                                 VirtualAsyncEvaluator, record_space)
 from repro.core.searcher import (SEARCHERS, Searcher, make_searcher,
                                  register_searcher, resolve_searcher,
-                                 run_search)
+                                 run_search, sequential_run_search)
 from repro.core.tuner import TuneResult, train_model, train_model_deliberate
 from repro.tuning.serialize import (model_from_dict, model_to_dict,
                                     space_from_dict, space_to_dict)
@@ -46,9 +47,10 @@ __all__ = [
     "Candidate", "ConfigStore", "CostModelEvaluator", "EvalAccount",
     "Evaluator", "FunctionEvaluator", "Observation", "ProfilingUnsupported",
     "RecordedSpace", "ReplayEvaluator", "SEARCHERS", "Searcher", "StoreEntry",
-    "TuneResult", "TuningSession", "make_searcher", "model_from_dict",
+    "Ticket", "TuneResult", "TuningSession", "VirtualAsyncEvaluator",
+    "make_searcher", "model_from_dict",
     "model_to_dict", "record_space", "register_searcher",
-    "resolve_searcher", "run_search",
+    "resolve_searcher", "run_search", "sequential_run_search",
     "space_from_dict", "space_to_dict", "store_key", "train_model",
     "train_model_deliberate",
 ]

@@ -234,12 +234,19 @@ class TuningSession:
         searcher: Union[str, type, Searcher] = "profile",
         evaluator: Optional[Evaluator] = None,
         seed: Optional[int] = None,
+        in_flight: int = 1,
         **searcher_kwargs,
     ) -> TuneResult:
-        """Run the autotuning phase: ask-tell search under a step budget."""
+        """Run the autotuning phase: ask-tell search under a step budget.
+
+        ``in_flight`` > 1 keeps that many empirical tests outstanding on the
+        evaluator (meaningful with async backends — the default synchronous
+        shim still evaluates serially, and ``in_flight=1`` replays the
+        sequential driver exactly).
+        """
         ev = evaluator if evaluator is not None else self.make_evaluator()
         s = self.make_searcher(searcher, seed=seed, **searcher_kwargs)
-        run_search(s, ev, budget)
+        run_search(s, ev, budget, in_flight=in_flight)
         if ev.best_index is None:
             raise RuntimeError("search made no empirical tests "
                                "(budget <= 0 or empty space?)")

@@ -37,6 +37,12 @@ Schema (``format: repro.config_store``, version 1)::
 Writes are atomic (tempfile + ``os.replace``) and auto-saved when the store
 is bound to a path; ``ConfigStore()`` with no path is a process-local cache
 with the same API.
+
+Concurrent writers are safe: ``save()`` takes an advisory file lock
+(``<path>.lock``) and read-merge-writes — entries and models that other
+processes persisted since our last load are merged in before the atomic
+replace (conflicting tuned configs resolve to the better runtime), so a
+fleet of tuner processes sharing one store never clobber each other.
 """
 from __future__ import annotations
 
@@ -44,7 +50,12 @@ import dataclasses
 import json
 import os
 import tempfile
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: degrade to atomic-replace only
+    fcntl = None
 
 from repro.core.model import TPPCModel
 from repro.core.tuning_space import Config, TuningSpace
@@ -62,6 +73,33 @@ def store_key(space: str, bucket: str, hardware: str) -> str:
         if _SEP in p:
             raise ValueError(f"store key field {p!r} contains {_SEP!r}")
     return _SEP.join(parts)
+
+
+class _FileLock:
+    """Advisory exclusive lock for the store's read-merge-write section.
+
+    POSIX ``flock`` on a sidecar ``<path>.lock`` file (never on the store
+    file itself — the atomic ``os.replace`` would swap the locked inode out
+    from under us).  Degrades to a no-op where ``fcntl`` is unavailable, in
+    which case only single-writer atomicity is guaranteed.
+    """
+
+    def __init__(self, path: str):
+        self.lock_path = path + ".lock"
+        self._fd: Optional[int] = None
+
+    def __enter__(self) -> "_FileLock":
+        if fcntl is not None:
+            self._fd = os.open(self.lock_path,
+                               os.O_CREAT | os.O_RDWR, 0o644)
+            fcntl.flock(self._fd, fcntl.LOCK_EX)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._fd is not None:
+            fcntl.flock(self._fd, fcntl.LOCK_UN)
+            os.close(self._fd)
+            self._fd = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +201,46 @@ class ConfigStore:
         self.put_model_dict(space, bucket, hardware,
                             model_to_dict(model, model_space))
 
+    def nearest_model_key(self, space: str, bucket: str, hardware: str
+                          ) -> Optional[str]:
+        """Best stored-model key for ``(space, bucket, hardware)``.
+
+        Preference order mirrors the paper's portability claims: exact hit;
+        same bucket on other hardware (PC_ops predictions are
+        hardware-independent — §4.4's cross-GPU scenario); same hardware on
+        another input bucket (§4.5's cross-input scenario); any model of the
+        same space.  Ties break deterministically (sorted key order).
+        ``None`` when no model of the space exists.
+        """
+        exact = store_key(space, bucket, hardware)
+        if exact in self._models:
+            return exact
+        same_bucket, same_hw, same_space = [], [], []
+        for k in sorted(self._models):
+            s, b, h = k.split(_SEP)
+            if s != space:
+                continue
+            if b == bucket:
+                same_bucket.append(k)
+            elif h == hardware:
+                same_hw.append(k)
+            else:
+                same_space.append(k)
+        for tier in (same_bucket, same_hw, same_space):
+            if tier:
+                return tier[0]
+        return None
+
+    def load_nearest_model(self, space: str, bucket: str, hardware: str,
+                           bind_space: Optional[TuningSpace] = None
+                           ) -> Tuple[Optional[TPPCModel], Optional[str]]:
+        """``(model, key)`` for the nearest stored artifact (None, None on
+        miss) — the fleet's warm-start hook."""
+        key = self.nearest_model_key(space, bucket, hardware)
+        if key is None:
+            return None, None
+        return model_from_dict(self._models[key], space=bind_space), key
+
     # -- persistence -----------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -173,22 +251,53 @@ class ConfigStore:
             "models": {k: m for k, m in sorted(self._models.items())},
         }
 
-    def save(self, path: Optional[str] = None) -> str:
-        """Atomic write: serialize to a temp file, then ``os.replace``."""
+    def save(self, path: Optional[str] = None, merge: bool = True) -> str:
+        """Locked read-merge-write, then atomic replace.
+
+        Under the file lock, entries/models persisted by OTHER writers since
+        our last load are merged into memory first (``_merge_from``), so
+        concurrent tuner processes sharing one store file never clobber each
+        other's keys; ``merge=False`` restores plain last-writer-wins
+        overwrite semantics (e.g. to intentionally reset a store).
+        """
         path = path if path is not None else self.path
         if path is None:
             raise ValueError("ConfigStore has no path; pass save(path=...)")
-        d = os.path.dirname(os.path.abspath(path)) or "."
-        fd, tmp = tempfile.mkstemp(prefix=".config_store.", dir=d)
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(self.to_dict(), f, indent=1)
-            os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        with _FileLock(path):
+            if merge and os.path.exists(path):
+                with open(path) as f:
+                    self._merge_from(json.load(f))
+            d = os.path.dirname(os.path.abspath(path)) or "."
+            fd, tmp = tempfile.mkstemp(prefix=".config_store.", dir=d)
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(self.to_dict(), f, indent=1)
+                os.replace(tmp, path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
         return path
+
+    def _merge_from(self, d: Dict[str, Any]) -> None:
+        """Fold another store's dict into memory (the read-merge step).
+
+        Unknown keys are adopted; a tuned-config conflict resolves to the
+        better (lower) runtime — the fleet semantics: whoever found the
+        faster configuration for a key wins; our own models win conflicts
+        (artifacts for one key are interchangeable retrainings).
+        """
+        if d.get("format") != FORMAT or d.get("version") != VERSION:
+            raise ValueError(
+                f"refusing to merge non-{FORMAT}-v{VERSION} file "
+                f"(format={d.get('format')!r} version={d.get('version')!r})")
+        for k, e in d.get("entries", {}).items():
+            other = StoreEntry.from_dict(e)
+            mine = self._entries.get(k)
+            if mine is None or other.runtime < mine.runtime:
+                self._entries[k] = other
+        for k, m in d.get("models", {}).items():
+            self._models.setdefault(k, m)
 
     def load(self, path: str) -> "ConfigStore":
         with open(path) as f:

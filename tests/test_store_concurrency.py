@@ -1,0 +1,107 @@
+"""ConfigStore under concurrent writers (ISSUE 4 satellite).
+
+The regression scenario: two tuner processes open the same store file,
+then each persists its own entry.  Before the read-merge-write ``save()``,
+the second writer's atomic replace silently clobbered the first writer's
+key (last-writer-wins on the whole file); with the file lock + merge, both
+keys survive, and a conflicting key resolves to the better runtime.
+"""
+import json
+import multiprocessing
+import sys
+
+import pytest
+
+from repro.tuning import ConfigStore
+
+
+def _writer(path: str, tag: int, barrier) -> None:
+    store = ConfigStore(path)          # both load the (empty) file first
+    barrier.wait(timeout=30)           # ...so neither has the other's key
+    store.put("sp", f"bucket{tag}", "hw", config={"X": tag},
+              runtime=1.0 + tag, trials=tag + 1)
+
+
+def _conflict_writer(path: str, runtime: float, barrier) -> None:
+    store = ConfigStore(path)
+    barrier.wait(timeout=30)
+    store.put("sp", "b", "hw", config={"RT": runtime}, runtime=runtime,
+              trials=1)
+
+
+@pytest.mark.skipif(sys.platform == "win32", reason="needs fork + flock")
+def test_concurrent_writers_keep_both_entries(tmp_path):
+    """Fails on pre-merge main: the slower writer clobbered the faster's
+    entry and the final file held 1 entry instead of 2."""
+    path = str(tmp_path / "store.json")
+    ConfigStore(path).save()           # seed an empty store file
+    ctx = multiprocessing.get_context("fork")
+    barrier = ctx.Barrier(2)
+    procs = [ctx.Process(target=_writer, args=(path, tag, barrier))
+             for tag in (0, 1)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=60)
+        assert p.exitcode == 0
+    merged = ConfigStore(path)
+    assert len(merged) == 2
+    for tag in (0, 1):
+        entry = merged.get("sp", f"bucket{tag}", "hw")
+        assert entry is not None and entry.config == {"X": tag}
+
+
+@pytest.mark.skipif(sys.platform == "win32", reason="needs fork + flock")
+def test_conflicting_key_resolves_to_better_runtime(tmp_path):
+    path = str(tmp_path / "store.json")
+    ConfigStore(path).save()
+    ctx = multiprocessing.get_context("fork")
+    barrier = ctx.Barrier(2)
+    procs = [ctx.Process(target=_conflict_writer, args=(path, rt, barrier))
+             for rt in (2.0, 1.0)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=60)
+        assert p.exitcode == 0
+    entry = ConfigStore(path).get("sp", "b", "hw")
+    assert entry is not None
+    assert entry.runtime == 1.0        # the faster tuning result won
+
+
+def test_merge_on_save_within_process(tmp_path):
+    """Single-process view of the same semantics (no races involved)."""
+    path = str(tmp_path / "store.json")
+    a = ConfigStore(path)
+    b = ConfigStore(path)              # opened before a writes anything
+    a.put("sp", "bA", "hw", config={"X": 1}, runtime=1.0, trials=1)
+    b.put("sp", "bB", "hw", config={"X": 2}, runtime=2.0, trials=1)
+    # b's save merged a's entry from disk instead of clobbering it
+    final = ConfigStore(path)
+    assert len(final) == 2
+    # ...and b's in-memory view absorbed it too (fleet-wide visibility)
+    assert b.get("sp", "bA", "hw") is not None
+
+
+def test_save_merge_false_overwrites(tmp_path):
+    path = str(tmp_path / "store.json")
+    a = ConfigStore(path)
+    a.put("sp", "bA", "hw", config={"X": 1}, runtime=1.0, trials=1)
+    fresh = ConfigStore()
+    fresh.put("sp", "bB", "hw", config={"X": 2}, runtime=2.0, trials=1)
+    fresh.save(path, merge=False)      # intentional reset
+    final = ConfigStore(path)
+    assert len(final) == 1 and final.get("sp", "bB", "hw") is not None
+
+
+def test_save_refuses_to_merge_foreign_file(tmp_path):
+    path = str(tmp_path / "store.json")
+    with open(path, "w") as f:
+        json.dump({"format": "something_else", "version": 9}, f)
+    store = ConfigStore()
+    store.put("sp", "b", "hw", config={"X": 1}, runtime=1.0, trials=1)
+    with pytest.raises(ValueError):
+        store.save(path)
+    # explicit merge=False is the documented escape hatch
+    store.save(path, merge=False)
+    assert ConfigStore(path).get("sp", "b", "hw") is not None
