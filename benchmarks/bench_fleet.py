@@ -21,10 +21,26 @@ every number is bit-reproducible):
    exhaustive best (the paper's well-performing criterion).  Target:
    warm-started jobs converge in ≤ half the trials of cold jobs (mean).
 
+3. **Fault injection** — the same cold fleet under deterministic faults:
+   1 of 4 lanes is killed mid-run and 10% of empirical tests fail
+   (seeded), exercising the retry/known-bad/abandoned-accounting paths.
+   Gates: every job still resolves its full budget (nothing silently
+   dropped), no test needed more than 2 retries, the abandoned
+   worker-seconds are charged into ``busy``, and the faulted fleet still
+   beats the fault-free sequential baseline ≥ 2× wall-clock; the run also
+   records the recovery overhead vs the fault-free fleet.
+
+4. **Golden in_flight=1** — with the retry machinery enabled but zero
+   injected failures, every job's single-job fleet trace at one worker /
+   ``in_flight=1`` must be bit-identical to the frozen sequential driver
+   (``sequential_run_search``) on a replayed record — failure handling
+   must cost nothing when nothing fails.
+
 Writes ``BENCH_fleet.json``; exits non-zero when a target is violated.
 
     PYTHONPATH=src python -m benchmarks.bench_fleet [--smoke] [--threads]
         [--out BENCH_fleet.json] [--min-speedup 3] [--max-warm-ratio 0.5]
+        [--min-fault-speedup 2]
 """
 from __future__ import annotations
 
@@ -154,6 +170,67 @@ def run_thread_speedup(workers: int, budget: int, seed: int,
             "speedup": seq["wall_s"] / fleet["wall_s"]}
 
 
+def run_faults(workers: int, budget: int, seed: int,
+               seq_elapsed: float, fleet_elapsed: float,
+               min_fault_speedup: float) -> Dict:
+    """The acceptance scenario: kill 1 of ``workers`` lanes mid-run, fail
+    10% of tests (seeded rng — bit-reproducible), and verify the fleet
+    completes everything with bounded retries, honest abandoned-cost
+    accounting, and ≥ ``min_fault_speedup``x over fault-free sequential."""
+    kill_at = 0.5 * fleet_elapsed          # mid-run on the virtual clock
+    pool = VirtualWorkerPool(workers=workers, fail_rate=0.10,
+                             fail_seed=seed,
+                             kill_lane_at={workers - 1: kill_at})
+    rep = FleetTuner(_cold_jobs(budget, seed), pool, store=None,
+                     in_flight=workers, publish_models=False,
+                     retries=2).run()
+    all_complete = all(r.trials == budget and len(r.history) == budget
+                      for r in rep.results)
+    speedup = seq_elapsed / rep.elapsed
+    return {
+        "jobs": len(KERNELS) * len(HW),
+        "budget_per_job": budget,
+        "fail_rate": 0.10,
+        "killed_lane": workers - 1,
+        "kill_at_s": kill_at,
+        "elapsed_s": rep.elapsed,
+        "busy_s": rep.busy,
+        "abandoned_s": rep.abandoned,
+        "failures": rep.failures,
+        "known_bad": rep.known_bad,
+        "max_retries_used": rep.max_retries_used,
+        "trials": int(sum(r.trials for r in rep.results)),
+        "all_jobs_complete": all_complete,
+        "retries_bounded": rep.max_retries_used <= 2,
+        "abandoned_accounted": rep.failures > 0 and rep.abandoned > 0.0,
+        "speedup_vs_sequential": speedup,
+        "meets_fault_speedup_target": speedup >= min_fault_speedup,
+        "recovery_overhead": rep.elapsed / fleet_elapsed,
+    }
+
+
+def run_golden(budget: int, seed: int) -> Dict:
+    """Zero-failure equivalence: each job alone on a 1-lane pool at
+    ``in_flight=1`` — with retries enabled — replays the frozen sequential
+    driver bit-for-bit (same (steps, elapsed, runtime) trace rows)."""
+    from repro.core.searcher import make_searcher, sequential_run_search
+    from repro.core.evaluate import ReplayEvaluator
+
+    checked, identical = 0, True
+    for job in _cold_jobs(budget, seed):
+        pool = VirtualWorkerPool(workers=1)
+        rep = FleetTuner([job], pool, store=None, in_flight=1,
+                         publish_models=False, retries=2).run()
+        rec = record_space(job.space, job.workload_fn, job.hw_spec())
+        searcher = make_searcher("random", job.space, seed=seed)
+        ev = ReplayEvaluator(rec)
+        sequential_run_search(searcher, ev, budget)
+        if rep.results[0].trace != ev.trace:
+            identical = False
+        checked += 1
+    return {"jobs_checked": checked, "bit_identical": identical}
+
+
 def run_warmstart(workers: int, budget: int, seed: int,
                   store_path: str) -> Dict:
     """Wave 1 cold on HW[0] (publishes artifacts), wave 2 warm on HW[1]."""
@@ -202,9 +279,15 @@ def run_warmstart(workers: int, budget: int, seed: int,
 
 def run_benchmark(workers: int, budget: int, warm_budget: int, seed: int,
                   store_path: str, min_speedup: float,
-                  max_warm_ratio: float, threads: bool) -> Dict:
+                  max_warm_ratio: float, threads: bool,
+                  min_fault_speedup: float) -> Dict:
     speedup = run_speedup(workers, budget, seed, threads)
     warm = run_warmstart(workers, warm_budget, seed, store_path)
+    faults = run_faults(workers, budget, seed,
+                        seq_elapsed=speedup["sequential"]["elapsed_s"],
+                        fleet_elapsed=speedup["fleet"]["elapsed_s"],
+                        min_fault_speedup=min_fault_speedup)
+    golden = run_golden(budget, seed)
     summary = {
         "speedup": speedup["speedup"],
         "meets_speedup_target": speedup["speedup"] >= min_speedup,
@@ -213,6 +296,13 @@ def run_benchmark(workers: int, budget: int, warm_budget: int, seed: int,
         "meets_warmstart_target":
             warm["warm_cold_ratio"] <= max_warm_ratio,
         "all_wave2_warm_started": warm["all_wave2_warm_started"],
+        "fault_speedup": faults["speedup_vs_sequential"],
+        "fault_recovery_overhead": faults["recovery_overhead"],
+        "meets_fault_targets": (
+            faults["all_jobs_complete"] and faults["retries_bounded"]
+            and faults["abandoned_accounted"]
+            and faults["meets_fault_speedup_target"]),
+        "golden_in_flight_1": golden["bit_identical"],
     }
     violations = []
     if not summary["meets_speedup_target"]:
@@ -226,6 +316,22 @@ def run_benchmark(workers: int, budget: int, warm_budget: int, seed: int,
             f"{summary['warm_cold_ratio']:.3f} > {max_warm_ratio}")
     if not summary["all_wave2_warm_started"]:
         violations.append("a wave-2 job failed to warm-start from the store")
+    if not faults["all_jobs_complete"]:
+        violations.append("faulted fleet dropped results (a job did not "
+                          "resolve its full budget)")
+    if not faults["retries_bounded"]:
+        violations.append(
+            f"a failed test needed {faults['max_retries_used']} retries "
+            "(> 2)")
+    if not faults["abandoned_accounted"]:
+        violations.append("fault run produced no abandoned-cost accounting")
+    if not faults["meets_fault_speedup_target"]:
+        violations.append(
+            f"faulted-fleet speedup {faults['speedup_vs_sequential']:.2f}x "
+            f"< {min_fault_speedup}x over fault-free sequential")
+    if not golden["bit_identical"]:
+        violations.append("zero-failure driver trace diverged from the "
+                          "frozen sequential baseline at in_flight=1")
     return {
         "schema": SCHEMA,
         "version": VERSION,
@@ -240,9 +346,12 @@ def run_benchmark(workers: int, budget: int, warm_budget: int, seed: int,
         },
         "targets": {"min_speedup": min_speedup,
                     "max_warm_ratio": max_warm_ratio,
+                    "min_fault_speedup": min_fault_speedup,
                     "workers": workers},
         "speedup": speedup,
         "warmstart": warm,
+        "faults": faults,
+        "golden": golden,
         "summary": summary,
         "violations": violations,
     }
@@ -261,6 +370,9 @@ def main(argv=None) -> int:
                     help="warm-start store path (default: fresh temp file)")
     ap.add_argument("--min-speedup", type=float, default=3.0)
     ap.add_argument("--max-warm-ratio", type=float, default=0.5)
+    ap.add_argument("--min-fault-speedup", type=float, default=2.0,
+                    help="required speedup of the faulted fleet (1 dead "
+                    "lane + 10%% failing tests) over fault-free sequential")
     ap.add_argument("--threads", action="store_true",
                     help="also measure the real ThreadWorkerPool speedup")
     ap.add_argument("--smoke", action="store_true",
@@ -274,14 +386,15 @@ def main(argv=None) -> int:
     if args.store is not None:
         result = run_benchmark(args.workers, budget, warm_budget, args.seed,
                                args.store, args.min_speedup,
-                               args.max_warm_ratio, threads)
+                               args.max_warm_ratio, threads,
+                               args.min_fault_speedup)
     else:
         with tempfile.TemporaryDirectory() as td:
             result = run_benchmark(args.workers, budget, warm_budget,
                                    args.seed,
                                    os.path.join(td, "fleet_store.json"),
                                    args.min_speedup, args.max_warm_ratio,
-                                   threads)
+                                   threads, args.min_fault_speedup)
 
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -298,6 +411,16 @@ def main(argv=None) -> int:
           f"{result['warmstart']['cold_mean_trials_to_well']:.1f} "
           f"= {s['warm_cold_ratio']:.3f} (target <= {args.max_warm_ratio}: "
           f"{'PASS' if s['meets_warmstart_target'] else 'FAIL'})")
+    f = result["faults"]
+    print(f"fault injection (1 dead lane, 10% failing tests): "
+          f"{s['fault_speedup']:.2f}x vs sequential "
+          f"(target >= {args.min_fault_speedup}x), recovery overhead "
+          f"{s['fault_recovery_overhead']:.2f}x, {f['failures']} failed "
+          f"attempts, {f['known_bad']} known-bad, "
+          f"{f['abandoned_s']:.3f}s abandoned: "
+          f"{'PASS' if s['meets_fault_targets'] else 'FAIL'}")
+    print(f"zero-failure golden (in_flight=1 vs frozen sequential): "
+          f"{'PASS' if s['golden_in_flight_1'] else 'FAIL'}")
     if result["violations"]:
         print("TARGETS VIOLATED:\n  " + "\n  ".join(result["violations"]),
               file=sys.stderr)

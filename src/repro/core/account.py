@@ -89,6 +89,8 @@ class EvalAccount:
         self.steps: int = 0
         self.elapsed: float = 0.0
         self.busy: float = 0.0
+        self.abandoned: float = 0.0       # worker-seconds of discarded work
+        self.abandoned_count: int = 0     # discarded attempts
         self.trace: List[Tuple[int, float, float]] = []
         self.history: List[Tuple[int, float]] = []
         self.evaluated: Set[int] = set()
@@ -126,6 +128,18 @@ class EvalAccount:
         self.busy += cost
         self._note(idx, runtime)
         self.trace.append((self.steps, float(finished_at), runtime))
+
+    def record_abandoned(self, cost: float) -> None:
+        """Work that was started and then discarded — a failed attempt
+        that will be retried, or a straggler timed out and resubmitted
+        elsewhere.  The worker-seconds were genuinely burned, so they
+        accrue to ``busy`` (anything else under-reports the fleet's true
+        cost), but the measurement produced no usable result: no step, no
+        trace row, no best/history update.
+        """
+        self.busy += float(cost)
+        self.abandoned += float(cost)
+        self.abandoned_count += 1
 
 
 class Evaluator:

@@ -174,6 +174,58 @@ class FunctionEvaluator(Evaluator):
         return rt, None, rt
 
 
+class ElasticInFlight:
+    """Backpressure-driven target for outstanding empirical tests.
+
+    The fleet drivers historically held ``in_flight`` constant; this
+    controller grows or shrinks the target between ``[lo, hi]`` from two
+    observable signals:
+
+    * **lane utilization** — the baseline target is the number of live
+      lanes (fewer outstanding tests than lanes guarantees idle workers;
+      queueing much deeper than the lanes only adds latency to feedback);
+    * **measurement variance** — the coefficient of variation over a
+      rolling window of per-test durations.  High variance means lanes
+      free up unevenly, so a deeper queue is needed to keep the fast
+      lanes from idling while a straggler holds its lane; near-constant
+      durations need no queue beyond the lanes themselves.
+
+    ``target(workers)`` = clamp(workers + ceil(cv · workers), lo, hi) —
+    deterministic given the observation sequence, so elastic runs stay
+    bit-reproducible on the virtual backends.  With ``lo == hi`` the
+    controller degenerates to the fixed policy.
+    """
+
+    def __init__(self, lo: int, hi: int, window: int = 16):
+        if lo < 1 or hi < lo:
+            raise ValueError(f"need 1 <= lo <= hi, got [{lo}, {hi}]")
+        self.lo, self.hi = int(lo), int(hi)
+        self._window = int(window)
+        self._samples: List[float] = []
+
+    def observe(self, duration: float) -> None:
+        """Feed one per-test duration (cost or runtime) into the window."""
+        if duration > 0.0 and np.isfinite(duration):
+            self._samples.append(float(duration))
+            if len(self._samples) > self._window:
+                self._samples.pop(0)
+
+    def cv(self) -> float:
+        """Coefficient of variation over the current window (0 until two
+        samples exist)."""
+        if len(self._samples) < 2:
+            return 0.0
+        arr = np.asarray(self._samples)
+        mean = float(arr.mean())
+        if mean <= 0.0:
+            return 0.0
+        return float(arr.std() / mean)
+
+    def target(self, workers: int) -> int:
+        extra = int(np.ceil(self.cv() * max(1, int(workers))))
+        return max(self.lo, min(self.hi, int(workers) + extra))
+
+
 class VirtualAsyncEvaluator(Evaluator):
     """Simulated ``workers``-lane concurrency over any inner evaluator.
 

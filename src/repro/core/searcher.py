@@ -148,7 +148,8 @@ def sequential_run_search(searcher: Searcher, ev, max_steps: int) -> None:
 
 
 def run_search(searcher: Searcher, ev, max_steps: int,
-               in_flight: int = 1) -> None:
+               in_flight: int = 1,
+               in_flight_max: Optional[int] = None) -> None:
     """The uniform event-driven ask-tell driver used by every call site.
 
     Keeps up to ``in_flight`` candidates outstanding on the evaluator:
@@ -160,6 +161,16 @@ def run_search(searcher: Searcher, ev, max_steps: int,
     candidates are proposed in the same order, evaluated one at a time, and
     recorded with identical (steps, elapsed, runtime) rows.
 
+    ``in_flight_max`` makes the window ELASTIC: the driver reads the
+    evaluator's backpressure (its ``workers`` lane count when it has one,
+    plus the variance of observed measurement durations through an
+    ``ElasticInFlight`` controller) and grows/shrinks the outstanding-work
+    target between ``[in_flight, in_flight_max]`` — high duration variance
+    deepens the queue so fast lanes never idle behind a straggler, uniform
+    durations shrink it back to the lane count.  ``None`` (default) keeps
+    the historical fixed-window behaviour, so existing call sites — and the
+    ``in_flight=1`` golden equivalence — are unchanged.
+
     ``max_steps`` budgets *submissions* relative to the evaluator's state on
     entry (an evaluator that already spent steps on a training phase still
     gets a full search budget); everything submitted is drained before
@@ -167,11 +178,21 @@ def run_search(searcher: Searcher, ev, max_steps: int,
     """
     if in_flight < 1:
         raise ValueError(f"in_flight must be >= 1, got {in_flight}")
+    ctrl = None
+    if in_flight_max is not None:
+        if in_flight_max < in_flight:
+            raise ValueError(
+                f"in_flight_max must be >= in_flight, got "
+                f"{in_flight_max} < {in_flight}")
+        from repro.core.evaluate import ElasticInFlight
+
+        ctrl = ElasticInFlight(lo=in_flight, hi=in_flight_max)
+    limit = in_flight
     submitted = 0
     while True:
-        while (submitted < max_steps and ev.outstanding() < in_flight
+        while (submitted < max_steps and ev.outstanding() < limit
                and not ev.exhausted()):
-            k = min(in_flight - ev.outstanding(), max_steps - submitted)
+            k = min(limit - ev.outstanding(), max_steps - submitted)
             cands = searcher.propose(k)
             if not cands:
                 break   # searcher finished, or waiting on outstanding tests
@@ -182,6 +203,10 @@ def run_search(searcher: Searcher, ev, max_steps: int,
         obs = ev.collect()
         if obs:
             searcher.observe(obs)
+            if ctrl is not None:
+                for o in obs:
+                    ctrl.observe(o.runtime)
+                limit = ctrl.target(getattr(ev, "workers", 1))
 
 
 def resolve_searcher(searcher) -> Type[Searcher]:
@@ -324,8 +349,17 @@ class ProfileBasedSearcher(Searcher):
             # line 3: empirical measurement with performance counters
             obs = yield [Candidate(c_profile, profile=True)]
             pc = obs[0].counters
-            t = pc.runtime
             evaluated[c_profile] = True
+            if pc is None:
+                # the profiled test failed (crashing config marked
+                # known-bad by a fault-tolerant driver): re-anchor on a
+                # fresh unevaluated config instead of crashing the search
+                remaining = np.flatnonzero(~evaluated)
+                if remaining.size == 0:
+                    return
+                c_profile = int(remaining[self.rng.integers(remaining.size)])
+                continue
+            t = pc.runtime
             # line 4: bottleneck analysis (on the autotuning architecture)
             b = bottleneck.analyze(pc, cores=self.cores)
             # line 5: required counter changes
@@ -550,8 +584,14 @@ class ProfileLocalSearcher(Searcher):
         while True:
             obs = yield [Candidate(c_profile, profile=True)]
             pc = obs[0].counters
-            t = pc.runtime
             evaluated[c_profile] = True
+            if pc is None:      # failed profile test: re-anchor, keep going
+                remaining = np.flatnonzero(~evaluated)
+                if remaining.size == 0:
+                    return
+                c_profile = int(remaining[self.rng.integers(remaining.size)])
+                continue
+            t = pc.runtime
             b = bottleneck.analyze(pc, cores=self.cores)
             delta_pc = reaction.compute_delta_pc(b, self.inst_reaction)
 

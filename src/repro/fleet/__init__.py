@@ -19,13 +19,15 @@ CLI: ``python -m repro.launch.fleet``; benchmark:
 ``python -m benchmarks.bench_fleet`` (writes ``BENCH_fleet.json``).
 """
 from repro.fleet.job import JobResult, TuningJob, job_from_registry
-from repro.fleet.pool import (SubprocessWorkerPool, ThreadWorkerPool,
+from repro.fleet.pool import (FAIL_LANE, FAIL_POOL, FAIL_TEST, FailedResult,
+                              SubprocessWorkerPool, ThreadWorkerPool,
                               VirtualWorkerPool, WorkItem, WorkResult)
 from repro.fleet.tuner import (FleetReport, FleetTuner,
                                predicted_runtime_order)
 
 __all__ = [
-    "FleetReport", "FleetTuner", "JobResult", "SubprocessWorkerPool",
-    "ThreadWorkerPool", "TuningJob", "VirtualWorkerPool", "WorkItem",
-    "WorkResult", "job_from_registry", "predicted_runtime_order",
+    "FAIL_LANE", "FAIL_POOL", "FAIL_TEST", "FailedResult", "FleetReport",
+    "FleetTuner", "JobResult", "SubprocessWorkerPool", "ThreadWorkerPool",
+    "TuningJob", "VirtualWorkerPool", "WorkItem", "WorkResult",
+    "job_from_registry", "predicted_runtime_order",
 ]

@@ -86,21 +86,35 @@ def job_from_registry(kernel: str, input_key: str,
 
 @dataclasses.dataclass
 class JobResult:
-    """Outcome of one fleet job, read off its completion-ordered account."""
+    """Outcome of one fleet job, read off its completion-ordered account.
+
+    ``best_index`` is ``None`` only in the degenerate fault case where
+    every empirical test of the job failed (its ``known_bad`` then lists
+    the crashed configs and ``best_runtime`` is ``inf``) — the fleet still
+    completes and reports it instead of dying.  Known-bad configs appear
+    in the trace/history as ``inf``-runtime rows, so ``trials`` counts
+    every *resolved* test, successful or not; ``failures`` counts failed
+    attempts (including retried ones) and ``abandoned_s`` the
+    worker-seconds those burned — already included in ``busy``.
+    """
 
     job: str
     bucket: str
     hardware: str
     searcher: str
     warm_started: bool
-    best_index: int
+    best_index: Optional[int]
     best_config: Config
     best_runtime: float
-    trials: int                  # empirical tests completed
+    trials: int                  # empirical tests resolved (incl. known-bad)
     elapsed: float               # job's completion frontier on the pool clock
     busy: float                  # worker-seconds spent on this job
     trace: List[Tuple[int, float, float]]
     history: List[Tuple[int, float]]
+    failures: int = 0            # failed attempts observed (pre-retry)
+    abandoned_s: float = 0.0     # worker-seconds of discarded attempts
+    known_bad: List[int] = dataclasses.field(default_factory=list)
+    parked: bool = False         # scheduler parked it inside the well band
 
     def trials_to_threshold(self, threshold: float) -> Optional[int]:
         """Completed trials until runtime <= threshold (None: never)."""

@@ -19,29 +19,65 @@ operationalizes that at deployment scale:
   falls back to its ``cold_searcher`` and, on completion, trains and
   publishes the missing model for the next arrival.
 
-Scheduling is round-robin over jobs with unfilled budgets, keeping up to
-``in_flight`` tests outstanding pool-wide; completions are drained one at a
-time and fed back to the owning searcher, so the loop is event-driven end
-to end (no barrier between jobs or between batches of one job).
+Scheduling is PRIORITY dispatch by predicted remaining gain: a job backed
+by a stored TP→PC artifact knows its model-predicted best runtime on its
+own hardware, so ``current best − predicted best`` estimates how much
+latency further convergence is still buying; the scheduler spends lanes on
+the job with the most left to gain (cold jobs with no artifact rank
+highest — their gain is unknown).  Ties (and the all-cold fleet) break
+least-recently-scheduled, which degenerates to the fair round-robin of
+the pre-priority scheduler.  With ``park_factor`` set, a model-backed job
+whose measured best is already within that factor of its predicted best is
+PARKED — it stops consuming budget, freeing lanes for jobs still
+converging — and is unparked if a model published later in the run shows
+there was more gain to be had than its stale artifact predicted.
+
+Failure handling (the fleet no longer dies on its first crashed config):
+worker pools surface failed tests as ``FailedResult`` data, and the
+orchestrator retries each failed test up to ``retries`` times on another
+lane (exclude-and-resubmit).  A config whose measurement itself fails
+``known_bad_after`` times is marked KNOWN-BAD: it resolves as an
+``inf``-runtime row in the job's trace/history (so budgets terminate and
+convergence curves stay honest) and is reported in ``JobResult.known_bad``.
+With ``straggler_factor`` set, a test outstanding longer than that factor
+times the job's rolling per-kind completion-latency estimate (submit →
+finish on the pool clock, so IPC/queueing overhead is in the baseline) is
+timed out: resubmitted elsewhere, and the eventual late result dropped.  Every discarded attempt's
+worker-seconds are charged through ``EvalAccount.record_abandoned`` — they
+appear in ``busy`` (and ``abandoned_s``) because the lanes really were
+burned.
+
+``in_flight`` may be ELASTIC: with ``in_flight_max`` set, an
+``ElasticInFlight`` controller grows/shrinks the outstanding-work target
+between the bounds from pool backpressure (live lane count) and the
+variance of observed measurement costs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import queue
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import costmodel, hwspec
 from repro.core.account import EvalAccount, Observation
+from repro.core.evaluate import ElasticInFlight
 from repro.core.hwspec import HardwareSpec
 from repro.core.model import TPPCModel
 from repro.core.searcher import WarmStartSearcher, make_searcher
 from repro.core.tuner import predicted_runtimes
 from repro.core.tuning_space import TuningSpace
 from repro.fleet.job import JobResult, TuningJob
-from repro.fleet.pool import WorkItem
-from repro.tuning.session import TuningSession
-from repro.tuning.store import ConfigStore
+from repro.fleet.pool import FAIL_TEST, WorkItem
+
+_INF = float("inf")
+
+# Absolute floor on straggler deadlines: on real pools a sub-millisecond
+# test can be delayed tens of milliseconds by OS scheduling/IPC jitter
+# alone, which is noise, not straggling — never time out below this.
+# Virtual clocks have no jitter and their test costs sit above the floor.
+STRAGGLER_MIN_TIMEOUT = 0.05
 
 
 def predicted_runtime_order(model: TPPCModel, space: TuningSpace,
@@ -59,12 +95,31 @@ class FleetReport:
 
     results: List[JobResult]
     elapsed: float       # pool wall-clock consumed by this run (makespan)
-    busy: float          # worker-seconds across all jobs
+    busy: float          # worker-seconds across all jobs (incl. abandoned)
     in_flight: int
     workers: int
+    abandoned: float = 0.0       # worker-seconds of discarded attempts
+    failures: int = 0            # failed attempts across all jobs
+    timeouts: int = 0            # stragglers timed out and resubmitted
+    known_bad: int = 0           # configs marked known-bad fleet-wide
+    parked: int = 0              # jobs parked by the gain scheduler
+    max_retries_used: int = 0    # highest attempt number any test needed
+    in_flight_max: Optional[int] = None   # elastic upper bound (None: fixed)
 
     def by_job(self) -> Dict[str, JobResult]:
         return {r.job: r for r in self.results}
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One logical empirical test currently on the pool."""
+
+    js: "_JobState"
+    index: int
+    profile: bool
+    attempt: int
+    exclude: Tuple[int, ...]
+    submitted_at: float      # absolute pool clock at submission
 
 
 class _JobState:
@@ -82,6 +137,21 @@ class _JobState:
         self.result: Optional[JobResult] = None
         self.hw = job.hw_spec()
         self.hw_key = job.hardware_key
+        # fault-tolerance / scheduling state
+        self.retry_queue: List[Tuple[int, bool, int, Tuple[int, ...]]] = []
+        self.fail_counts: Dict[int, int] = {}
+        self.known_bad: List[int] = []
+        self.failures = 0
+        self.timeouts = 0
+        # rolling per-kind completion-LATENCY window (submit→finish on
+        # the pool clock, so IPC/queueing overhead is part of the
+        # baseline; profiled tests are ~5x plain, so one shared window
+        # would false-flag every profile as a straggler)
+        self.lat_window: Dict[bool, List[float]] = {False: [], True: []}
+        self.predicted_best: Optional[float] = None
+        self.parked = False
+        self.was_parked = False
+        self.last_pick = 0
 
     def payload_for(self, index: int, profile: bool) -> Optional[dict]:
         if self.job.kernel is None:
@@ -96,22 +166,52 @@ class _JobState:
             p["hw_spec"] = dataclasses.asdict(self.hw)
         return p
 
+    def note_latency(self, profile: bool, latency: float) -> None:
+        w = self.lat_window[profile]
+        w.append(latency)
+        if len(w) > 8:
+            w.pop(0)
+
+    def latency_estimate(self, profile: bool) -> Optional[float]:
+        """Straggler baseline: the MAX over the recent latency window —
+        real pools see scheduling/IPC hiccups far above the median, and a
+        mean-style estimate false-flags them; armed only after 3
+        completions of the kind so one early sample can't set a hair
+        trigger.  ``None`` disarms the timeout for this (job, kind)."""
+        w = self.lat_window[profile]
+        if len(w) < 3:
+            return None
+        return max(w)
+
 
 class FleetTuner:
     """Schedule many ``TuningJob``s over one pool and one shared store.
 
     ``in_flight`` defaults to the pool's worker count — more keeps lanes
-    busy across searcher latencies, fewer throttles.  ``publish_models``
-    makes cold jobs train and store the portable TP→PC_ops model for their
-    key on completion (the artifact later arrivals warm-start from).
+    busy across searcher latencies, fewer throttles; ``in_flight_max``
+    makes it elastic between the two bounds.  ``publish_models`` makes cold
+    jobs train and store the portable TP→PC_ops model for their key on
+    completion (the artifact later arrivals warm-start from).
+
+    Fault policy: ``retries`` bounds resubmissions per logical test;
+    ``known_bad_after`` measurement failures of one config mark it
+    known-bad; ``straggler_factor`` (None: disabled) times out tests
+    outstanding longer than ``factor ×`` the job's rolling cost estimate.
+    ``park_factor`` (None: disabled) parks model-backed jobs whose best is
+    already within that factor of their predicted best runtime.
     """
 
     def __init__(self, jobs: Sequence[TuningJob], pool,
-                 store: Optional[ConfigStore] = None,
+                 store=None,
                  in_flight: Optional[int] = None,
                  publish_models: bool = True,
                  model_kind: str = "tree",
-                 verbose: bool = False):
+                 verbose: bool = False,
+                 retries: int = 2,
+                 known_bad_after: int = 2,
+                 straggler_factor: Optional[float] = None,
+                 park_factor: Optional[float] = None,
+                 in_flight_max: Optional[int] = None):
         if not jobs:
             raise ValueError("FleetTuner needs at least one job")
         names = [j.name for j in jobs]
@@ -122,24 +222,47 @@ class FleetTuner:
         self.store = store
         self.in_flight = int(in_flight if in_flight is not None
                              else pool.workers)
+        if in_flight_max is not None and in_flight_max < self.in_flight:
+            raise ValueError(
+                f"in_flight_max must be >= in_flight, got "
+                f"{in_flight_max} < {self.in_flight}")
+        self.in_flight_max = in_flight_max
         self.publish_models = publish_models
         self.model_kind = model_kind
         self.verbose = verbose
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
+        self.retries = int(retries)
+        self.known_bad_after = int(known_bad_after)
+        self.straggler_factor = straggler_factor
+        self.park_factor = park_factor
         self._uid = 0
+        self._states: List[_JobState] = []
+        self._inflight: Dict[int, _InFlight] = {}
+        self._abandoned: Dict[int, _JobState] = {}
+        self._pick_seq = 0
+        self._max_attempt = 0
 
     # -- per-job setup ---------------------------------------------------------
     def _start(self, js: _JobState) -> None:
         """Bind a searcher on first schedule: explicit name, or warm-start
-        from the nearest stored artifact, or the cold fallback."""
+        from the nearest stored artifact, or the cold fallback.  A loaded
+        model also prices the job's predicted best runtime — the gain
+        estimate the priority scheduler and parking policy run on."""
         if js.searcher is not None:
             return
+        t0 = self.pool.elapsed()
         job = js.job
         model = None
+        pred = None
         if self.store is not None:
             model, key = self.store.load_nearest_model(
                 job.space.name, job.bucket, js.hw_key, bind_space=job.space)
-            if model is not None and self.verbose:
-                print(f"[fleet] {job.name}: warm start from {key}")
+            if model is not None:
+                pred = predicted_runtimes(model, job.space, js.hw)
+                js.predicted_best = float(np.min(pred))
+                if self.verbose:
+                    print(f"[fleet] {job.name}: warm start from {key}")
         if job.searcher is not None:
             js.searcher_name = job.searcher
             js.searcher = make_searcher(
@@ -150,12 +273,13 @@ class FleetTuner:
             js.searcher_name = "warm_start"
             js.searcher = WarmStartSearcher(
                 job.space,
-                order=predicted_runtime_order(model, job.space, js.hw),
+                order=[int(i) for i in np.argsort(pred, kind="stable")],
                 seed=job.seed)
         else:
             js.searcher_name = job.cold_searcher
             js.searcher = make_searcher(job.cold_searcher, job.space,
                                         seed=job.seed)
+        self._absorb_stall(t0)
 
     def _eval_fn(self, js: _JobState, index: int, profile: bool):
         """Pure measurement closure for in-process pools: the job's
@@ -181,73 +305,331 @@ class FleetTuner:
 
         return fn
 
+    def _absorb_stall(self, t0: float) -> None:
+        """Expensive orchestrator work (training/publishing a model at
+        finalize, whole-space prediction at warm start) stalls the event
+        loop while in-flight tests keep aging on the real pool clock —
+        their results may already sit uncollected in the queue.  Shift
+        their submission stamps by the stall so the straggler timeout only
+        measures time the POOL spent, not time we did.  (Virtual pools
+        don't advance during orchestrator work, so this is a no-op there.)
+        """
+        stall = self.pool.elapsed() - t0
+        if stall > 0.0:
+            for info in self._inflight.values():
+                info.submitted_at += stall
+
+    # -- scheduling ------------------------------------------------------------
+    def _alive(self) -> int:
+        alive = getattr(self.pool, "alive_workers", None)
+        return int(alive()) if alive is not None else int(self.pool.workers)
+
+    def _priority(self, js: _JobState) -> float:
+        """Predicted remaining gain: how much latency convergence is still
+        buying this job.  Cold jobs (no artifact) rank highest — their gain
+        is unknown, and exploring them also produces the artifacts that
+        sharpen everyone else's estimate."""
+        if js.predicted_best is None:
+            return _INF
+        return max(0.0, js.account.best_runtime - js.predicted_best)
+
+    def _pick(self, skip: set) -> Optional[_JobState]:
+        """Highest-gain schedulable job; ties break least-recently-picked
+        (which reduces to fair round-robin for an all-cold fleet)."""
+        best, best_key = None, None
+        for js in self._states:
+            if js.done or js.parked or js in skip:
+                continue
+            if not js.retry_queue and js.submitted >= js.job.budget:
+                continue
+            key = (self._priority(js), -js.last_pick)
+            if best is None or key > best_key:
+                best, best_key = js, key
+        return best
+
+    def _submit(self, js: _JobState, index: int, profile: bool,
+                attempt: int, exclude: Tuple[int, ...]) -> None:
+        uid = self._uid
+        self._uid += 1
+        self._max_attempt = max(self._max_attempt, attempt)
+        self._inflight[uid] = _InFlight(
+            js=js, index=index, profile=profile, attempt=attempt,
+            exclude=exclude, submitted_at=self.pool.elapsed())
+        self.pool.submit(WorkItem(
+            uid=uid, job=js.job.name, index=index, profile=profile,
+            fn=self._eval_fn(js, index, profile),
+            payload=js.payload_for(index, profile),
+            attempt=attempt, exclude=exclude))
+
+    def _fill(self, limit: int) -> None:
+        """Saturate the pool up to ``limit`` logical tests, highest
+        predicted gain first; retries of failed tests go out before new
+        candidates of the same job."""
+        skip: set = set()
+        while len(self._inflight) < limit:
+            js = self._pick(skip)
+            if js is None:
+                return
+            if js.retry_queue:
+                index, profile, attempt, exclude = js.retry_queue.pop(0)
+                self._submit(js, index, profile, attempt, exclude)
+                js.last_pick = self._next_pick()
+                continue
+            self._start(js)
+            cands = js.searcher.propose(1)
+            if not cands:
+                # waiting on its batch (pending > 0) or exhausted
+                if js.pending == 0 and js.searcher.done:
+                    self._finalize(js)
+                skip.add(js)
+                continue
+            c = cands[0]
+            self._submit(js, c.index, c.profile, 0, ())
+            js.submitted += 1
+            js.pending += 1
+            js.last_pick = self._next_pick()
+
+    def _next_pick(self) -> int:
+        self._pick_seq += 1
+        return self._pick_seq
+
+    # -- completion handling ---------------------------------------------------
+    def _resolve(self, js: _JobState, index: int, runtime: float,
+                 counters, cost: float, finished_rel: float) -> None:
+        """One logical test reached its final outcome (measured result or
+        known-bad ``inf``): account it, feed the searcher, re-evaluate
+        parking, finalize on budget exhaustion."""
+        js.pending -= 1
+        # job accounts run on THIS run's clock (the pool may have served
+        # earlier runs), so per-job elapsed stays comparable to the
+        # report's makespan
+        js.account.record_completion(index, runtime, cost, finished_rel)
+        js.searcher.observe([Observation(
+            index=index, runtime=runtime, counters=counters,
+            step=js.account.steps, elapsed=js.account.elapsed)])
+        self._maybe_park(js)
+        if js.pending == 0 and js.submitted >= js.job.budget:
+            self._finalize(js)
+
+    def _handle(self, res, t_start: float) -> None:
+        info = self._inflight.pop(res.uid, None)
+        if info is None:
+            # a timed-out straggler finally came back: its measurement is
+            # discarded, but the lane-seconds it burned are real
+            js = self._abandoned.pop(res.uid, None)
+            if js is not None:
+                js.account.record_abandoned(res.cost)
+            return
+        js = info.js
+        finished_rel = res.finished_at - t_start
+        if res.error is None:
+            # latency, not in-worker cost: for subprocess/thread pools the
+            # submit→finish time includes IPC and queueing, and THAT is
+            # what a straggler deadline must be calibrated against
+            latency = res.finished_at - info.submitted_at
+            js.note_latency(info.profile,
+                            latency if latency > 0.0 else res.cost)
+            self._resolve(js, res.index, res.runtime, res.counters,
+                          res.cost, finished_rel)
+            return
+        # -- failure: the attempt burned a lane but produced nothing
+        js.failures += 1
+        js.account.record_abandoned(res.cost)
+        kind = res.kind or FAIL_TEST
+        give_up = False
+        if kind == FAIL_TEST:
+            js.fail_counts[info.index] = \
+                js.fail_counts.get(info.index, 0) + 1
+            if js.fail_counts[info.index] >= self.known_bad_after:
+                give_up = True        # the config itself is the problem
+        if not give_up and info.attempt < self.retries \
+                and self._alive() > 0:
+            exclude = info.exclude
+            if res.lane >= 0 and res.lane not in exclude:
+                exclude = exclude + (res.lane,)
+            js.retry_queue.append(
+                (info.index, info.profile, info.attempt + 1, exclude))
+            if self.verbose:
+                print(f"[fleet] {js.job.name}[{info.index}] failed "
+                      f"({kind}): retry {info.attempt + 1}")
+            return
+        # give up: resolve the test as an inf row so the budget terminates
+        # and the searcher is unblocked; the known-bad label is reserved
+        # for configs whose OWN measurement failed known_bad_after times —
+        # a retry budget exhausted on lane faults (or on a smaller fail
+        # count) doesn't condemn the config
+        if kind == FAIL_TEST \
+                and js.fail_counts.get(info.index, 0) \
+                >= self.known_bad_after \
+                and info.index not in js.known_bad:
+            js.known_bad.append(info.index)
+        if self.verbose:
+            print(f"[fleet] {js.job.name}[{info.index}] failed "
+                  f"({kind}): giving up ({res.error})")
+        self._resolve(js, info.index, _INF, None, 0.0, finished_rel)
+
+    def _check_stragglers(self, t_start: float) -> None:
+        """Time out tests outstanding longer than ``straggler_factor ×``
+        their job's rolling latency estimate: resubmit elsewhere and drop
+        the eventual late result (its cost is charged on arrival).  The
+        retry carries no lane exclusion (the straggler's lane is unknown
+        until its result arrives), but both addressable pools steer it
+        away anyway: the wedged lane still holds the hung test in its
+        busy/next-free accounting, so least-loaded selection avoids it."""
+        if self.straggler_factor is None:
+            return
+        now = self.pool.elapsed()
+        for uid, info in list(self._inflight.items()):
+            est = info.js.latency_estimate(info.profile)
+            if est is None:
+                continue
+            allowed = max(self.straggler_factor * est,
+                          STRAGGLER_MIN_TIMEOUT)
+            if now - info.submitted_at <= allowed:
+                continue
+            del self._inflight[uid]
+            self._abandoned[uid] = info.js
+            js = info.js
+            js.timeouts += 1
+            if self.verbose:
+                print(f"[fleet] {js.job.name}[{info.index}] straggling "
+                      f"(> {self.straggler_factor:.1f}x est): resubmit")
+            if info.attempt < self.retries:
+                js.retry_queue.append(
+                    (info.index, info.profile, info.attempt + 1,
+                     info.exclude))
+            else:   # out of retries: resolve without a measurement
+                self._resolve(js, info.index, _INF, None, 0.0,
+                              now - t_start)
+
+    def _collect_tick(self) -> Optional[float]:
+        """Block-until for ``collect``: the nearest straggler deadline
+        (None blocks indefinitely — no timeout policy or no estimate yet).
+        Virtual pools ignore it; real pools wake up to run the scan."""
+        if self.straggler_factor is None:
+            return None
+        deadlines = []
+        for info in self._inflight.values():
+            est = info.js.latency_estimate(info.profile)
+            if est is not None:
+                deadlines.append(
+                    info.submitted_at + max(self.straggler_factor * est,
+                                            STRAGGLER_MIN_TIMEOUT))
+        if not deadlines:
+            return None
+        return max(0.01, min(deadlines) - self.pool.elapsed() + 0.01)
+
     # -- the event loop --------------------------------------------------------
     def run(self) -> FleetReport:
-        states = [_JobState(j) for j in self.jobs]
-        by_name = {js.job.name: js for js in states}
-        n = len(states)
+        self._states = [_JobState(j) for j in self.jobs]
+        for i, js in enumerate(self._states):
+            js.last_pick = i      # initial tie-break: declaration order
+        self._pick_seq = len(self._states)
+        self._inflight = {}
+        self._abandoned = {}
         t_start = self.pool.elapsed()
-        rr = 0
+        elastic = None
+        if self.in_flight_max is not None:
+            elastic = ElasticInFlight(lo=self.in_flight,
+                                      hi=self.in_flight_max)
+        limit = self.in_flight
         while True:
-            # saturate the pool: a rotating cursor over jobs, advanced one
-            # position per visit (a submit resumes scanning at the NEXT
-            # job, so lanes spread fairly); stop once a full lap produced
-            # nothing — no job can offer work right now
-            fruitless = 0
-            while self.pool.outstanding() < self.in_flight and fruitless < n:
-                js = states[rr]
-                rr = (rr + 1) % n
-                if js.done or js.submitted >= js.job.budget:
-                    fruitless += 1
-                    continue
-                self._start(js)
-                cands = js.searcher.propose(1)
-                if not cands:
-                    # waiting on its batch (pending > 0) or exhausted
-                    if js.pending == 0 and js.searcher.done:
-                        self._finalize(js)
-                    fruitless += 1
-                    continue
-                c = cands[0]
-                self.pool.submit(WorkItem(
-                    uid=self._uid, job=js.job.name, index=c.index,
-                    profile=c.profile,
-                    fn=self._eval_fn(js, c.index, c.profile),
-                    payload=js.payload_for(c.index, c.profile)))
-                self._uid += 1
-                js.submitted += 1
-                js.pending += 1
-                fruitless = 0
-            if self.pool.outstanding() == 0:
-                break       # nothing running and nothing schedulable
-            res = self.pool.collect()
-            js = by_name[res.job]
-            js.pending -= 1
-            # job accounts run on THIS run's clock (the pool may have
-            # served earlier runs), so per-job elapsed stays comparable to
-            # the report's makespan
-            js.account.record_completion(res.index, res.runtime, res.cost,
-                                         res.finished_at - t_start)
-            js.searcher.observe([Observation(
-                index=res.index, runtime=res.runtime, counters=res.counters,
-                step=js.account.steps, elapsed=js.account.elapsed)])
-            if js.pending == 0 and js.submitted >= js.job.budget:
-                self._finalize(js)
-        for js in states:   # jobs whose searcher dried up mid-fill
+            self._fill(limit)
+            if not self._inflight:
+                break     # nothing running and nothing schedulable
+            try:
+                res = self.pool.collect(timeout=self._collect_tick())
+            except queue.Empty:
+                self._check_stragglers(t_start)
+                continue
+            self._handle(res, t_start)
+            if elastic is not None:
+                if res.error is None:
+                    elastic.observe(res.cost)
+                limit = elastic.target(self._alive())
+            self._check_stragglers(t_start)
+        # drain abandoned stragglers still on the pool so their burned
+        # lane-seconds are charged (and a reused pool starts clean);
+        # a straggler that never returns (hung thread) is skipped
+        while self._abandoned and self.pool.outstanding() > 0:
+            try:
+                res = self.pool.collect(timeout=0.05)
+            except queue.Empty:
+                break
+            js = self._abandoned.pop(res.uid, None)
+            if js is not None:
+                js.account.record_abandoned(res.cost)
+        for js in self._states:   # parked jobs + searchers that dried up
             if not js.done:
                 self._finalize(js)
-        results = [js.result for js in states]
+        for js in self._states:
+            # a straggler drained above may have charged abandoned cost
+            # AFTER its job finalized — refresh the snapshot's accounting
+            js.result.busy = js.account.busy
+            js.result.abandoned_s = js.account.abandoned
+        results = [js.result for js in self._states]
         return FleetReport(
             results=results,
             elapsed=self.pool.elapsed() - t_start,
             busy=float(sum(r.busy for r in results)),
             in_flight=self.in_flight,
-            workers=self.pool.workers)
+            workers=self.pool.workers,
+            abandoned=float(sum(r.abandoned_s for r in results)),
+            failures=int(sum(r.failures for r in results)),
+            timeouts=int(sum(js.timeouts for js in self._states)),
+            known_bad=int(sum(len(r.known_bad) for r in results)),
+            parked=int(sum(1 for r in results if r.parked)),
+            max_retries_used=self._max_attempt,
+            in_flight_max=self.in_flight_max)
+
+    # -- parking ---------------------------------------------------------------
+    def _maybe_park(self, js: _JobState) -> None:
+        """Park a model-backed job whose measured best already sits within
+        ``park_factor`` of its predicted best: convergence has stopped
+        buying latency, so its budget goes to jobs still gaining."""
+        if (self.park_factor is None or js.parked
+                or js.predicted_best is None):
+            return
+        if js.account.best_runtime <= self.park_factor * js.predicted_best:
+            js.parked = True
+            js.was_parked = True
+            if self.verbose:
+                print(f"[fleet] {js.job.name}: parked at "
+                      f"{js.account.best_runtime * 1e3:.3f}ms "
+                      f"(predicted best "
+                      f"{js.predicted_best * 1e3:.3f}ms)")
+
+    def _unpark_check(self, space_name: str) -> None:
+        """A model was just published for ``space_name``: parked jobs of
+        that space re-price their predicted best against the now-nearest
+        artifact, and unpark if it shows more remaining gain than the
+        stale artifact they parked on."""
+        if self.park_factor is None or self.store is None:
+            return
+        for js in self._states:
+            if js.done or not js.parked \
+                    or js.job.space.name != space_name:
+                continue
+            model, _ = self.store.load_nearest_model(
+                space_name, js.job.bucket, js.hw_key,
+                bind_space=js.job.space)
+            if model is None:
+                continue
+            js.predicted_best = float(np.min(
+                predicted_runtimes(model, js.job.space, js.hw)))
+            if js.account.best_runtime \
+                    > self.park_factor * js.predicted_best:
+                js.parked = False
+                if self.verbose:
+                    print(f"[fleet] {js.job.name}: unparked (new model "
+                          f"predicts {js.predicted_best * 1e3:.3f}ms)")
 
     # -- completion ------------------------------------------------------------
     def _finalize(self, js: _JobState) -> None:
+        t0 = self.pool.elapsed()
         job, acct = js.job, js.account
-        if acct.best_index is None:
+        if acct.best_index is None and js.failures == 0 \
+                and acct.steps == 0:
             raise RuntimeError(f"job {job.name} made no empirical tests "
                                "(budget <= 0 or empty space?)")
         js.done = True
@@ -255,16 +637,20 @@ class FleetTuner:
             job=job.name, bucket=job.bucket, hardware=js.hw_key,
             searcher=js.searcher_name, warm_started=js.warm_started,
             best_index=acct.best_index,
-            best_config=dict(job.space[acct.best_index]),
+            best_config=dict(job.space[acct.best_index])
+            if acct.best_index is not None else {},
             best_runtime=acct.best_runtime, trials=acct.steps,
             elapsed=acct.elapsed, busy=acct.busy,
-            trace=list(acct.trace), history=list(acct.history))
-        if self.store is None:
+            trace=list(acct.trace), history=list(acct.history),
+            failures=js.failures, abandoned_s=acct.abandoned,
+            known_bad=list(js.known_bad), parked=js.was_parked)
+        if self.store is None or acct.best_index is None:
             return
         # batch the entry + model artifact into ONE locked read-merge-write
         # (each autosave re-parses the whole file — at fleet scale two per
         # completion is measurable lock/IO churn on the event loop)
         was_autosave, self.store.autosave = self.store.autosave, False
+        published = False
         try:
             self.store.put(
                 job.space.name, job.bucket, js.hw_key,
@@ -277,15 +663,21 @@ class FleetTuner:
                 # train the portable TP→PC_ops model this job was missing
                 # and publish it — the next (input, hardware) arrival
                 # warm-starts from it
+                from repro.tuning.session import TuningSession
+
                 session = TuningSession(job.space, job.workload_fn,
                                         hw=js.hw, seed=job.seed)
                 session.train(kind=self.model_kind, sample="deliberate")
                 session.save_model_to_store(self.store, job.bucket,
                                             js.hw_key)
+                published = True
         finally:
             self.store.autosave = was_autosave
         if was_autosave and self.store.path is not None:
             self.store.save()
+        if published:
+            self._unpark_check(job.space.name)
+        self._absorb_stall(t0)
         if self.verbose:
             print(f"[fleet] {job.name}: best {acct.best_runtime*1e3:.3f}ms "
                   f"in {acct.steps} trials "

@@ -15,7 +15,15 @@ payload drops in without changing the pool protocol.
 Protocol extras: ``{"op": "ping"}`` → ``{"op": "pong", "devices": n}``
 (startup handshake), ``{"op": "shutdown"}`` or EOF → exit.  Errors are
 reported per-request (``{"uid", "error", ...}``), never by crashing the
-worker.
+worker.  ``attempt`` is echoed back verbatim so the pool can correlate
+retries.
+
+Fault-injection hooks (tests/benchmarks for the fleet's failure policies):
+a payload with ``"sim_fail": true`` replies with an injected error instead
+of evaluating; ``"sim_crash": true`` makes the worker process exit
+immediately WITHOUT replying — the deterministic stand-in for a lane dying
+with a test in flight (the pool's reader sees EOF and fails the item as
+kind ``"lane"``).
 """
 from __future__ import annotations
 
@@ -63,7 +71,14 @@ def main(argv=None) -> int:
             print(json.dumps({"op": "pong", "devices": n_devices,
                               "mesh": bool(mesh)}), flush=True)
             continue
-        out = {"uid": req.get("uid")}
+        out = {"uid": req.get("uid"), "attempt": int(req.get("attempt", 0))}
+        if req.get("sim_crash"):
+            # simulate a lane dying mid-test: no reply, immediate exit
+            sys.exit(1)
+        if req.get("sim_fail"):
+            out["error"] = "InjectedFailure: sim_fail requested"
+            print(json.dumps(out), flush=True)
+            continue
         try:
             bm = BENCHMARKS[req["kernel"]]
             if req["kernel"] not in spaces:

@@ -52,6 +52,24 @@ def main(argv=None) -> int:
                     help="subprocess backend: jax host devices per worker")
     ap.add_argument("--in-flight", type=int, default=None,
                     help="outstanding tests pool-wide (default: --workers)")
+    ap.add_argument("--in-flight-max", type=int, default=None,
+                    help="make in_flight ELASTIC between [--in-flight, "
+                    "this]: the driver grows/shrinks outstanding work from "
+                    "pool backpressure (live lanes, measurement variance)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="max resubmissions per failed test on another "
+                    "lane (default: 2)")
+    ap.add_argument("--known-bad-after", type=int, default=2,
+                    help="mark a config known-bad after this many "
+                    "failures of its own measurement (default: 2)")
+    ap.add_argument("--straggler-factor", type=float, default=None,
+                    help="time out tests outstanding longer than this "
+                    "factor times the job's rolling cost estimate and "
+                    "resubmit them elsewhere (default: disabled)")
+    ap.add_argument("--park-factor", type=float, default=None,
+                    help="park model-backed jobs whose measured best is "
+                    "already within this factor of their predicted best "
+                    "runtime (default: disabled)")
     ap.add_argument("--budget", type=int, default=25,
                     help="empirical-test budget per job")
     ap.add_argument("--searcher", default=None,
@@ -92,6 +110,11 @@ def main(argv=None) -> int:
     try:
         report = FleetTuner(jobs, pool, store=store,
                             in_flight=args.in_flight,
+                            in_flight_max=args.in_flight_max,
+                            retries=args.retries,
+                            known_bad_after=args.known_bad_after,
+                            straggler_factor=args.straggler_factor,
+                            park_factor=args.park_factor,
                             publish_models=not args.no_publish,
                             verbose=args.verbose).run()
     finally:
@@ -108,6 +131,13 @@ def main(argv=None) -> int:
           f"{report.busy:.3f} worker-seconds of measurement "
           f"(x{report.busy / max(report.elapsed, 1e-12):.2f} concurrency); "
           f"host wall {wall:.1f}s")
+    if report.failures or report.timeouts or report.parked:
+        print(f"[fleet] faults: {report.failures} failed attempts "
+              f"({report.known_bad} known-bad configs), "
+              f"{report.timeouts} stragglers timed out, "
+              f"{report.abandoned:.3f}s abandoned work charged to busy, "
+              f"{report.parked} jobs parked, max retries used "
+              f"{report.max_retries_used}")
     if args.store:
         print(f"[fleet] store -> {args.store} ({len(store)} entries)")
     if args.out:
@@ -117,11 +147,18 @@ def main(argv=None) -> int:
                 "in_flight": report.in_flight,
                 "pool_elapsed_s": report.elapsed, "busy_s": report.busy,
                 "host_wall_s": wall,
+                "failures": report.failures,
+                "timeouts": report.timeouts,
+                "known_bad": report.known_bad,
+                "abandoned_s": report.abandoned,
+                "parked": report.parked,
                 "jobs": [{
                     "job": r.job, "bucket": r.bucket, "hardware": r.hardware,
                     "searcher": r.searcher, "warm_started": r.warm_started,
                     "trials": r.trials, "best_runtime_s": r.best_runtime,
                     "best_config": r.best_config,
+                    "failures": r.failures, "known_bad": r.known_bad,
+                    "parked": r.parked,
                 } for r in report.results],
             }, f, indent=2)
         print(f"[fleet] -> {args.out}")

@@ -16,6 +16,11 @@ The store is one JSON file holding two artifact kinds under the same key
   ``repro.tuning.serialize`` JSON format, so the warm-start ranking that
   keeps live-trial counts small is itself persistent and shippable across
   machines (``TuningSession.save_model_to_store``/``load_model_from_store``).
+  Every stored artifact carries a monotonic ``revision`` (and optional
+  ``n_obs``): merge conflicts between writers resolve to the higher
+  revision, so a model retrained on newer data supersedes its stale
+  ancestor instead of tying.  ``prune(keep_hardware=..., keep_spaces=...,
+  keep_buckets=...)`` GCs artifacts for fleet members that no longer exist.
 
 Schema (``format: repro.config_store``, version 1)::
 
@@ -181,8 +186,28 @@ class ConfigStore:
         return self._models.get(store_key(space, bucket, hardware))
 
     def put_model_dict(self, space: str, bucket: str, hardware: str,
-                       artifact: Dict) -> None:
-        self._models[store_key(space, bucket, hardware)] = artifact
+                       artifact: Dict,
+                       revision: Optional[int] = None,
+                       n_obs: Optional[int] = None) -> None:
+        """Store a model artifact under a MONOTONIC ``revision``.
+
+        A model retrained on more observations must supersede its stale
+        ancestor when two writers merge — runtime ties can't order
+        artifacts, so every stored artifact carries ``revision``
+        (defaults to ``existing revision + 1``, so retraining under the
+        same key always moves forward) and optionally ``n_obs`` (how many
+        observations trained it, informational).  ``_merge_from`` resolves
+        model conflicts by the higher revision.
+        """
+        key = store_key(space, bucket, hardware)
+        artifact = dict(artifact)
+        if revision is None:
+            prev = self._models.get(key, {})
+            revision = int(prev.get("revision", 0)) + 1
+        artifact["revision"] = int(revision)
+        if n_obs is not None:
+            artifact["n_obs"] = int(n_obs)
+        self._models[key] = artifact
         self._autosave()
 
     def load_model(self, space: str, bucket: str, hardware: str,
@@ -197,9 +222,12 @@ class ConfigStore:
 
     def save_model(self, space: str, bucket: str, hardware: str,
                    model: TPPCModel,
-                   model_space: Optional[TuningSpace] = None) -> None:
+                   model_space: Optional[TuningSpace] = None,
+                   revision: Optional[int] = None,
+                   n_obs: Optional[int] = None) -> None:
         self.put_model_dict(space, bucket, hardware,
-                            model_to_dict(model, model_space))
+                            model_to_dict(model, model_space),
+                            revision=revision, n_obs=n_obs)
 
     def nearest_model_key(self, space: str, bucket: str, hardware: str
                           ) -> Optional[str]:
@@ -251,7 +279,8 @@ class ConfigStore:
             "models": {k: m for k, m in sorted(self._models.items())},
         }
 
-    def save(self, path: Optional[str] = None, merge: bool = True) -> str:
+    def save(self, path: Optional[str] = None, merge: bool = True,
+             _post_merge=None) -> str:
         """Locked read-merge-write, then atomic replace.
 
         Under the file lock, entries/models persisted by OTHER writers since
@@ -259,6 +288,9 @@ class ConfigStore:
         concurrent tuner processes sharing one store file never clobber each
         other's keys; ``merge=False`` restores plain last-writer-wins
         overwrite semantics (e.g. to intentionally reset a store).
+        ``_post_merge`` (internal) runs after the merge and before the
+        write — ``prune`` uses it to re-apply its filter so the on-disk
+        copy of a pruned key is not immediately re-adopted.
         """
         path = path if path is not None else self.path
         if path is None:
@@ -267,6 +299,8 @@ class ConfigStore:
             if merge and os.path.exists(path):
                 with open(path) as f:
                     self._merge_from(json.load(f))
+            if _post_merge is not None:
+                _post_merge()
             d = os.path.dirname(os.path.abspath(path)) or "."
             fd, tmp = tempfile.mkstemp(prefix=".config_store.", dir=d)
             try:
@@ -284,8 +318,10 @@ class ConfigStore:
 
         Unknown keys are adopted; a tuned-config conflict resolves to the
         better (lower) runtime — the fleet semantics: whoever found the
-        faster configuration for a key wins; our own models win conflicts
-        (artifacts for one key are interchangeable retrainings).
+        faster configuration for a key wins.  A model conflict resolves to
+        the HIGHER ``revision`` (a model retrained on more observations
+        supersedes its stale ancestor; runtimes can't order artifacts);
+        ties — including legacy revision-less artifacts — keep ours.
         """
         if d.get("format") != FORMAT or d.get("version") != VERSION:
             raise ValueError(
@@ -297,7 +333,51 @@ class ConfigStore:
             if mine is None or other.runtime < mine.runtime:
                 self._entries[k] = other
         for k, m in d.get("models", {}).items():
-            self._models.setdefault(k, m)
+            mine = self._models.get(k)
+            if mine is None or int(m.get("revision", 0)) \
+                    > int(mine.get("revision", 0)):
+                self._models[k] = m
+
+    def prune(self, keep_hardware=None, keep_spaces=None,
+              keep_buckets=None) -> int:
+        """GC entries and model artifacts for retired fleet members.
+
+        Each ``keep_*`` is an iterable of values to KEEP for that key
+        field (``None``: no constraint on that field); anything failing
+        any given constraint is dropped.  Returns the number of artifacts
+        (entries + models) removed; autosaves when bound to a path.
+
+            store.prune(keep_hardware={"tpu_v5e"})   # tpu_v4 left the fleet
+            store.prune(keep_spaces={"gemm"}, keep_buckets={"2048"})
+        """
+        keep_hardware = set(keep_hardware) if keep_hardware is not None \
+            else None
+        keep_spaces = set(keep_spaces) if keep_spaces is not None else None
+        keep_buckets = set(keep_buckets) if keep_buckets is not None \
+            else None
+
+        def drop(key: str) -> bool:
+            s, b, h = key.split(_SEP)
+            return ((keep_spaces is not None and s not in keep_spaces)
+                    or (keep_buckets is not None and b not in keep_buckets)
+                    or (keep_hardware is not None and h not in keep_hardware))
+
+        def apply() -> int:
+            doomed_e = [k for k in self._entries if drop(k)]
+            doomed_m = [k for k in self._models if drop(k)]
+            for k in doomed_e:
+                del self._entries[k]
+            for k in doomed_m:
+                del self._models[k]
+            return len(doomed_e) + len(doomed_m)
+
+        removed = apply()
+        if removed and self.path is not None and self.autosave:
+            # the on-disk copy still holds the pruned keys; a plain merging
+            # save would adopt them straight back, so re-apply the filter
+            # after the merge, inside the lock
+            self.save(_post_merge=apply)
+        return removed
 
     def load(self, path: str) -> "ConfigStore":
         with open(path) as f:
