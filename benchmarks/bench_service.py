@@ -1,0 +1,383 @@
+"""Tuning-as-a-service benchmark: multi-tenant daemon vs single-job fleet.
+
+Four experiments against a live ``TuningDaemon`` (real localhost socket,
+JSON-lines protocol) over the deterministic virtual worker pool, so every
+trial count and worker-second is bit-reproducible:
+
+1. **Multi-tenant amortization** — ≥ 8 tenants share one daemon over
+   2 kernels × 2 hardware keys: 4 *cold* tenants tune distinct keys
+   concurrently, then 4 *repeat* tenants ask for the same keys.  Gates:
+   every repeat resolves store-only with ZERO trials, and the daemon's
+   fleet utilization (busy worker-seconds / (makespan × workers)) under
+   the mixed tenant load stays within ``--max-util-ratio`` (1.3×) of a
+   single ``FleetTuner`` run given the same four cold jobs directly.
+
+2. **Budget enforcement** — a tenant with a near-zero worker-seconds
+   budget overspends on its first job; its queued work is parked, its
+   next submit bounces with ``budget_exhausted``, and a solvent tenant
+   sharing the daemon still completes its full budget, unaffected.
+
+3. **Serve-path routing** — an ``OnlineAutotuner`` on the synthetic
+   serving backend with ``service=`` set routes its drift retune through
+   the daemon (zero live trials on the engine) and adopts the result
+   into its local store; pointed at a dead port it falls back to
+   in-process live tuning.
+
+4. **Drain** — ``shutdown(drain=True)`` mid-tuning: in-flight trials are
+   collected and billed, the unfinished request resolves ``cancelled``
+   with partial progress, and the daemon exits cleanly.
+
+Writes ``BENCH_service.json``; exits non-zero when a target is violated.
+
+    PYTHONPATH=src python -m benchmarks.bench_service [--smoke]
+        [--out BENCH_service.json] [--max-util-ratio 1.3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.fleet import FleetTuner, VirtualWorkerPool, job_from_registry
+from repro.service import ServiceClient, ShardedConfigStore, TuningDaemon
+from repro.service.client import ServiceError
+from repro.service.tenants import TenantManager
+
+SCHEMA = "repro.bench_service"
+VERSION = 1
+
+KERNELS = (("matmul", "2048"), ("transpose", "8192"))
+HW = ("tpu_v4", "tpu_v5e")
+WORKERS = 4
+
+
+def _daemon(root: str, budget: int, **kw) -> TuningDaemon:
+    d = TuningDaemon(VirtualWorkerPool(workers=WORKERS),
+                     ShardedConfigStore(os.path.join(root, "corpus"),
+                                        n_shards=4),
+                     default_trial_budget=budget, in_flight=WORKERS, **kw)
+    d.start()
+    return d
+
+
+def run_multi_tenant(root: str, budget: int, seed: int,
+                     max_util_ratio: float) -> Dict:
+    """8 tenants, 4 keys: cold wave tunes, repeat wave pays zero trials."""
+    keys = [(k, inp, hw) for k, inp in KERNELS for hw in HW]
+    d = _daemon(root, budget)
+    try:
+        with ServiceClient(d.address) as c:
+            cold = {}
+            for i, (k, inp, hw) in enumerate(keys):
+                r = c.submit_kernel(f"cold-{i}", k, hw, input=inp,
+                                    budget=budget, seed=seed)
+                cold[r["request_id"]] = (f"cold-{i}", k, inp, hw)
+            cold_results = {rid: c.result(rid, timeout=300)
+                            for rid in cold}
+            fleet = c.stats()["fleet"]
+            repeat_results = []
+            for i, (k, inp, hw) in enumerate(keys):
+                r = c.submit_kernel(f"repeat-{i}", k, hw, input=inp,
+                                    budget=budget, seed=seed)
+                repeat_results.append(r)
+            stats = c.stats()
+            c.shutdown(drain=True)
+        d.wait(timeout=120)
+    finally:
+        d.pool.close()
+
+    service_util = fleet["utilization"]
+    # baseline: the same four cold jobs handed straight to one FleetTuner
+    base_jobs = [job_from_registry(k, inp, hw, budget=budget, seed=seed)
+                 for k, inp, hw in keys]
+    base_store = ShardedConfigStore(os.path.join(root, "base_corpus"),
+                                    n_shards=4)
+    base_pool = VirtualWorkerPool(workers=WORKERS)
+    base_rep = FleetTuner(base_jobs, base_pool, store=base_store,
+                          in_flight=WORKERS).run()
+    base_util = base_rep.busy / max(base_rep.elapsed * WORKERS, 1e-12)
+    util_ratio = base_util / max(service_util, 1e-12)
+
+    cold_trials = [r["trials"] for r in cold_results.values()]
+    repeat_trials = [r["trials"] for r in repeat_results]
+    # per-key provenance: the daemon admits jobs as they arrive, so later
+    # tenants can warm-start off earlier tenants' published artifacts —
+    # a batch run() starts everything cold.  Informational, not a gate.
+    base_by_key = {(r.job.split("/")[0], r.bucket, r.hardware): r
+                   for r in base_rep.results}
+    per_key = [
+        {"key": [k, inp, hw],
+         "service_runtime": cold_results[rid]["runtime"],
+         "service_searcher": cold_results[rid]["searcher"],
+         "service_warm_started": cold_results[rid]["warm_started"],
+         "baseline_runtime": base_by_key[(k, inp, hw)].best_runtime}
+        for rid, (_, k, inp, hw) in cold.items()]
+    return {
+        "tenants": 2 * len(keys),
+        "keys": [list(k) for k in keys],
+        "budget_per_job": budget,
+        "cold_trials": cold_trials,
+        "repeat_trials": repeat_trials,
+        "all_cold_tuned": all(t == budget for t in cold_trials),
+        "all_repeats_zero_trials": all(t == 0 for t in repeat_trials),
+        "repeat_sources": [r["source"] for r in repeat_results],
+        "service_utilization": service_util,
+        "baseline_utilization": base_util,
+        "utilization_ratio": util_ratio,
+        "meets_utilization_target": util_ratio <= max_util_ratio,
+        "per_key": per_key,
+        "store_entries": stats["store_entries"],
+        "tenant_ledger": stats["tenants"],
+        "fleet_busy_s": fleet["busy_s"],
+        "fleet_elapsed_s": fleet["elapsed_s"],
+    }
+
+
+def run_budgets(root: str, budget: int, seed: int) -> Dict:
+    """One over-spender, one solvent tenant, one shared daemon."""
+    d = _daemon(root, budget,
+                tenants=TenantManager(max_active_per_tenant=1))
+    try:
+        with ServiceClient(d.address) as c:
+            spend = c.submit_kernel("spender", "matmul", "tpu_v4",
+                                    input="2048", budget=budget, seed=seed,
+                                    tenant_budget_s=1e-7)
+            # second request races the first job's completion: it either
+            # queues (and must then PARK once the tenant is exhausted) or
+            # bounces at submit with budget_exhausted — both are the
+            # enforcement the service promises
+            try:
+                queued = c.submit_kernel("spender", "transpose", "tpu_v4",
+                                         input="8192", budget=budget,
+                                         seed=seed)
+                second_outcome = "queued"
+            except ServiceError as exc:
+                queued, second_outcome = None, exc.code
+            solvent = c.submit_kernel("bystander", "conv2d", "tpu_v5e",
+                                      input="4096", budget=budget,
+                                      seed=seed)
+            first = c.result(spend["request_id"], timeout=300)
+            other = c.result(solvent["request_id"], timeout=300)
+            if queued is not None:
+                for _ in range(200):
+                    second_outcome = c.status(queued["request_id"])["state"]
+                    if second_outcome == "parked":
+                        break
+                    time.sleep(0.02)
+            # the exhausted tenant's next submit must bounce, always
+            try:
+                c.submit_kernel("spender", "matmul", "tpu_v4",
+                                input="2048", budget=budget, seed=seed)
+                rejected_code = None
+            except ServiceError as exc:
+                rejected_code = exc.code
+            ledger = c.stats()["tenants"]
+            c.shutdown(drain=True)
+        d.wait(timeout=120)
+    finally:
+        d.pool.close()
+    return {
+        "budget_s": 1e-7,
+        "spender_first_job_trials": first["trials"],
+        "spender_spent_s": ledger["spender"]["spent_s"],
+        "spender_exhausted": ledger["spender"]["exhausted"],
+        "second_request_outcome": second_outcome,
+        "resubmit_rejected_code": rejected_code,
+        "bystander_trials": other["trials"],
+        "bystander_unaffected": other["trials"] == budget
+        and not ledger["bystander"]["exhausted"],
+        "enforced": (ledger["spender"]["exhausted"]
+                     and rejected_code == "budget_exhausted"
+                     and second_outcome in ("parked", "budget_exhausted")),
+    }
+
+
+def run_serve_routing(root: str, seed: int) -> Dict:
+    """OnlineAutotuner drift retune: via the daemon, then the fallback."""
+    from repro.core.hwspec import get as hwget
+    from repro.serve.autotune import (OnlineAutotuner, ServeWorkloadStats,
+                                      SyntheticServeBackend, serve_space)
+    from repro.serve.engine import Request
+    from repro.tuning import ConfigStore
+
+    hw = hwget("tpu_v4")
+    stats = ServeWorkloadStats()
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i, prompt=rng.integers(1, 100, size=20),
+                    max_new_tokens=8) for i in range(8)]
+
+    def tick(service, timeout=30.0):
+        backend = SyntheticServeBackend(hw, stats, seed=seed)
+        tuner = OnlineAutotuner(
+            backend, store=ConfigStore(), space=serve_space(), hw=hw,
+            stats=stats, hardware_name="tpu_v4", max_live_trials=6,
+            service=service, service_timeout=timeout)
+        _, rep = tuner.serve(reqs)
+        return backend, rep
+
+    d = _daemon(root, budget=6)
+    try:
+        backend, rep = tick(f"127.0.0.1:{d.port}")
+        with ServiceClient(d.address) as c:
+            c.shutdown(drain=True)
+        d.wait(timeout=120)
+    finally:
+        d.pool.close()
+    fb_backend, fb_rep = tick("127.0.0.1:1", timeout=2.0)
+    return {
+        "via_service": rep.via_service,
+        "engine_measure_calls_via_service": backend.measure_calls,
+        "service_config": rep.config,
+        "fallback_via_service": fb_rep.via_service,
+        "fallback_live_trials": fb_rep.live_trials,
+        "routed_with_zero_live_trials": rep.via_service
+        and backend.measure_calls == 0,
+        "fell_back_in_process": (not fb_rep.via_service
+                                 and fb_rep.live_trials > 0
+                                 and fb_backend.measure_calls
+                                 == fb_rep.live_trials),
+    }
+
+
+def run_drain(root: str, seed: int) -> Dict:
+    """Shutdown mid-tuning: partial progress collected, clean exit."""
+    big_budget = 200
+    d = _daemon(root, big_budget)
+    try:
+        with ServiceClient(d.address) as c:
+            r = c.submit_kernel("t", "matmul", "tpu_v4", input="2048",
+                                budget=big_budget, seed=seed,
+                                searcher="random")
+            c.shutdown(drain=True)
+        clean = d.wait(timeout=120)
+        rec = d._records[r["request_id"]]
+    finally:
+        d.pool.close()
+    results = d.final_report.results if d.final_report else []
+    return {
+        "budget": big_budget,
+        "clean_exit": clean,
+        "request_state": rec.state,
+        "partial_trials": rec.trials,
+        "billed_s": rec.spent_s,
+        "drained": (clean and rec.state in ("cancelled", "done")
+                    and rec.trials < big_budget
+                    and (rec.trials == 0 or rec.spent_s > 0.0)
+                    and all(jr.cancelled or jr.trials == big_budget
+                            for jr in results)),
+    }
+
+
+def run_benchmark(budget: int, seed: int, max_util_ratio: float) -> Dict:
+    with tempfile.TemporaryDirectory() as td:
+        multi = run_multi_tenant(os.path.join(td, "m"), budget, seed,
+                                 max_util_ratio)
+        budgets = run_budgets(os.path.join(td, "b"), budget, seed)
+        serve = run_serve_routing(os.path.join(td, "s"), seed)
+        drain = run_drain(os.path.join(td, "d"), seed)
+    summary = {
+        "tenants": multi["tenants"],
+        "all_repeats_zero_trials": multi["all_repeats_zero_trials"],
+        "utilization_ratio": multi["utilization_ratio"],
+        "meets_utilization_target": multi["meets_utilization_target"],
+        "budgets_enforced": budgets["enforced"],
+        "bystander_unaffected": budgets["bystander_unaffected"],
+        "serve_routed_zero_live": serve["routed_with_zero_live_trials"],
+        "serve_fallback_ok": serve["fell_back_in_process"],
+        "drain_ok": drain["drained"],
+    }
+    violations: List[str] = []
+    if not multi["all_cold_tuned"]:
+        violations.append("a cold tenant did not receive its full "
+                          "trial budget")
+    if not summary["all_repeats_zero_trials"]:
+        violations.append(
+            f"repeat-key tenants paid live trials: "
+            f"{multi['repeat_trials']}")
+    if not summary["meets_utilization_target"]:
+        violations.append(
+            f"service fleet utilization degraded "
+            f"{summary['utilization_ratio']:.2f}x vs the single-job "
+            f"fleet baseline (> {max_util_ratio}x)")
+    if not summary["budgets_enforced"]:
+        violations.append("tenant worker-seconds budget was not enforced "
+                          "(no reject/park)")
+    if not summary["bystander_unaffected"]:
+        violations.append("budget enforcement disturbed a solvent tenant")
+    if not summary["serve_routed_zero_live"]:
+        violations.append("OnlineAutotuner --service retune was not "
+                          "answered with zero live engine trials")
+    if not summary["serve_fallback_ok"]:
+        violations.append("OnlineAutotuner did not fall back in-process "
+                          "with the daemon unreachable")
+    if not summary["drain_ok"]:
+        violations.append("graceful drain failed (lost progress or "
+                          "unclean exit)")
+    return {
+        "schema": SCHEMA,
+        "version": VERSION,
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "host": {"python": platform.python_version(),
+                 "numpy": np.__version__,
+                 "machine": platform.machine()},
+        "workload": {"kernels": [list(k) for k in KERNELS],
+                     "hardware": list(HW), "workers": WORKERS,
+                     "budget_per_job": budget, "seed": seed},
+        "targets": {"max_util_ratio": max_util_ratio},
+        "multi_tenant": multi,
+        "budgets": budgets,
+        "serve_routing": serve,
+        "drain": drain,
+        "summary": summary,
+        "violations": violations,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="BENCH_service.json")
+    ap.add_argument("--budget", type=int, default=16,
+                    help="per-request trial budget for the cold tenants")
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--max-util-ratio", type=float, default=1.3,
+                    help="max allowed baseline/service utilization ratio")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: smaller trial budgets")
+    args = ap.parse_args(argv)
+
+    budget = 10 if args.smoke else args.budget
+    result = run_benchmark(budget, args.seed, args.max_util_ratio)
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    s = result["summary"]
+    print(f"wrote {args.out}")
+    print(f"{s['tenants']} tenants over {len(result['multi_tenant']['keys'])}"
+          f" keys: repeats zero-trial "
+          f"{'PASS' if s['all_repeats_zero_trials'] else 'FAIL'}, "
+          f"utilization ratio {s['utilization_ratio']:.3f}x "
+          f"(target <= {args.max_util_ratio}x: "
+          f"{'PASS' if s['meets_utilization_target'] else 'FAIL'})")
+    print(f"budgets: enforced "
+          f"{'PASS' if s['budgets_enforced'] else 'FAIL'}, bystander "
+          f"unaffected {'PASS' if s['bystander_unaffected'] else 'FAIL'}")
+    print(f"serve routing: via-service zero-live "
+          f"{'PASS' if s['serve_routed_zero_live'] else 'FAIL'}, "
+          f"fallback {'PASS' if s['serve_fallback_ok'] else 'FAIL'}")
+    print(f"graceful drain: {'PASS' if s['drain_ok'] else 'FAIL'}")
+    if result["violations"]:
+        print("TARGETS VIOLATED:\n  " + "\n  ".join(result["violations"]),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

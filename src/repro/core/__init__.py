@@ -9,8 +9,9 @@ Public API:
     ProfileBasedSearcher (+ baselines)    — Algorithm 1
     autotune / train_model / run_search_experiment
 """
-from repro.core.account import (Candidate, EvalAccount, Evaluator,
-                                Observation, ProfilingUnsupported, Ticket)
+from repro.core.account import (AccountSnapshot, Candidate, EvalAccount,
+                                Evaluator, Observation,
+                                ProfilingUnsupported, Ticket)
 from repro.core.bottleneck import analyze
 from repro.core.counters import PC_OPS, PC_STRESS, CounterSet
 from repro.core.evaluate import (CostModelEvaluator, FunctionEvaluator,
@@ -45,7 +46,8 @@ __all__ = [
     "run_search_experiment", "steps_to_well_performing",
     "train_model", "train_model_deliberate", "deliberate_training_sample",
     "powers_of_two", "predicted_runtimes", "prediction_matrix",
-    "BasinHoppingSearcher", "Candidate", "Config", "CostModelEvaluator",
+    "AccountSnapshot", "BasinHoppingSearcher", "Candidate", "Config",
+    "CostModelEvaluator",
     "CounterSet", "DecisionTreeModel", "EvalAccount", "Evaluator",
     "ExactCounterModel", "FunctionEvaluator", "HardwareSpec", "Observation",
     "PC_OPS", "PC_STRESS", "PORTABILITY_SET", "PRODUCTION",

@@ -77,6 +77,28 @@ class Ticket:
     candidate: Candidate
 
 
+@dataclasses.dataclass(frozen=True)
+class AccountSnapshot:
+    """Point-in-time (or delta) view of an ``EvalAccount``'s meters.
+
+    ``EvalAccount.snapshot()`` freezes the current counters;
+    ``EvalAccount.diff(since)`` subtracts an earlier snapshot, giving the
+    steps / worker-seconds / abandoned cost accrued *between* the two — the
+    metering primitive a multi-tenant scheduler charges budgets with
+    (abandoned cost is part of ``busy``, so discarded attempts are billed
+    too).  ``best_runtime``/``best_index`` are not deltas: they reflect the
+    account's state at snapshot time.
+    """
+
+    steps: int
+    elapsed: float
+    busy: float              # worker-seconds (includes abandoned)
+    abandoned: float         # worker-seconds of discarded attempts
+    abandoned_count: int
+    best_runtime: float
+    best_index: Optional[int]
+
+
 class EvalAccount:
     """Steps / elapsed / trace / best bookkeeping shared by all evaluators.
 
@@ -128,6 +150,34 @@ class EvalAccount:
         self.busy += cost
         self._note(idx, runtime)
         self.trace.append((self.steps, float(finished_at), runtime))
+
+    def snapshot(self) -> AccountSnapshot:
+        """Freeze the current meters (cheap; no trace/history copies)."""
+        return AccountSnapshot(
+            steps=self.steps, elapsed=self.elapsed, busy=self.busy,
+            abandoned=self.abandoned, abandoned_count=self.abandoned_count,
+            best_runtime=self.best_runtime, best_index=self.best_index)
+
+    def diff(self, since: Optional[AccountSnapshot] = None
+             ) -> AccountSnapshot:
+        """Meters accrued since ``since`` (``None``: since creation).
+
+        Counter fields (``steps``, ``busy``, ``abandoned``, ...) subtract;
+        ``elapsed`` is the frontier advance; ``best_runtime``/``best_index``
+        are the CURRENT values, not deltas.  This is how a tenant manager
+        meters per-request worker-seconds off a live job account without
+        monkeypatching the recording hooks — and because abandoned cost
+        accrues into ``busy``, discarded attempts are charged too.
+        """
+        if since is None:
+            return self.snapshot()
+        return AccountSnapshot(
+            steps=self.steps - since.steps,
+            elapsed=self.elapsed - since.elapsed,
+            busy=self.busy - since.busy,
+            abandoned=self.abandoned - since.abandoned,
+            abandoned_count=self.abandoned_count - since.abandoned_count,
+            best_runtime=self.best_runtime, best_index=self.best_index)
 
     def record_abandoned(self, cost: float) -> None:
         """Work that was started and then discarded — a failed attempt

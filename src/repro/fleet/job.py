@@ -115,6 +115,8 @@ class JobResult:
     abandoned_s: float = 0.0     # worker-seconds of discarded attempts
     known_bad: List[int] = dataclasses.field(default_factory=list)
     parked: bool = False         # scheduler parked it inside the well band
+    cancelled: bool = False      # cancelled mid-run (service/drain path):
+    #                              partial results, nothing published
 
     def trials_to_threshold(self, threshold: float) -> Optional[int]:
         """Completed trials until runtime <= threshold (None: never)."""

@@ -211,9 +211,13 @@ class FleetTuner:
                  known_bad_after: int = 2,
                  straggler_factor: Optional[float] = None,
                  park_factor: Optional[float] = None,
-                 in_flight_max: Optional[int] = None):
-        if not jobs:
-            raise ValueError("FleetTuner needs at least one job")
+                 in_flight_max: Optional[int] = None,
+                 allow_empty: bool = False,
+                 on_job_done=None):
+        if not jobs and not allow_empty:
+            raise ValueError("FleetTuner needs at least one job "
+                             "(allow_empty=True for a service fleet that "
+                             "injects jobs while running)")
         names = [j.name for j in jobs]
         if len(set(names)) != len(names):
             raise ValueError(f"job names must be unique, got {names}")
@@ -236,12 +240,19 @@ class FleetTuner:
         self.known_bad_after = int(known_bad_after)
         self.straggler_factor = straggler_factor
         self.park_factor = park_factor
+        self.on_job_done = on_job_done
         self._uid = 0
         self._states: List[_JobState] = []
+        self._by_name: Dict[str, _JobState] = {}
         self._inflight: Dict[int, _InFlight] = {}
         self._abandoned: Dict[int, _JobState] = {}
         self._pick_seq = 0
         self._max_attempt = 0
+        self._began = False
+        self._stopping = False
+        self._t_start = 0.0
+        self._elastic: Optional[ElasticInFlight] = None
+        self._limit = self.in_flight
 
     # -- per-job setup ---------------------------------------------------------
     def _start(self, js: _JobState) -> None:
@@ -520,34 +531,107 @@ class FleetTuner:
         return max(0.01, min(deadlines) - self.pool.elapsed() + 0.01)
 
     # -- the event loop --------------------------------------------------------
-    def run(self) -> FleetReport:
+    # ``run()`` is the one-shot form; a long-lived service instead drives
+    # ``begin()`` / ``step()`` / ``finish()`` itself so it can inject
+    # (``add_job``) and cancel (``cancel_job``) jobs between ticks.  The
+    # decomposition is behavior-preserving: ``run()`` is exactly
+    # begin + step-until-idle + finish.
+    def begin(self) -> None:
+        """Initialize a (possibly empty) scheduling session."""
         self._states = [_JobState(j) for j in self.jobs]
+        self._by_name = {js.job.name: js for js in self._states}
         for i, js in enumerate(self._states):
             js.last_pick = i      # initial tie-break: declaration order
         self._pick_seq = len(self._states)
         self._inflight = {}
         self._abandoned = {}
-        t_start = self.pool.elapsed()
-        elastic = None
+        self._t_start = self.pool.elapsed()
+        self._elastic = None
         if self.in_flight_max is not None:
-            elastic = ElasticInFlight(lo=self.in_flight,
-                                      hi=self.in_flight_max)
-        limit = self.in_flight
-        while True:
-            self._fill(limit)
-            if not self._inflight:
-                break     # nothing running and nothing schedulable
-            try:
-                res = self.pool.collect(timeout=self._collect_tick())
-            except queue.Empty:
-                self._check_stragglers(t_start)
-                continue
-            self._handle(res, t_start)
-            if elastic is not None:
-                if res.error is None:
-                    elastic.observe(res.cost)
-                limit = elastic.target(self._alive())
-            self._check_stragglers(t_start)
+            self._elastic = ElasticInFlight(lo=self.in_flight,
+                                            hi=self.in_flight_max)
+        self._limit = self.in_flight
+        self._stopping = False
+        self._began = True
+
+    def add_job(self, job: TuningJob) -> None:
+        """Inject a job — before ``begin()`` or into a RUNNING fleet.
+
+        Mid-run injection is the service path: the new job competes for
+        lanes under the same gain-priority scheduler from the next
+        ``step()`` (cold jobs rank highest, so a fresh tenant is served
+        promptly without preempting in-flight work).
+        """
+        if any(j.name == job.name for j in self.jobs):
+            raise ValueError(f"duplicate job name {job.name!r}")
+        self.jobs.append(job)
+        if self._began:
+            js = _JobState(job)
+            js.last_pick = self._next_pick()
+            self._states.append(js)
+            self._by_name[job.name] = js
+
+    def cancel_job(self, name: str) -> bool:
+        """Cancel a job mid-run: queued retries are dropped, in-flight
+        tests are reclassified as abandoned (their lane-seconds are still
+        charged when they come back), and the job resolves immediately to
+        a partial ``JobResult`` with ``cancelled=True``.  Nothing is
+        published to the store.  Returns False if unknown or already done.
+        """
+        js = self._by_name.get(name)
+        if js is None or js.done:
+            return False
+        js.retry_queue.clear()
+        for uid, info in list(self._inflight.items()):
+            if info.js is js:
+                del self._inflight[uid]
+                self._abandoned[uid] = js
+        js.pending = 0
+        self._resolve_cancelled(js)
+        return True
+
+    def stop(self) -> None:
+        """Graceful drain: stop scheduling NEW tests; in-flight tests keep
+        running and are collected/accounted by the remaining ``step()``s
+        (the shared shutdown path of the fleet CLI and the daemon)."""
+        self._stopping = True
+
+    @property
+    def stopping(self) -> bool:
+        return self._stopping
+
+    def step(self, max_wait: Optional[float] = None) -> bool:
+        """One scheduling tick: saturate the pool, collect one completion,
+        process stragglers.  Returns False when the fleet is idle (nothing
+        in flight and nothing schedulable) — the moment a service waits for
+        new requests and ``run()`` finishes.  ``max_wait`` bounds how long
+        the tick may block on the pool (None: until the next straggler
+        deadline, or indefinitely), so a driving loop stays responsive to
+        injected jobs and shutdown signals.
+        """
+        if not self._stopping:
+            self._fill(self._limit)
+        if not self._inflight:
+            return False
+        tick = self._collect_tick()
+        if max_wait is not None:
+            tick = max_wait if tick is None else min(tick, max_wait)
+        try:
+            res = self.pool.collect(timeout=tick)
+        except queue.Empty:
+            self._check_stragglers(self._t_start)
+            return True
+        self._handle(res, self._t_start)
+        if self._elastic is not None:
+            if res.error is None:
+                self._elastic.observe(res.cost)
+            self._limit = self._elastic.target(self._alive())
+        self._check_stragglers(self._t_start)
+        return True
+
+    def finish(self) -> FleetReport:
+        """Drain straggler debts, finalize every remaining job, and build
+        the report for everything since ``begin()``."""
         # drain abandoned stragglers still on the pool so their burned
         # lane-seconds are charged (and a reused pool starts clean);
         # a straggler that never returns (hung thread) is skipped
@@ -570,7 +654,7 @@ class FleetTuner:
         results = [js.result for js in self._states]
         return FleetReport(
             results=results,
-            elapsed=self.pool.elapsed() - t_start,
+            elapsed=self.pool.elapsed() - self._t_start,
             busy=float(sum(r.busy for r in results)),
             in_flight=self.in_flight,
             workers=self.pool.workers,
@@ -581,6 +665,32 @@ class FleetTuner:
             parked=int(sum(1 for r in results if r.parked)),
             max_retries_used=self._max_attempt,
             in_flight_max=self.in_flight_max)
+
+    def run(self) -> FleetReport:
+        self.begin()
+        while self.step():
+            pass
+        return self.finish()
+
+    # -- introspection (the service's metering hooks) --------------------------
+    def job_account(self, name: str) -> Optional[EvalAccount]:
+        """The LIVE account of one job (None: unknown) — what a tenant
+        manager snapshots/diffs to meter per-request worker-seconds."""
+        js = self._by_name.get(name)
+        return js.account if js is not None else None
+
+    def progress(self) -> Dict[str, float]:
+        """Fleet-wide meters since ``begin()`` (cheap, callable mid-run)."""
+        busy = float(sum(js.account.busy for js in self._states))
+        elapsed = self.pool.elapsed() - self._t_start
+        return {
+            "jobs": len(self._states),
+            "jobs_done": sum(1 for js in self._states if js.done),
+            "in_flight": len(self._inflight),
+            "busy_s": busy,
+            "elapsed_s": elapsed,
+            "utilization": busy / max(elapsed * self.pool.workers, 1e-12),
+        }
 
     # -- parking ---------------------------------------------------------------
     def _maybe_park(self, js: _JobState) -> None:
@@ -625,11 +735,39 @@ class FleetTuner:
                           f"predicts {js.predicted_best * 1e3:.3f}ms)")
 
     # -- completion ------------------------------------------------------------
+    def _resolve_cancelled(self, js: _JobState) -> None:
+        """Resolve a job to a partial, store-untouched ``cancelled`` result
+        (explicit ``cancel_job`` or a graceful drain that caught it before
+        it could run)."""
+        acct = js.account
+        js.done = True
+        js.result = JobResult(
+            job=js.job.name, bucket=js.job.bucket, hardware=js.hw_key,
+            searcher=js.searcher_name, warm_started=js.warm_started,
+            best_index=acct.best_index,
+            best_config=dict(js.job.space[acct.best_index])
+            if acct.best_index is not None else {},
+            best_runtime=acct.best_runtime, trials=acct.steps,
+            elapsed=acct.elapsed, busy=acct.busy,
+            trace=list(acct.trace), history=list(acct.history),
+            failures=js.failures, abandoned_s=acct.abandoned,
+            known_bad=list(js.known_bad), parked=js.was_parked,
+            cancelled=True)
+        if self.verbose:
+            print(f"[fleet] {js.job.name}: cancelled after "
+                  f"{acct.steps} trials")
+        if self.on_job_done is not None:
+            self.on_job_done(js.result)
+
     def _finalize(self, js: _JobState) -> None:
         t0 = self.pool.elapsed()
         job, acct = js.job, js.account
         if acct.best_index is None and js.failures == 0 \
                 and acct.steps == 0:
+            if self._stopping:
+                # graceful drain caught the job before its first test
+                self._resolve_cancelled(js)
+                return
             raise RuntimeError(f"job {job.name} made no empirical tests "
                                "(budget <= 0 or empty space?)")
         js.done = True
@@ -644,7 +782,14 @@ class FleetTuner:
             trace=list(acct.trace), history=list(acct.history),
             failures=js.failures, abandoned_s=acct.abandoned,
             known_bad=list(js.known_bad), parked=js.was_parked)
+        if self._stopping and not js.was_parked \
+                and js.submitted < job.budget \
+                and not (js.searcher is not None and js.searcher.done):
+            # drained mid-search: partial result, flagged as such
+            js.result.cancelled = True
         if self.store is None or acct.best_index is None:
+            if self.on_job_done is not None:
+                self.on_job_done(js.result)
             return
         # batch the entry + model artifact into ONE locked read-merge-write
         # (each autosave re-parses the whole file — at fleet scale two per
@@ -682,3 +827,5 @@ class FleetTuner:
             print(f"[fleet] {job.name}: best {acct.best_runtime*1e3:.3f}ms "
                   f"in {acct.steps} trials "
                   f"({'warm' if js.warm_started else 'cold'})")
+        if self.on_job_done is not None:
+            self.on_job_done(js.result)

@@ -107,26 +107,37 @@ def main(argv=None) -> int:
     store = ConfigStore(args.store)
     pool = build_pool(args.backend, args.workers, args.devices_per_worker)
     t0 = time.time()
+    tuner = FleetTuner(jobs, pool, store=store,
+                       in_flight=args.in_flight,
+                       in_flight_max=args.in_flight_max,
+                       retries=args.retries,
+                       known_bad_after=args.known_bad_after,
+                       straggler_factor=args.straggler_factor,
+                       park_factor=args.park_factor,
+                       publish_models=not args.no_publish,
+                       verbose=args.verbose)
+    # SIGINT/SIGTERM drain: stop filling, collect what is in flight,
+    # publish/report the completed jobs (same contract as the daemon)
+    from repro.launch.signals import install_drain_handlers
+
+    draining = install_drain_handlers(tuner.stop)
     try:
-        report = FleetTuner(jobs, pool, store=store,
-                            in_flight=args.in_flight,
-                            in_flight_max=args.in_flight_max,
-                            retries=args.retries,
-                            known_bad_after=args.known_bad_after,
-                            straggler_factor=args.straggler_factor,
-                            park_factor=args.park_factor,
-                            publish_models=not args.no_publish,
-                            verbose=args.verbose).run()
+        tuner.begin()
+        while tuner.step(max_wait=0.5):
+            pass
+        report = tuner.finish()
     finally:
         pool.close()
     wall = time.time() - t0
 
     print(f"[fleet] {len(jobs)} jobs on {args.backend} backend "
-          f"({pool.workers} workers, in_flight={report.in_flight})")
+          f"({pool.workers} workers, in_flight={report.in_flight})"
+          + ("  [DRAINED EARLY]" if draining() else ""))
     for r in sorted(report.results, key=lambda r: r.job):
+        mark = " [cancelled]" if r.cancelled else ""
         print(f"  {r.job:40s} {'warm' if r.warm_started else 'cold':4s} "
               f"{r.trials:3d} trials  best {r.best_runtime*1e3:9.3f}ms  "
-              f"{r.best_config}")
+              f"{r.best_config}{mark}")
     print(f"[fleet] pool clock {report.elapsed:.3f}s for "
           f"{report.busy:.3f} worker-seconds of measurement "
           f"(x{report.busy / max(report.elapsed, 1e-12):.2f} concurrency); "
@@ -152,13 +163,14 @@ def main(argv=None) -> int:
                 "known_bad": report.known_bad,
                 "abandoned_s": report.abandoned,
                 "parked": report.parked,
+                "drained": draining(),
                 "jobs": [{
                     "job": r.job, "bucket": r.bucket, "hardware": r.hardware,
                     "searcher": r.searcher, "warm_started": r.warm_started,
                     "trials": r.trials, "best_runtime_s": r.best_runtime,
                     "best_config": r.best_config,
                     "failures": r.failures, "known_bad": r.known_bad,
-                    "parked": r.parked,
+                    "parked": r.parked, "cancelled": r.cancelled,
                 } for r in report.results],
             }, f, indent=2)
         print(f"[fleet] -> {args.out}")

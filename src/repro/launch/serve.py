@@ -43,6 +43,12 @@ def main():
                          "in-memory)")
     ap.add_argument("--live-trials", type=int, default=8,
                     help="max live trials per drift event for --autotune")
+    ap.add_argument("--service", default=None,
+                    help="tuning-daemon address (host:port) for --autotune: "
+                         "drift retunes route through the shared tuning "
+                         "service and fall back in-process when it is "
+                         "unreachable (start one with "
+                         "python -m repro.launch.daemon)")
     args = ap.parse_args()
 
     arch = (SMOKES if args.smoke else ARCHS)[args.arch]
@@ -71,14 +77,17 @@ def main():
             stats=stats_from_model(model),
             max_live_trials=args.live_trials,
             hardware_name=jax.default_backend(),
+            service=args.service,
         )
         t0 = time.time()
         out, rep = tuner.serve(reqs)
         dt = time.time() - t0
         n = sum(len(v) for v in out.values())
         if rep is not None:
-            print(f"[serve] bucket={rep.bucket} "
-                  f"{'reused stored config' if rep.reused else 'tuned live'} "
+            how = ("reused stored config" if rep.reused
+                   else "tuned via service" if rep.via_service
+                   else "tuned live")
+            print(f"[serve] bucket={rep.bucket} {how} "
                   f"(trials={rep.live_trials}) -> {rep.config}")
         print(f"[serve] {len(reqs)} requests, {n} tokens in {dt:.1f}s "
               f"({n/max(dt, 1e-9):.1f} tok/s)")

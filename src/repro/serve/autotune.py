@@ -332,6 +332,7 @@ class TickReport:
     live_trials: int
     config: Config
     history: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+    via_service: bool = False    # tuned remotely by the tuning daemon
 
 
 class OnlineAutotuner:
@@ -373,6 +374,9 @@ class OnlineAutotuner:
         model_kind: str = "tree",
         in_flight: int = 1,
         seed: int = 0,
+        service: Optional[Any] = None,
+        service_tenant: str = "serve",
+        service_timeout: float = 120.0,
     ):
         self.backend = backend
         self.store = store if store is not None else ConfigStore()
@@ -396,6 +400,16 @@ class OnlineAutotuner:
         self._models: Dict[str, Any] = {}
         self._active: Optional[StoreEntry] = None
         self.reports: List[TickReport] = []
+        # optional tuning-as-a-service routing: a daemon address
+        # ("host:port" / (host, port)) or a ready ServiceClient.  Drift
+        # retunes are tried through the daemon first (sharing its fleet,
+        # corpus and budgets) and fall back to in-process live trials
+        # whenever it is unreachable or refuses the request.
+        self.service = service
+        self.service_tenant = service_tenant
+        self.service_timeout = float(service_timeout)
+        self._service_client: Optional[Any] = None
+        self._via_service = False
 
     # -- portable model / ranking ---------------------------------------------
     def _session_for(self, bucket: Bucket) -> TuningSession:
@@ -444,14 +458,79 @@ class OnlineAutotuner:
         return order
 
     # -- tuning ----------------------------------------------------------------
+    def _tune_via_service(self, bucket: Bucket) -> Optional[StoreEntry]:
+        """Ask the tuning daemon to tune this bucket; ``None`` = fall back.
+
+        The submit describes the client's exact tuning problem (same
+        space name and parameter grid, the bucket's representative
+        shape, the workload-model constants), so the daemon's fleet
+        answers with a config valid here and publishes artifacts future
+        clients warm-start from.  Any transport or service refusal —
+        daemon down, admission denied, tenant budget exhausted, request
+        cancelled by a daemon drain — degrades to in-process tuning.
+        """
+        if self.service is None:
+            return None
+        from repro.service.client import ServiceClient, ServiceError
+        try:
+            if self._service_client is None:
+                self._service_client = self.service \
+                    if hasattr(self.service, "submit_serve") \
+                    else ServiceClient(self.service,
+                                       timeout=self.service_timeout)
+            client = self._service_client
+            plen, new = self.bucketer.rep_shape(bucket)
+            by_name = {p.name: list(p.values) for p in self.space.parameters}
+            # a hardware label outside the spec registry (e.g. a replica
+            # running on "cpu") ships its pricing spec's numbers so the
+            # daemon can still cost the space — the fleet's lane idiom
+            from repro.core import hwspec
+            try:
+                hwspec.get(self.hardware_name)
+                spec_payload = None
+            except KeyError:
+                spec_payload = dataclasses.asdict(self.hw)
+            resp = client.submit_serve(
+                tenant=self.service_tenant,
+                hardware=self.hardware_name,
+                bucket=bucket.key, bucket_shape=[plen, new],
+                batch_sizes=by_name["BATCH"], max_seqs=by_name["MAX_SEQ"],
+                space=self.space.name, calib_n=self.calib_n,
+                stats=dataclasses.asdict(self.stats),
+                budget=self.max_live_trials, seed=self.seed,
+                hardware_spec=spec_payload)
+            if resp["state"] == "done":     # store hit on the daemon side
+                res = resp
+            else:
+                res = client.result(resp["request_id"],
+                                    timeout=self.service_timeout)
+        except (ServiceError, TimeoutError, OSError):
+            self._service_client = None     # reconnect lazily next drift
+            return None
+        # adopt locally so subsequent drifts back to this bucket are pure
+        # local store hits (and survive daemon restarts)
+        return self.store.put(
+            self.space.name, bucket.key, self.hardware_name,
+            config=dict(res["config"]), runtime=float(res["runtime"]),
+            trials=int(res.get("trials", 0)),
+            meta={"source": res.get("source", "service"),
+                  "service": True, "bucket_shape": list(
+                      self.bucketer.rep_shape(bucket))})
+
     def ensure(self, bucket: Bucket, calib: Sequence[Request]
                ) -> Tuple[StoreEntry, int, bool]:
         """Return (entry, live_trials, reused) for ``bucket`` — store hit is
-        pure reuse (0 live trials); a miss tunes live and persists."""
+        pure reuse (0 live trials); a miss asks the tuning service (when
+        configured), and failing that tunes live and persists."""
+        self._via_service = False
         entry = self.store.get(self.space.name, bucket.key,
                                self.hardware_name)
         if entry is not None:
             return entry, 0, True
+        entry = self._tune_via_service(bucket)
+        if entry is not None:
+            self._via_service = True
+            return entry, 0, False
         _, calib_plen, calib_new = _tick_shape(calib)
         order = self.ranking(bucket, min_seq=calib_plen + calib_new)
         ev = FunctionEvaluator(
@@ -494,7 +573,8 @@ class OnlineAutotuner:
         outputs = self.backend.serve(self._active.config, requests)
         report = TickReport(bucket=dom_key, drift=drift, reused=reused,
                             live_trials=live, config=dict(self._active.config),
-                            history=history)
+                            history=history,
+                            via_service=drift and self._via_service)
         self.reports.append(report)
         return outputs, report
 

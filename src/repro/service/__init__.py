@@ -1,0 +1,40 @@
+"""``repro.service`` — tuning-as-a-service: the multi-tenant fleet daemon.
+
+The paper's economics argument is amortization: counter-trained TP→PC
+models pay for themselves when their cost is spread across hardware ports
+and input changes.  A long-lived shared service is that argument at
+deployment scale — every tenant's published model warm-starts the next
+tenant, and a recurring (kernel, input bucket, hardware) key is answered
+straight from the shared store with ZERO trials.
+
+* ``protocol``  — the JSON-lines wire protocol (``submit`` / ``status`` /
+  ``result`` / ``cancel`` / ``stats`` / ``shutdown``) with validation;
+* ``daemon``    — ``TuningDaemon``: a localhost socket server multiplexing
+  many tenants onto ONE elastic ``FleetTuner`` over one worker pool, with
+  graceful drain on shutdown;
+* ``tenants``   — admission control and per-tenant worker-seconds budget
+  metering (``EvalAccount.snapshot()``/``diff()``), least-spent-first
+  fairness so no tenant starves while a cold tenant burns budget;
+* ``shards``    — ``ShardedConfigStore``: one corpus hash-partitioned
+  across store files, so many daemons share it without lock convoys;
+* ``client``    — ``ServiceClient`` (blocking) and ``AsyncServiceClient``
+  (handle-based) speakers of the protocol.
+
+CLI: ``python -m repro.launch.daemon``; the serve path joins with
+``python -m repro.launch.serve --autotune --service HOST:PORT``.
+"""
+from repro.service.client import (AsyncServiceClient, PendingTuning,
+                                  ServiceClient, ServiceError,
+                                  ServiceUnavailable)
+from repro.service.daemon import RequestRecord, TuningDaemon
+from repro.service.protocol import (PROTOCOL, PROTOCOL_VERSION,
+                                    ProtocolError, validate_request)
+from repro.service.shards import ShardedConfigStore
+from repro.service.tenants import AdmissionError, TenantManager, TenantState
+
+__all__ = [
+    "AdmissionError", "AsyncServiceClient", "PROTOCOL", "PROTOCOL_VERSION",
+    "PendingTuning", "ProtocolError", "RequestRecord", "ServiceClient",
+    "ServiceError", "ServiceUnavailable", "ShardedConfigStore",
+    "TenantManager", "TenantState", "TuningDaemon", "validate_request",
+]

@@ -1,0 +1,248 @@
+"""Client side of the tuning service: blocking and handle-based callers.
+
+``ServiceClient`` owns one socket and speaks the JSON-lines protocol
+strictly request→response; it is thread-safe (a lock serializes the
+socket) and reconnects lazily, so a client object can outlive daemon
+restarts.  Failed responses raise ``ServiceError`` carrying the wire
+``code``; transport failures (daemon not running, connection refused,
+timeout) raise ``ServiceUnavailable`` — callers like the serve path
+catch *that* to fall back to in-process tuning.
+
+``AsyncServiceClient`` layers fire-and-forget submits on top: every
+submit returns a ``PendingTuning`` handle whose ``result()`` blocks only
+when the answer is actually needed — the natural shape for a serving
+engine that wants tuning off its tick path.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+from repro.service import protocol as P
+
+
+class ServiceError(RuntimeError):
+    """The daemon refused a request; ``code`` is the wire error code."""
+
+    def __init__(self, message: str, code: str = P.E_INTERNAL,
+                 response: Optional[Dict[str, Any]] = None):
+        super().__init__(message)
+        self.code = code
+        self.response = response or {}
+
+
+class ServiceUnavailable(ServiceError):
+    """No daemon answered (refused / reset / timed out)."""
+
+    def __init__(self, message: str):
+        super().__init__(message, code="unavailable")
+
+
+def parse_address(address: Union[str, Tuple[str, int]]
+                  ) -> Tuple[str, int]:
+    """``"host:port"`` / ``":port"`` / ``(host, port)`` → ``(host, port)``."""
+    if isinstance(address, tuple):
+        return address[0], int(address[1])
+    host, _, port = address.rpartition(":")
+    if not port.isdigit():
+        raise ValueError(f"bad service address {address!r} "
+                         f"(expected host:port)")
+    return host or "127.0.0.1", int(port)
+
+
+class ServiceClient:
+    """Blocking JSON-lines client for one tuning daemon."""
+
+    def __init__(self, address: Union[str, Tuple[str, int]],
+                 timeout: float = 30.0):
+        self.host, self.port = parse_address(address)
+        self.timeout = float(timeout)
+        self._lock = threading.Lock()
+        self._sock: Optional[socket.socket] = None
+        self._rfile = None
+
+    # -- transport -------------------------------------------------------------
+    def _connect(self) -> None:
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.timeout)
+        self._sock = sock
+        self._rfile = sock.makefile("rb")
+
+    def _reset(self) -> None:
+        if self._rfile is not None:
+            try:
+                self._rfile.close()
+            except OSError:
+                pass
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+        self._sock = None
+        self._rfile = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._reset()
+
+    def __enter__(self) -> "ServiceClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def call(self, obj: Dict[str, Any]) -> Dict[str, Any]:
+        """One raw request→response round trip (no ok-checking)."""
+        with self._lock:
+            try:
+                if self._sock is None:
+                    self._connect()
+                self._sock.sendall(P.encode(obj))
+                line = P.read_line(self._rfile)
+            except (OSError, P.ProtocolError) as exc:
+                self._reset()
+                raise ServiceUnavailable(
+                    f"tuning service at {self.host}:{self.port} "
+                    f"unavailable: {exc}") from None
+            if line is None:
+                self._reset()
+                raise ServiceUnavailable(
+                    f"tuning service at {self.host}:{self.port} "
+                    f"closed the connection")
+            return P.decode(line)
+
+    def _checked(self, obj: Dict[str, Any]) -> Dict[str, Any]:
+        resp = self.call(obj)
+        if not resp.get("ok"):
+            raise ServiceError(resp.get("error", "request failed"),
+                               code=resp.get("code", P.E_INTERNAL),
+                               response=resp)
+        return resp
+
+    # -- ops -------------------------------------------------------------------
+    def ping(self) -> Dict[str, Any]:
+        return self._checked({"op": "ping"})
+
+    def submit_kernel(self, tenant: str, kernel: str, hardware: str,
+                      input: Optional[str] = None,
+                      budget: Optional[int] = None, seed: int = 0,
+                      searcher: Optional[str] = None,
+                      tenant_budget_s: Optional[float] = None
+                      ) -> Dict[str, Any]:
+        return self._checked({
+            "op": "submit", "kind": "kernel", "tenant": tenant,
+            "kernel": kernel, "input": input, "hardware": hardware,
+            "budget": budget, "seed": seed, "searcher": searcher,
+            "tenant_budget_s": tenant_budget_s})
+
+    def submit_serve(self, tenant: str, hardware: str, bucket: str,
+                     bucket_shape: Sequence[int],
+                     batch_sizes: Sequence[int],
+                     max_seqs: Sequence[int],
+                     space: str = "serve_online", calib_n: int = 16,
+                     stats: Optional[Dict[str, Any]] = None,
+                     budget: Optional[int] = None, seed: int = 0,
+                     tenant_budget_s: Optional[float] = None,
+                     hardware_spec: Optional[Dict[str, Any]] = None
+                     ) -> Dict[str, Any]:
+        return self._checked({
+            "op": "submit", "kind": "serve", "tenant": tenant,
+            "hardware": hardware, "bucket": bucket,
+            "bucket_shape": list(bucket_shape),
+            "batch_sizes": list(batch_sizes),
+            "max_seqs": list(max_seqs), "space": space,
+            "calib_n": calib_n, "stats": dict(stats or {}),
+            "budget": budget, "seed": seed,
+            "tenant_budget_s": tenant_budget_s,
+            "hardware_spec": hardware_spec})
+
+    def status(self, request_id: str) -> Dict[str, Any]:
+        return self._checked({"op": "status", "request_id": request_id})
+
+    def result(self, request_id: str, timeout: Optional[float] = None,
+               poll: float = 0.05) -> Dict[str, Any]:
+        """Block until the request resolves; return its result payload.
+
+        Raises ``ServiceError(code="not_done")`` if the request was
+        cancelled, ``TimeoutError`` past ``timeout`` seconds.
+        """
+        deadline = None if timeout is None \
+            else time.monotonic() + float(timeout)
+        while True:
+            st = self.status(request_id)
+            if st["state"] == "done":
+                return self._checked({"op": "result",
+                                      "request_id": request_id})
+            if st["state"] == "cancelled":
+                raise ServiceError(
+                    st.get("error") or f"request {request_id} cancelled",
+                    code=P.E_NOT_DONE, response=st)
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"request {request_id} still {st['state']} after "
+                    f"{timeout}s")
+            time.sleep(poll)
+
+    def cancel(self, request_id: str) -> Dict[str, Any]:
+        return self._checked({"op": "cancel", "request_id": request_id})
+
+    def stats(self) -> Dict[str, Any]:
+        return self._checked({"op": "stats"})
+
+    def shutdown(self, drain: bool = True) -> Dict[str, Any]:
+        return self._checked({"op": "shutdown", "drain": drain})
+
+
+class PendingTuning:
+    """Handle for one submitted request (async client)."""
+
+    def __init__(self, client: ServiceClient, request_id: str,
+                 submit_response: Dict[str, Any]):
+        self.client = client
+        self.request_id = request_id
+        self.submit_response = submit_response
+
+    def status(self) -> Dict[str, Any]:
+        return self.client.status(self.request_id)
+
+    def done(self) -> bool:
+        return self.status()["state"] in ("done", "cancelled")
+
+    def result(self, timeout: Optional[float] = None,
+               poll: float = 0.05) -> Dict[str, Any]:
+        return self.client.result(self.request_id, timeout=timeout,
+                                  poll=poll)
+
+    def cancel(self) -> Dict[str, Any]:
+        return self.client.cancel(self.request_id)
+
+
+class AsyncServiceClient:
+    """Handle-based wrapper: submits return ``PendingTuning``."""
+
+    def __init__(self, address: Union[str, Tuple[str, int]],
+                 timeout: float = 30.0):
+        self.client = ServiceClient(address, timeout=timeout)
+
+    def submit_kernel(self, *args, **kwargs) -> PendingTuning:
+        resp = self.client.submit_kernel(*args, **kwargs)
+        return PendingTuning(self.client, resp["request_id"], resp)
+
+    def submit_serve(self, *args, **kwargs) -> PendingTuning:
+        resp = self.client.submit_serve(*args, **kwargs)
+        return PendingTuning(self.client, resp["request_id"], resp)
+
+    def stats(self) -> Dict[str, Any]:
+        return self.client.stats()
+
+    def close(self) -> None:
+        self.client.close()
+
+    def __enter__(self) -> "AsyncServiceClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

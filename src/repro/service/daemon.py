@@ -1,0 +1,618 @@
+"""``TuningDaemon`` — the tuning-as-a-service process.
+
+One long-lived daemon owns one worker pool, one elastic ``FleetTuner``
+(started empty, jobs injected while it runs), and one shared config/model
+corpus (usually a ``ShardedConfigStore``).  Tenants connect over a
+localhost TCP socket and speak the JSON-lines protocol; every accepted
+``submit`` becomes a ``TuningJob`` named after its request id, and the
+fleet's gain-priority scheduler multiplexes all tenants' trials onto the
+pool.  Three things make it a *service* rather than a batch fleet:
+
+* **store-first answering** — a submit whose ``(space, bucket, hardware)``
+  key is already in the corpus resolves immediately with ZERO trials;
+  identical requests in flight are *coalesced* (followers ride the
+  primary's tuning run and also pay zero);
+* **tenant policy** — admission caps and per-tenant worker-seconds
+  budgets, metered every loop tick from the fleet's own ``EvalAccount``
+  ledgers (abandoned/retried attempts included); an exhausted tenant's
+  queued work is parked and new submits rejected, without touching
+  anyone else's jobs;
+* **graceful drain** — ``shutdown`` (or SIGTERM via the CLI) stops
+  admissions, lets in-flight empirical tests finish, resolves unfinished
+  jobs as ``cancelled`` partials, and flushes the store.
+
+Threading model: reader threads (one per connection) only touch daemon
+state under ``self._lock``; the single loop thread holds the same lock
+across ``admit → fleet.step → meter``, so fleet internals are never
+entered concurrently.  ``step`` bounds its wait (``max_wait``) to keep
+submit latency low while the pool is busy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import threading
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.account import AccountSnapshot
+from repro.fleet import FleetTuner, JobResult, TuningJob
+from repro.service import protocol as P
+from repro.service.tenants import AdmissionError, TenantManager
+from repro.tuning.store import store_key
+
+# request states (the wire-visible lifecycle)
+QUEUED = "queued"
+PARKED = "parked"        # queued, but its tenant's budget is exhausted
+RUNNING = "running"
+DONE = "done"
+CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One accepted submit, from socket to resolution."""
+
+    rid: str
+    tenant: str
+    kind: str                     # "kernel" | "serve"
+    key: str                      # space|bucket|hardware store key
+    state: str = QUEUED
+    job: Optional[TuningJob] = None
+    snap: Optional[AccountSnapshot] = None   # metering baseline
+    spent_s: float = 0.0          # worker-seconds billed to this request
+    trials: int = 0               # live trials this request paid for
+    source: Optional[str] = None  # "store" | "tuned" | "coalesced"
+    primary: Optional[str] = None  # rid this request coalesced onto
+    followers: List[str] = dataclasses.field(default_factory=list)
+    result: Optional[Dict[str, Any]] = None
+    error: Optional[str] = None
+
+    def status_dict(self) -> Dict[str, Any]:
+        return {
+            "request_id": self.rid, "tenant": self.tenant,
+            "kind": self.kind, "key": self.key, "state": self.state,
+            "trials": self.trials, "spent_s": round(self.spent_s, 6),
+            "source": self.source, "primary": self.primary,
+            "error": self.error,
+        }
+
+
+def _serve_eval_fn(space, wl, hw, need: int):
+    """Measurement closure for serve-kind jobs: the portable serving
+    workload priced through the cost model, with configurations that
+    cannot hold the bucket's sequences charged ``INFEASIBLE_S`` (the
+    same feasibility semantics the client-side ``OnlineAutotuner``
+    enforces via its ranking filter).  Closure-based, so serve-kind
+    submits need an in-process pool (virtual/thread), not subprocess
+    lanes."""
+    from repro.core import costmodel
+    from repro.core.evaluate import (PROFILE_FIXED, PROFILE_SLOWDOWN,
+                                     TEST_OVERHEAD)
+    from repro.serve.autotune import INFEASIBLE_S
+
+    def fn(index: int, profile: bool):
+        cfg = space[index]
+        cs = costmodel.execute(wl(cfg), hw)
+        rt = INFEASIBLE_S if int(cfg["MAX_SEQ"]) < need \
+            else float(cs.runtime)
+        if profile:
+            return rt, cs, rt * PROFILE_SLOWDOWN + TEST_OVERHEAD \
+                + PROFILE_FIXED
+        return rt, None, rt + TEST_OVERHEAD
+
+    return fn
+
+
+class TuningDaemon:
+    """Multi-tenant tuning service over one fleet and one store.
+
+    ``port=0`` binds an ephemeral localhost port (read it back from
+    ``daemon.port`` after ``start()``).  ``default_trial_budget`` caps
+    jobs whose submit named no budget; ``gc_keep`` (a dict of ``prune``
+    keep-filters) enables periodic store GC every ``gc_every_s`` of
+    wall time, with the last stats kept in ``gc_stats``.
+    """
+
+    def __init__(self, pool, store,
+                 host: str = "127.0.0.1", port: int = 0,
+                 tenants: Optional[TenantManager] = None,
+                 default_trial_budget: int = 16,
+                 max_active_jobs: int = 32,
+                 step_wait: float = 0.05,
+                 gc_keep: Optional[Dict[str, Any]] = None,
+                 gc_every_s: float = 60.0,
+                 verbose: bool = False,
+                 **fleet_kwargs):
+        self.pool = pool
+        self.store = store
+        self.host = host
+        self.port = port
+        self.tenants = tenants if tenants is not None else TenantManager()
+        self.default_trial_budget = int(default_trial_budget)
+        self.max_active_jobs = int(max_active_jobs)
+        self.step_wait = float(step_wait)
+        self.gc_keep = gc_keep
+        self.gc_every_s = float(gc_every_s)
+        self.gc_stats: Optional[Dict[str, int]] = None
+        self.verbose = verbose
+        self.tuner = FleetTuner([], pool, store=store, allow_empty=True,
+                                on_job_done=self._on_job_done,
+                                **fleet_kwargs)
+        self.final_report = None
+        self._lock = threading.RLock()
+        self._wake = threading.Event()
+        self._stopped = threading.Event()
+        self._draining = False
+        self._seq = 0
+        self._records: Dict[str, RequestRecord] = {}
+        self._pending: deque = deque()          # rids waiting for the fleet
+        self._by_key: Dict[str, str] = {}       # active primary per key
+        self._server: Optional[socket.socket] = None
+        self._threads: List[threading.Thread] = []
+        self._last_gc = 0.0
+
+    # -- lifecycle -------------------------------------------------------------
+    def start(self) -> Tuple[str, int]:
+        """Bind the socket, start the accept + fleet-loop threads."""
+        self._server = socket.create_server((self.host, self.port))
+        self.port = self._server.getsockname()[1]
+        self.tuner.begin()
+        for fn, name in ((self._accept_loop, "service-accept"),
+                         (self._fleet_loop, "service-fleet")):
+            t = threading.Thread(target=fn, name=name, daemon=True)
+            t.start()
+            self._threads.append(t)
+        if self.verbose:
+            print(f"[service] listening on {self.host}:{self.port}")
+        return self.host, self.port
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self.host, self.port
+
+    def shutdown(self, drain: bool = True) -> None:
+        """Stop accepting work and wind the fleet down.
+
+        ``drain=True`` lets in-flight empirical tests finish (their
+        results are collected and billed) before unfinished jobs resolve
+        as ``cancelled`` partials; ``drain=False`` abandons in-flight
+        work immediately (it is still billed when the lanes come back —
+        the abandoned-cost policy).
+        """
+        with self._lock:
+            if self._draining:
+                return
+            self._draining = True
+            for rid in list(self._pending):
+                self._resolve_cancelled_rid(rid, "daemon shutting down")
+            self._pending.clear()
+            if not drain:
+                for rec in self._records.values():
+                    if rec.state == RUNNING:
+                        self.tuner.cancel_job(rec.rid)
+            self.tuner.stop()
+        self._wake.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the daemon has fully stopped."""
+        return self._stopped.wait(timeout)
+
+    def serve_forever(self) -> None:
+        if self._server is None:
+            self.start()
+        self.wait()
+
+    def __enter__(self) -> "TuningDaemon":
+        if self._server is None:
+            self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(drain=True)
+        self.wait(timeout=60.0)
+
+    # -- the fleet loop --------------------------------------------------------
+    def _fleet_loop(self) -> None:
+        while True:
+            with self._lock:
+                if not self._draining:
+                    self._admit_pending()
+                    self._maybe_gc()
+                progressed = self.tuner.step(max_wait=self.step_wait)
+                self._meter()
+                if self._draining and not progressed:
+                    break
+            if not progressed:
+                self._wake.wait(0.2)
+                self._wake.clear()
+        with self._lock:
+            self.final_report = self.tuner.finish()
+            if getattr(self.store, "autosave", True) is False:
+                self.store.save()
+        if self._server is not None:
+            # close() alone does not wake a thread blocked in accept();
+            # shutdown() forces it out with an error first
+            try:
+                self._server.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                self._server.close()
+            except OSError:
+                pass
+        self._stopped.set()
+        if self.verbose:
+            print("[service] stopped")
+
+    def _admit_pending(self) -> None:
+        """Move queued requests into the fleet, least-spent tenant first."""
+        active = sum(1 for r in self._records.values()
+                     if r.state == RUNNING)
+        if not self._pending or active >= self.max_active_jobs:
+            return
+        order = {n: i for i, n in enumerate(
+            self.tenants.fairness_order(
+                sorted({self._records[rid].tenant
+                        for rid in self._pending})))}
+        for rid in sorted(self._pending,
+                          key=lambda r: (order[self._records[r].tenant], r)):
+            if active >= self.max_active_jobs:
+                break
+            rec = self._records[rid]
+            ts = self.tenants.get(rec.tenant)
+            if ts is None:
+                continue
+            if ts.exhausted:
+                if rec.state == QUEUED:
+                    rec.state = PARKED
+                    ts.parked += 1
+                continue
+            if rec.state == PARKED:      # budget topped back up: unpark
+                rec.state = QUEUED
+            if not self.tenants.can_start(ts):
+                continue
+            self._pending.remove(rid)
+            self.tuner.add_job(rec.job)
+            acct = self.tuner.job_account(rid)
+            rec.snap = acct.snapshot() if acct is not None else None
+            rec.state = RUNNING
+            ts.queued -= 1
+            ts.active += 1
+            active += 1
+            if self.verbose:
+                print(f"[service] {rid} -> fleet ({rec.key})")
+
+    def _meter(self) -> None:
+        """Bill each running request's worker-seconds since last tick."""
+        for rec in self._records.values():
+            if rec.state != RUNNING:
+                continue
+            acct = self.tuner.job_account(rec.rid)
+            if acct is None or rec.snap is None:
+                continue
+            delta = acct.diff(rec.snap)
+            if delta.busy > 0 or delta.steps > 0:
+                ts = self.tenants.get(rec.tenant)
+                if ts is not None:
+                    self.tenants.charge(ts, delta.busy)
+                rec.spent_s += delta.busy
+                rec.snap = acct.snapshot()
+                rec.trials = rec.snap.steps
+
+    def _maybe_gc(self) -> None:
+        if self.gc_keep is None:
+            return
+        now = self.pool.elapsed()
+        if now - self._last_gc < self.gc_every_s:
+            return
+        self._last_gc = now
+        self.gc_stats = self.store.prune(**self.gc_keep)
+        if self.verbose and self.gc_stats.get("dropped"):
+            print(f"[service] store GC: {self.gc_stats}")
+
+    def _on_job_done(self, jr: JobResult) -> None:
+        """Fleet callback (fires inside ``step`` under our lock)."""
+        rec = self._records.get(jr.job)
+        if rec is None:
+            return
+        self._meter_final(rec)
+        ts = self.tenants.get(rec.tenant)
+        if ts is not None and rec.state == RUNNING:
+            ts.active -= 1
+        self._by_key.pop(rec.key, None)
+        if jr.cancelled or jr.best_index is None:
+            rec.state = CANCELLED
+            rec.error = "cancelled before completion" if jr.cancelled \
+                else "every empirical test failed"
+            for frid in rec.followers:
+                self._resolve_cancelled_rid(
+                    frid, f"primary {rec.rid} was cancelled")
+        else:
+            rec.state = DONE
+            rec.source = "tuned"
+            rec.trials = jr.trials
+            rec.result = {
+                "key": rec.key, "config": dict(jr.best_config),
+                "runtime": jr.best_runtime, "trials": jr.trials,
+                "searcher": jr.searcher, "warm_started": jr.warm_started,
+                "source": "tuned",
+            }
+            for frid in rec.followers:
+                frec = self._records.get(frid)
+                if frec is None or frec.state == CANCELLED:
+                    continue
+                fts = self.tenants.get(frec.tenant)
+                if fts is not None:
+                    fts.queued -= 1
+                    fts.store_hits += 1
+                frec.state = DONE
+                frec.source = "coalesced"
+                frec.result = dict(rec.result, source="coalesced",
+                                   trials=0)
+        if self.verbose:
+            print(f"[service] {rec.rid} {rec.state} "
+                  f"(trials={rec.trials}, spent={rec.spent_s:.3f}s)")
+
+    def _meter_final(self, rec: RequestRecord) -> None:
+        acct = self.tuner.job_account(rec.rid)
+        if acct is None or rec.snap is None:
+            return
+        delta = acct.diff(rec.snap)
+        ts = self.tenants.get(rec.tenant)
+        if ts is not None:
+            self.tenants.charge(ts, delta.busy)
+        rec.spent_s += delta.busy
+        rec.snap = acct.snapshot()
+        rec.trials = rec.snap.steps
+
+    def _resolve_cancelled_rid(self, rid: str, why: str) -> None:
+        rec = self._records.get(rid)
+        if rec is None or rec.state in (DONE, CANCELLED):
+            return
+        if rec.state in (QUEUED, PARKED):
+            ts = self.tenants.get(rec.tenant)
+            if ts is not None:
+                ts.queued -= 1
+        rec.state = CANCELLED
+        rec.error = why
+        self._by_key.pop(rec.key, None)
+        if rec.primary is not None:
+            prec = self._records.get(rec.primary)
+            if prec is not None and rid in prec.followers:
+                prec.followers.remove(rid)
+
+    # -- request handling ------------------------------------------------------
+    def handle(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        """Dispatch one validated request (thread-safe; used directly by
+        in-process tests and by the socket reader threads)."""
+        op = req["op"]
+        with self._lock:
+            if op == "ping":
+                return P.ok(protocol=P.PROTOCOL, version=P.PROTOCOL_VERSION)
+            if op == "submit":
+                return self._op_submit(req)
+            if op == "status":
+                return self._op_status(req)
+            if op == "result":
+                return self._op_result(req)
+            if op == "cancel":
+                return self._op_cancel(req)
+            if op == "stats":
+                return self._op_stats()
+            if op == "shutdown":
+                threading.Thread(target=self.shutdown,
+                                 kwargs={"drain": req["drain"]},
+                                 daemon=True).start()
+                return P.ok(draining=True)
+            return P.err(f"unhandled op {op!r}", code=P.E_INTERNAL)
+
+    def _next_rid(self) -> str:
+        self._seq += 1
+        return f"r{self._seq:06d}"
+
+    def _op_submit(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        if self._draining:
+            return P.err("daemon is draining", code=P.E_DRAINING)
+        try:
+            ts = self.tenants.admit(req["tenant"],
+                                    budget_s=req.get("tenant_budget_s"))
+            self.tenants.check_submit(ts)
+        except AdmissionError as exc:
+            return P.err(str(exc), code=exc.code)
+        try:
+            job, key = self._build_job(req)
+        except P.ProtocolError as exc:
+            ts.rejected += 1
+            return P.err(str(exc), code=exc.code)
+        rid = self._next_rid()
+        rec = RequestRecord(rid=rid, tenant=req["tenant"],
+                            kind=req["kind"], key=key, job=job)
+        self._records[rid] = rec
+        ts.submitted += 1
+        # store-first: a known key is answered with zero trials
+        space, bucket, hw = key.split("|")
+        entry = self.store.get(space, bucket, hw)
+        if entry is not None:
+            rec.state = DONE
+            rec.source = "store"
+            rec.result = {"key": key, "config": dict(entry.config),
+                          "runtime": entry.runtime,
+                          "trials": 0, "entry_trials": entry.trials,
+                          "source": "store"}
+            ts.store_hits += 1
+            return P.ok(request_id=rid, state=DONE, **rec.result)
+        # coalesce onto an identical request already in flight
+        primary = self._by_key.get(key)
+        if primary is not None:
+            prec = self._records[primary]
+            prec.followers.append(rid)
+            rec.primary = primary
+            rec.source = "coalesced"
+            ts.queued += 1
+            return P.ok(request_id=rid, state=QUEUED, coalesced=primary)
+        job.name = rid
+        self._by_key[key] = rid
+        self._pending.append(rid)
+        ts.queued += 1
+        self._wake.set()
+        return P.ok(request_id=rid, state=QUEUED)
+
+    def _build_job(self, req: Dict[str, Any]) -> Tuple[TuningJob, str]:
+        budget = req["budget"] if req["budget"] is not None \
+            else self.default_trial_budget
+        if req["kind"] == "kernel":
+            from repro.fleet import job_from_registry
+            from repro.kernels.registry import BENCHMARKS
+            if req["kernel"] not in BENCHMARKS:
+                raise P.ProtocolError(
+                    f"unknown kernel {req['kernel']!r}; available: "
+                    f"{sorted(BENCHMARKS)}", code=P.E_UNKNOWN_KERNEL)
+            input_key = req["input"] if req["input"] is not None \
+                else sorted(BENCHMARKS[req["kernel"]].inputs)[0]
+            try:
+                job = job_from_registry(
+                    req["kernel"], input_key, req["hardware"],
+                    budget=budget, seed=req["seed"],
+                    searcher=req["searcher"])
+            except KeyError as exc:
+                raise P.ProtocolError(str(exc), code=P.E_UNKNOWN_KERNEL) \
+                    from None
+            return job, store_key(job.space.name, job.bucket,
+                                  job.hardware_key)
+        return self._build_serve_job(req, budget)
+
+    def _build_serve_job(self, req: Dict[str, Any],
+                         budget: int) -> Tuple[TuningJob, str]:
+        """A serve-kind submit reconstructs the client's tuning problem:
+        the SAME space (so published model artifacts bind on the client
+        side) and the portable serving workload at the bucket's
+        representative shape, measured via the cost model with the
+        client's feasibility rule."""
+        from repro.core import hwspec
+        from repro.core.hwspec import HardwareSpec
+        from repro.serve.autotune import (ServeWorkloadStats, serve_space,
+                                          serve_workload_fn)
+        if req["hardware_spec"] is not None:
+            # hardware outside this daemon's registry (a replica's "cpu"
+            # label, a lab chip): price on the shipped spec numbers and
+            # key the store by their fingerprint, like the fleet does
+            try:
+                hw = HardwareSpec(**req["hardware_spec"])
+            except TypeError as exc:
+                raise P.ProtocolError(f"bad hardware_spec: {exc}") \
+                    from None
+        else:
+            try:
+                hw = hwspec.get(req["hardware"])
+            except KeyError as exc:
+                raise P.ProtocolError(f"unknown hardware: {exc}") from None
+        allowed = {f.name for f in
+                   dataclasses.fields(ServeWorkloadStats)}
+        bad = set(req["stats"]) - allowed
+        if bad:
+            raise P.ProtocolError(f"unknown stats fields {sorted(bad)}")
+        stats = ServeWorkloadStats(**req["stats"])
+        space = serve_space(req["batch_sizes"], req["max_seqs"],
+                            name=req["space"])
+        plen, new = req["bucket_shape"]
+        wl = serve_workload_fn(req["calib_n"], plen, new, stats)
+        job = TuningJob(
+            name=f"serve:{req['bucket']}",   # renamed to the rid on accept
+            space=space, workload_fn=wl,
+            hardware=hw if req["hardware_spec"] is not None
+            else req["hardware"],
+            bucket=req["bucket"], budget=budget, seed=req["seed"],
+            eval_fn=_serve_eval_fn(space, wl, hw, plen + new))
+        return job, store_key(space.name, req["bucket"], job.hardware_key)
+
+    def _op_status(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        rec = self._records.get(req["request_id"])
+        if rec is None:
+            return P.err(f"unknown request {req['request_id']!r}",
+                         code=P.E_UNKNOWN_REQUEST)
+        return P.ok(**rec.status_dict())
+
+    def _op_result(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        rec = self._records.get(req["request_id"])
+        if rec is None:
+            return P.err(f"unknown request {req['request_id']!r}",
+                         code=P.E_UNKNOWN_REQUEST)
+        if rec.state == CANCELLED:
+            return P.err(rec.error or "request was cancelled",
+                         code=P.E_NOT_DONE, state=rec.state)
+        if rec.state != DONE or rec.result is None:
+            return P.err(f"request {rec.rid} is {rec.state}",
+                         code=P.E_NOT_DONE, state=rec.state)
+        return P.ok(request_id=rec.rid, state=DONE, **rec.result)
+
+    def _op_cancel(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        rec = self._records.get(req["request_id"])
+        if rec is None:
+            return P.err(f"unknown request {req['request_id']!r}",
+                         code=P.E_UNKNOWN_REQUEST)
+        if rec.state in (DONE, CANCELLED):
+            return P.ok(request_id=rec.rid, state=rec.state,
+                        cancelled=False)
+        if rec.state in (QUEUED, PARKED):
+            if rec.primary is None and rec.rid in self._pending:
+                self._pending.remove(rec.rid)
+            self._resolve_cancelled_rid(rec.rid, "cancelled by client")
+        else:  # RUNNING: the fleet abandons its in-flight tests
+            self.tuner.cancel_job(rec.rid)
+        return P.ok(request_id=rec.rid, state=rec.state, cancelled=True)
+
+    def _op_stats(self) -> Dict[str, Any]:
+        by_state: Dict[str, int] = {}
+        for rec in self._records.values():
+            by_state[rec.state] = by_state.get(rec.state, 0) + 1
+        return P.ok(
+            protocol=P.PROTOCOL, version=P.PROTOCOL_VERSION,
+            draining=self._draining,
+            fleet=self.tuner.progress(),
+            tenants=self.tenants.snapshot(),
+            requests=by_state,
+            store_entries=len(self.store),
+            gc=self.gc_stats,
+        )
+
+    # -- socket plumbing -------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                conn, _ = self._server.accept()
+            except OSError:     # socket closed: daemon stopping
+                return
+            t = threading.Thread(target=self._client_loop, args=(conn,),
+                                 name="service-conn", daemon=True)
+            t.start()
+
+    def _client_loop(self, conn: socket.socket) -> None:
+        try:
+            rfile = conn.makefile("rb")
+            while True:
+                try:
+                    line = P.read_line(rfile)
+                except P.ProtocolError as exc:
+                    conn.sendall(P.encode(P.err(str(exc), code=exc.code)))
+                    return
+                if line is None:
+                    return
+                if not line.strip():
+                    continue
+                try:
+                    req = P.validate_request(P.decode(line))
+                    resp = self.handle(req)
+                except P.ProtocolError as exc:
+                    resp = P.err(str(exc), code=exc.code)
+                except Exception as exc:   # never kill the connection loop
+                    resp = P.err(f"{type(exc).__name__}: {exc}",
+                                 code=P.E_INTERNAL)
+                conn.sendall(P.encode(resp))
+        except OSError:
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass

@@ -1,0 +1,276 @@
+"""``ShardedConfigStore`` — one tuned-config corpus, hash-partitioned.
+
+A single JSON store file is fine for one fleet process, but the service
+multiplexes many tenants and may run next to other daemons sharing the
+same corpus: every ``save()`` is a locked read-merge-write of the WHOLE
+file, so unrelated keys contend on one lock and every publish re-parses
+every artifact.  Sharding fixes both: keys are partitioned by
+``crc32(key) % n_shards`` across ``n_shards`` ordinary ``ConfigStore``
+files in one directory, so writers touching different shards never
+contend and a publish only rewrites the (small) shard it lands in.
+
+Layout::
+
+    <root>/
+      shards.json      # {"format": "repro.sharded_store", "shards": N}
+      shard-00.json    # plain repro.config_store files — each individually
+      shard-01.json    #   merge-safe (file lock + read-merge-write), so
+      ...              #   concurrent daemons resolve conflicts per shard
+
+``crc32`` (not Python's ``hash``) keeps the partition deterministic
+across processes regardless of ``PYTHONHASHSEED`` — two daemons MUST
+route the same key to the same shard file or merge safety is lost.  The
+shard count is fixed at corpus creation and recorded in ``shards.json``
+(written under a file lock so concurrent first-creators agree); later
+openers adopt the recorded count, ignoring a conflicting request.
+
+The facade mirrors the ``ConfigStore`` API (including the settable
+``autosave`` used by ``FleetTuner``'s publish batching), tracking dirty
+shards so ``save()`` only rewrites the files actually touched.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.model import TPPCModel
+from repro.core.tuning_space import Config, TuningSpace
+from repro.tuning.store import (ConfigStore, StoreEntry, _FileLock, _SEP,
+                                store_key)
+
+META_FORMAT = "repro.sharded_store"
+META_VERSION = 1
+META_FILE = "shards.json"
+DEFAULT_SHARDS = 4
+
+
+def shard_of(key: str, n_shards: int) -> int:
+    """Deterministic cross-process shard index for a store key."""
+    return zlib.crc32(key.encode("utf-8")) % n_shards
+
+
+class ShardedConfigStore:
+    """``ConfigStore``-compatible facade over ``n_shards`` store files.
+
+    Point it at a directory; the shard files and metafile are created on
+    first use.  ``autosave=True`` (default) persists the touched shard on
+    every mutation, exactly like a path-bound ``ConfigStore``; setting
+    ``autosave = False`` batches mutations until ``save()``, which
+    flushes only dirty shards (each through the underlying store's
+    locked read-merge-write, so other processes' writes merge in).
+    """
+
+    def __init__(self, root: str, n_shards: int = DEFAULT_SHARDS,
+                 autosave: bool = True):
+        if n_shards <= 0:
+            raise ValueError("n_shards must be positive")
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.n_shards = self._bind_meta(n_shards)
+        self._autosave = autosave
+        self._shards: List[ConfigStore] = []
+        self._dirty: set = set()
+        for i in range(self.n_shards):
+            # the facade owns persistence: shards never autosave themselves
+            self._shards.append(
+                ConfigStore(path=self._shard_path(i), autosave=False))
+
+    # -- wiring ----------------------------------------------------------------
+    @property
+    def path(self) -> str:
+        """The corpus root directory (non-None: 'persistent' to callers)."""
+        return self.root
+
+    @property
+    def autosave(self) -> bool:
+        return self._autosave
+
+    @autosave.setter
+    def autosave(self, value: bool) -> None:
+        self._autosave = bool(value)
+
+    def _shard_path(self, i: int) -> str:
+        return os.path.join(self.root, f"shard-{i:02d}.json")
+
+    def _meta_path(self) -> str:
+        return os.path.join(self.root, META_FILE)
+
+    def _bind_meta(self, requested: int) -> int:
+        """Create-or-adopt the corpus shard count, atomically.
+
+        The metafile is the one piece of state every writer must agree
+        on — a daemon partitioning by a different count would scatter a
+        key across files and break per-shard merge safety.  First
+        creator wins under the file lock; everyone else adopts.
+        """
+        meta = self._meta_path()
+        with _FileLock(meta):
+            if os.path.exists(meta):
+                with open(meta) as f:
+                    d = json.load(f)
+                if d.get("format") != META_FORMAT:
+                    raise ValueError(f"{meta} is not a {META_FORMAT} file")
+                return int(d["shards"])
+            tmp = meta + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"format": META_FORMAT, "version": META_VERSION,
+                           "shards": int(requested)}, f, indent=1)
+            os.replace(tmp, meta)
+            return int(requested)
+
+    def _shard(self, key: str) -> Tuple[ConfigStore, int]:
+        i = shard_of(key, self.n_shards)
+        return self._shards[i], i
+
+    def _touched(self, i: int) -> None:
+        if self._autosave:
+            self._shards[i].save()
+        else:
+            self._dirty.add(i)
+
+    # -- tuned configs ---------------------------------------------------------
+    def get(self, space: str, bucket: str, hardware: str
+            ) -> Optional[StoreEntry]:
+        shard, _ = self._shard(store_key(space, bucket, hardware))
+        return shard.get(space, bucket, hardware)
+
+    def put(self, space: str, bucket: str, hardware: str, config: Config,
+            runtime: float, trials: int,
+            meta: Optional[Dict[str, Any]] = None) -> StoreEntry:
+        shard, i = self._shard(store_key(space, bucket, hardware))
+        entry = shard.put(space, bucket, hardware, config, runtime,
+                          trials, meta)
+        self._touched(i)
+        return entry
+
+    def entries(self) -> Iterator[StoreEntry]:
+        for shard in self._shards:
+            yield from shard.entries()
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self._shards)
+
+    def __contains__(self, key: str) -> bool:
+        shard, _ = self._shard(key)
+        return key in shard
+
+    # -- model artifacts -------------------------------------------------------
+    def get_model_dict(self, space: str, bucket: str, hardware: str
+                       ) -> Optional[Dict]:
+        shard, _ = self._shard(store_key(space, bucket, hardware))
+        return shard.get_model_dict(space, bucket, hardware)
+
+    def model_keys(self) -> Iterator[str]:
+        for shard in self._shards:
+            yield from shard.model_keys()
+
+    def put_model_dict(self, space: str, bucket: str, hardware: str,
+                       artifact: Dict, revision: Optional[int] = None,
+                       n_obs: Optional[int] = None) -> None:
+        shard, i = self._shard(store_key(space, bucket, hardware))
+        shard.put_model_dict(space, bucket, hardware, artifact,
+                             revision=revision, n_obs=n_obs)
+        self._touched(i)
+
+    def load_model(self, space: str, bucket: str, hardware: str,
+                   bind_space: Optional[TuningSpace] = None
+                   ) -> Optional[TPPCModel]:
+        shard, _ = self._shard(store_key(space, bucket, hardware))
+        return shard.load_model(space, bucket, hardware,
+                                bind_space=bind_space)
+
+    def save_model(self, space: str, bucket: str, hardware: str,
+                   model: TPPCModel,
+                   model_space: Optional[TuningSpace] = None,
+                   revision: Optional[int] = None,
+                   n_obs: Optional[int] = None) -> None:
+        shard, i = self._shard(store_key(space, bucket, hardware))
+        shard.save_model(space, bucket, hardware, model,
+                         model_space=model_space, revision=revision,
+                         n_obs=n_obs)
+        self._touched(i)
+
+    def nearest_model_key(self, space: str, bucket: str, hardware: str
+                          ) -> Optional[str]:
+        """Same portability tiering as ``ConfigStore``, over ALL shards.
+
+        Exact hit short-circuits to the owning shard; otherwise the tier
+        scan runs over the union of every shard's model keys (sorted, so
+        ties break identically to the single-file store).
+        """
+        exact = store_key(space, bucket, hardware)
+        shard, _ = self._shard(exact)
+        if shard.get_model_dict(space, bucket, hardware) is not None:
+            return exact
+        same_bucket, same_hw, same_space = [], [], []
+        for k in sorted(self.model_keys()):
+            s, b, h = k.split(_SEP)
+            if s != space:
+                continue
+            if b == bucket:
+                same_bucket.append(k)
+            elif h == hardware:
+                same_hw.append(k)
+            else:
+                same_space.append(k)
+        for tier in (same_bucket, same_hw, same_space):
+            if tier:
+                return tier[0]
+        return None
+
+    def load_nearest_model(self, space: str, bucket: str, hardware: str,
+                           bind_space: Optional[TuningSpace] = None
+                           ) -> Tuple[Optional[TPPCModel], Optional[str]]:
+        key = self.nearest_model_key(space, bucket, hardware)
+        if key is None:
+            return None, None
+        s, b, h = key.split(_SEP)
+        shard, _ = self._shard(key)
+        return shard.load_model(s, b, h, bind_space=bind_space), key
+
+    # -- persistence -----------------------------------------------------------
+    def save(self, merge: bool = True) -> str:
+        """Flush dirty shards (locked read-merge-write each); return root."""
+        for i in sorted(self._dirty):
+            self._shards[i].save(merge=merge)
+        self._dirty.clear()
+        return self.root
+
+    def refresh(self) -> None:
+        """Merge other processes' on-disk writes into memory, all shards.
+
+        Reads are safe without the lock — shard writes land via atomic
+        ``os.replace`` — and merging (rather than reloading) preserves
+        our own unflushed mutations under the usual conflict rules.
+        """
+        for shard in self._shards:
+            if os.path.exists(shard.path):
+                with open(shard.path) as f:
+                    shard._merge_from(json.load(f))
+
+    def prune(self, keep_hardware=None, keep_spaces=None,
+              keep_buckets=None, dry_run: bool = False) -> Dict[str, int]:
+        """Per-shard ``ConfigStore.prune``, stats aggregated across shards.
+
+        A real (non-dry) prune persists each affected shard immediately —
+        inside the underlying store's locked post-merge re-filter — even
+        when the facade is in batching mode, because a deferred merging
+        save would re-adopt the pruned keys from disk.
+        """
+        totals = {"dropped_entries": 0, "kept_entries": 0,
+                  "dropped_models": 0, "kept_models": 0, "dropped": 0}
+        for shard in self._shards:
+            was = shard.autosave
+            shard.autosave = not dry_run
+            try:
+                stats = shard.prune(keep_hardware=keep_hardware,
+                                    keep_spaces=keep_spaces,
+                                    keep_buckets=keep_buckets,
+                                    dry_run=dry_run)
+            finally:
+                shard.autosave = was
+            for k in totals:
+                totals[k] += stats[k]
+        return totals

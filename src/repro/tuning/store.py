@@ -185,6 +185,10 @@ class ConfigStore:
                        ) -> Optional[Dict]:
         return self._models.get(store_key(space, bucket, hardware))
 
+    def model_keys(self) -> Iterator[str]:
+        """All stored model-artifact keys (``space|bucket|hardware``)."""
+        return iter(self._models)
+
     def put_model_dict(self, space: str, bucket: str, hardware: str,
                        artifact: Dict,
                        revision: Optional[int] = None,
@@ -339,16 +343,20 @@ class ConfigStore:
                 self._models[k] = m
 
     def prune(self, keep_hardware=None, keep_spaces=None,
-              keep_buckets=None) -> int:
+              keep_buckets=None, dry_run: bool = False) -> Dict[str, int]:
         """GC entries and model artifacts for retired fleet members.
 
         Each ``keep_*`` is an iterable of values to KEEP for that key
         field (``None``: no constraint on that field); anything failing
-        any given constraint is dropped.  Returns the number of artifacts
-        (entries + models) removed; autosaves when bound to a path.
+        any given constraint is dropped.  Returns a stats dict —
+        ``{"dropped_entries", "kept_entries", "dropped_models",
+        "kept_models", "dropped"}`` — so a daemon's periodic GC can be
+        logged and tested; with ``dry_run=True`` nothing is mutated (or
+        saved), only the stats are computed.  Autosaves when bound to a
+        path and something was actually dropped.
 
             store.prune(keep_hardware={"tpu_v5e"})   # tpu_v4 left the fleet
-            store.prune(keep_spaces={"gemm"}, keep_buckets={"2048"})
+            store.prune(keep_spaces={"gemm"}, dry_run=True)   # would-drop
         """
         keep_hardware = set(keep_hardware) if keep_hardware is not None \
             else None
@@ -362,22 +370,32 @@ class ConfigStore:
                     or (keep_buckets is not None and b not in keep_buckets)
                     or (keep_hardware is not None and h not in keep_hardware))
 
-        def apply() -> int:
+        def apply() -> Dict[str, int]:
             doomed_e = [k for k in self._entries if drop(k)]
             doomed_m = [k for k in self._models if drop(k)]
-            for k in doomed_e:
-                del self._entries[k]
-            for k in doomed_m:
-                del self._models[k]
-            return len(doomed_e) + len(doomed_m)
+            if not dry_run:
+                for k in doomed_e:
+                    del self._entries[k]
+                for k in doomed_m:
+                    del self._models[k]
+            return {
+                "dropped_entries": len(doomed_e),
+                "kept_entries": len(self._entries) - (len(doomed_e)
+                                                      if dry_run else 0),
+                "dropped_models": len(doomed_m),
+                "kept_models": len(self._models) - (len(doomed_m)
+                                                    if dry_run else 0),
+                "dropped": len(doomed_e) + len(doomed_m),
+            }
 
-        removed = apply()
-        if removed and self.path is not None and self.autosave:
+        stats = apply()
+        if stats["dropped"] and not dry_run and self.path is not None \
+                and self.autosave:
             # the on-disk copy still holds the pruned keys; a plain merging
             # save would adopt them straight back, so re-apply the filter
             # after the merge, inside the lock
             self.save(_post_merge=apply)
-        return removed
+        return stats
 
     def load(self, path: str) -> "ConfigStore":
         with open(path) as f:

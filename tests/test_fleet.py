@@ -247,6 +247,116 @@ def test_fleet_job_results_use_run_relative_clock():
                    for _, t, _ in r.trace)
 
 
+# =============================================================================
+# Incremental fleet API (begin/step/finish, add/cancel/stop) — ISSUE 6
+# =============================================================================
+def test_fleet_incremental_loop_matches_run():
+    """``run()`` is exactly begin + step-until-idle + finish; a manual
+    incremental drive must produce bit-identical per-job results."""
+    rep_run = FleetTuner(_serve_jobs("tpu_v4", budget=12),
+                         VirtualWorkerPool(workers=4), store=None,
+                         publish_models=False, in_flight=4).run()
+    tuner = FleetTuner(_serve_jobs("tpu_v4", budget=12),
+                       VirtualWorkerPool(workers=4), store=None,
+                       publish_models=False, in_flight=4)
+    tuner.begin()
+    while tuner.step():
+        pass
+    rep_inc = tuner.finish()
+    by_job = {r.job: r for r in rep_run.results}
+    assert len(rep_inc.results) == len(rep_run.results)
+    for r in rep_inc.results:
+        ref = by_job[r.job]
+        assert r.trace == ref.trace
+        assert r.best_index == ref.best_index
+        assert r.best_runtime == ref.best_runtime
+    assert rep_inc.elapsed == rep_run.elapsed
+
+
+def test_fleet_add_job_while_running():
+    """A service fleet starts empty and takes jobs mid-flight."""
+    done = []
+    tuner = FleetTuner([], VirtualWorkerPool(workers=2), store=None,
+                       publish_models=False, allow_empty=True,
+                       on_job_done=lambda r: done.append(r.job))
+    tuner.begin()
+    jobs = _serve_jobs("tpu_v4", budget=6)
+    tuner.add_job(jobs[0])
+    for _ in range(4):
+        tuner.step(max_wait=0.01)
+    tuner.add_job(jobs[1])               # injected while job 0 is in flight
+    while tuner.step(max_wait=0.01):
+        pass
+    rep = tuner.finish()
+    assert sorted(done) == sorted(j.name for j in jobs[:2])
+    assert all(not r.cancelled and r.trials == 6 for r in rep.results)
+    with pytest.raises(ValueError):      # duplicate names still rejected
+        tuner.add_job(jobs[0])
+
+
+def test_fleet_cancel_job_mid_run(tmp_path):
+    """Cancelling abandons in-flight tests, bills their cost, resolves a
+    partial ``cancelled`` result, and publishes nothing for that job."""
+    store = ConfigStore(str(tmp_path / "s.json"))
+    jobs = _serve_jobs("tpu_v4", budget=20)[:2]    # < space size (25)
+    tuner = FleetTuner(jobs, VirtualWorkerPool(workers=2), store=store,
+                       in_flight=2)
+    tuner.begin()
+    for _ in range(3):
+        tuner.step(max_wait=0.01)
+    assert tuner.cancel_job(jobs[0].name)
+    assert not tuner.cancel_job(jobs[0].name)     # already resolved
+    assert not tuner.cancel_job("no_such_job")
+    while tuner.step(max_wait=0.01):
+        pass
+    rep = tuner.finish()
+    by_job = {r.job: r for r in rep.results}
+    cancelled = by_job[jobs[0].name]
+    survivor = by_job[jobs[1].name]
+    assert cancelled.cancelled and cancelled.trials < 20
+    assert not survivor.cancelled and survivor.trials == 20
+    # only the surviving job published to the store
+    assert store.get("serve_online", survivor.bucket, "tpu_v5e") is None
+    assert store.get("serve_online", survivor.bucket, "tpu_v4") is not None
+    assert store.get("serve_online", cancelled.bucket, "tpu_v4") is None
+
+
+def test_fleet_stop_drains_in_flight():
+    """``stop()`` collects what is already on the pool (billed to busy)
+    but submits nothing new; unfinished jobs resolve as cancelled."""
+    tuner = FleetTuner(_serve_jobs("tpu_v4", budget=40),
+                       VirtualWorkerPool(workers=4), store=None,
+                       publish_models=False, in_flight=4)
+    tuner.begin()
+    tuner.step(max_wait=0.01)
+    assert not tuner.stopping
+    tuner.stop()
+    assert tuner.stopping
+    while tuner.step(max_wait=0.01):
+        pass
+    rep = tuner.finish()
+    assert all(r.cancelled for r in rep.results)
+    assert all(r.trials < 40 for r in rep.results)
+    total_trials = sum(r.trials for r in rep.results)
+    assert 0 < total_trials <= 8         # first fill wave only (4 + refills)
+    assert rep.busy > 0.0
+
+
+def test_fleet_progress_snapshot():
+    tuner = FleetTuner(_serve_jobs("tpu_v4", budget=6),
+                       VirtualWorkerPool(workers=2), store=None,
+                       publish_models=False)
+    tuner.begin()
+    p0 = tuner.progress()
+    assert p0["jobs"] == 3 and p0["jobs_done"] == 0
+    while tuner.step(max_wait=0.01):
+        pass
+    tuner.finish()
+    p1 = tuner.progress()
+    assert p1["jobs_done"] == 3
+    assert p1["busy_s"] > 0.0 and 0.0 < p1["utilization"] <= 1.0
+
+
 def test_unregistered_hardware_ships_spec_payload():
     """Fingerprint store keys can't be resolved by name in a worker
     subprocess, so payloads carry the spec's numbers instead."""

@@ -499,8 +499,15 @@ def test_store_prune_gcs_and_stays_pruned(tmp_path):
         store.put("sp", "b", hw, config={"X": 1}, runtime=1.0, trials=1)
         store.put_model_dict("sp", "b", hw, {"kind": "stub"})
     store.put("other", "b", "hw1", config={"X": 1}, runtime=1.0, trials=1)
-    removed = store.prune(keep_hardware={"hw1"})
-    assert removed == 2
+    # dry_run reports what WOULD drop without mutating (or saving)
+    preview = store.prune(keep_hardware={"hw1"}, dry_run=True)
+    assert preview["dropped"] == 2
+    assert preview["dropped_entries"] == 1
+    assert preview["dropped_models"] == 1
+    assert store.get("sp", "b", "hw2") is not None        # untouched
+    stats = store.prune(keep_hardware={"hw1"})
+    assert stats == preview                               # preview was honest
+    assert stats["kept_entries"] == 2 and stats["kept_models"] == 1
     assert store.get("sp", "b", "hw2") is None
     assert store.get_model_dict("sp", "b", "hw2") is None
     assert store.get("sp", "b", "hw1") is not None
@@ -509,6 +516,6 @@ def test_store_prune_gcs_and_stays_pruned(tmp_path):
     assert again.get("sp", "b", "hw2") is None
     assert again.get_model_dict("sp", "b", "hw2") is None
     # field combinations
-    assert store.prune(keep_spaces={"sp"}) == 1          # drops "other"
-    assert store.prune(keep_buckets={"b"}) == 0          # nothing to drop
+    assert store.prune(keep_spaces={"sp"})["dropped"] == 1   # drops "other"
+    assert store.prune(keep_buckets={"b"})["dropped"] == 0   # nothing left
     assert ConfigStore(path).get("other", "b", "hw1") is None

@@ -1,0 +1,476 @@
+"""Tuning-as-a-service: protocol, sharded store, tenants, daemon (ISSUE 6).
+
+The acceptance surface: a daemon multiplexes many tenants onto one fleet
+over a localhost socket; a repeat (kernel, bucket, hardware) key resolves
+store-only with ZERO trials; identical in-flight requests coalesce;
+per-tenant worker-seconds budgets reject/park the over-spender without
+touching anyone else; shutdown drains gracefully; and the serve path's
+``OnlineAutotuner`` routes drift retunes through the service, falling
+back in-process when the daemon is unreachable.
+"""
+import dataclasses
+import os
+
+import pytest
+
+from repro.core.hwspec import get as hwget
+from repro.fleet import VirtualWorkerPool
+from repro.service import (ProtocolError, ServiceClient, ServiceError,
+                           ShardedConfigStore, TuningDaemon, validate_request)
+from repro.service import protocol as P
+from repro.service.tenants import AdmissionError, TenantManager
+from repro.tuning import ConfigStore
+
+HW = "tpu_v4"
+
+
+# =============================================================================
+# Wire protocol
+# =============================================================================
+def test_protocol_roundtrip():
+    msg = {"op": "ping"}
+    assert P.decode(P.encode(msg)) == msg
+
+
+def test_protocol_rejects_garbage():
+    with pytest.raises(ProtocolError):
+        P.decode(b"not json\n")
+    with pytest.raises(ProtocolError):
+        P.decode(b"[1, 2]\n")            # not an object
+    with pytest.raises(ProtocolError):
+        validate_request({"op": "frobnicate"})
+    with pytest.raises(ProtocolError):
+        validate_request({})
+
+
+def test_protocol_submit_kernel_validation():
+    req = validate_request({"op": "submit", "tenant": "t", "kind": "kernel",
+                            "kernel": "matmul", "hardware": HW})
+    assert req["seed"] == 0 and req["budget"] is None
+    for broken in (
+        {"op": "submit", "kind": "kernel", "kernel": "matmul",
+         "hardware": HW},                             # no tenant
+        {"op": "submit", "tenant": "", "kind": "kernel",
+         "kernel": "matmul", "hardware": HW},         # empty tenant
+        {"op": "submit", "tenant": "t", "kind": "kernel",
+         "hardware": HW},                             # no kernel
+        {"op": "submit", "tenant": "t", "kind": "kernel",
+         "kernel": "matmul", "hardware": HW, "budget": 0},
+        {"op": "submit", "tenant": "t", "kind": "kernel",
+         "kernel": "matmul", "hardware": HW, "budget": True},  # bool != int
+        {"op": "submit", "tenant": "t", "kind": "wat",
+         "kernel": "matmul", "hardware": HW},
+    ):
+        with pytest.raises(ProtocolError):
+            validate_request(broken)
+
+
+def test_protocol_submit_serve_validation():
+    base = {"op": "submit", "kind": "serve", "tenant": "t", "hardware": HW,
+            "bucket": "p1n1", "bucket_shape": [16, 6],
+            "batch_sizes": [1, 2, 4], "max_seqs": [32, 64]}
+    req = validate_request(base)
+    assert req["space"] == "serve_online" and req["calib_n"] == 16
+    with pytest.raises(ProtocolError):
+        validate_request({**base, "bucket_shape": [16]})      # not a pair
+    with pytest.raises(ProtocolError):
+        validate_request({**base, "batch_sizes": []})
+    with pytest.raises(ProtocolError):
+        validate_request({**base, "max_seqs": [32, -1]})
+
+
+def test_protocol_request_id_ops():
+    for op in ("status", "result", "cancel"):
+        assert validate_request({"op": op, "request_id": "r1"}) == \
+            {"op": op, "request_id": "r1"}
+        with pytest.raises(ProtocolError):
+            validate_request({"op": op})
+
+
+# =============================================================================
+# Sharded store
+# =============================================================================
+def test_sharded_store_api_parity(tmp_path):
+    """Keys written through the facade read back identically to a plain
+    store, across shard files, and survive a reopen."""
+    root = str(tmp_path / "corpus")
+    store = ShardedConfigStore(root, n_shards=3)
+    keys = [("sp", f"b{i}", hw) for i in range(4)
+            for hw in ("tpu_v4", "tpu_v5e")]
+    for i, (s, b, h) in enumerate(keys):
+        store.put(s, b, h, config={"X": i}, runtime=float(i + 1), trials=i)
+    assert len(store) == len(keys)
+    shard_files = [f for f in os.listdir(root) if f.startswith("shard-")]
+    assert len(shard_files) > 1          # actually partitioned
+    reopened = ShardedConfigStore(root)
+    assert reopened.n_shards == 3        # metafile wins over the default
+    for i, (s, b, h) in enumerate(keys):
+        e = reopened.get(s, b, h)
+        assert e is not None and e.config == {"X": i}
+    assert {e.key for e in reopened.entries()} == \
+        {f"{s}|{b}|{h}" for s, b, h in keys}
+
+
+def test_sharded_store_nearest_model_tiers(tmp_path):
+    """The portability tiering must see the UNION of all shards."""
+    store = ShardedConfigStore(str(tmp_path / "c"), n_shards=4)
+    art = {"format": "repro.tppc_model"}
+    store.put_model_dict("sp", "bucketA", "hw1", dict(art))
+    store.put_model_dict("sp", "bucketB", "hw2", dict(art))
+    # exact hit
+    assert store.nearest_model_key("sp", "bucketA", "hw1") == \
+        "sp|bucketA|hw1"
+    # same bucket, other hardware beats same hardware, other bucket
+    assert store.nearest_model_key("sp", "bucketA", "hw2") == \
+        "sp|bucketA|hw1"
+    # same hardware, other bucket
+    assert store.nearest_model_key("sp", "bucketC", "hw2") == \
+        "sp|bucketB|hw2"
+    assert store.nearest_model_key("other", "bucketA", "hw1") is None
+
+
+def test_sharded_store_batched_save_flushes_dirty_shards(tmp_path):
+    root = str(tmp_path / "c")
+    store = ShardedConfigStore(root, n_shards=4, autosave=False)
+    store.put("sp", "b1", "hw", config={"X": 1}, runtime=1.0, trials=1)
+    store.put("sp", "b2", "hw", config={"X": 2}, runtime=2.0, trials=1)
+    assert len(ShardedConfigStore(root)) == 0      # nothing flushed yet
+    store.save()
+    assert len(ShardedConfigStore(root)) == 2
+
+
+def test_sharded_store_prune_aggregates(tmp_path):
+    store = ShardedConfigStore(str(tmp_path / "c"), n_shards=3)
+    for hw in ("tpu_v4", "tpu_v5e"):
+        for b in ("b1", "b2", "b3"):
+            store.put("sp", b, hw, config={}, runtime=1.0, trials=1)
+    preview = store.prune(keep_hardware={"tpu_v4"}, dry_run=True)
+    assert preview["dropped_entries"] == 3 and len(store) == 6
+    stats = store.prune(keep_hardware={"tpu_v4"})
+    assert stats == preview
+    assert len(store) == 3
+    # pruning persisted: the dropped keys do not resurrect on reopen
+    assert len(ShardedConfigStore(str(tmp_path / "c"))) == 3
+
+
+# =============================================================================
+# Tenant policy
+# =============================================================================
+def test_tenant_admission_limits():
+    tm = TenantManager(max_tenants=2, max_queued_per_tenant=1)
+    a = tm.admit("a")
+    tm.admit("b")
+    with pytest.raises(AdmissionError):
+        tm.admit("c")
+    tm.check_submit(a)
+    a.queued = 1
+    with pytest.raises(AdmissionError):
+        tm.check_submit(a)
+
+
+def test_tenant_budget_exhaustion_and_topup():
+    tm = TenantManager()
+    ts = tm.admit("t", budget_s=1.0)
+    tm.charge(ts, 0.6)
+    tm.check_submit(ts)                  # still solvent
+    tm.charge(ts, 0.6)
+    assert ts.exhausted
+    with pytest.raises(AdmissionError) as ei:
+        tm.check_submit(ts)
+    assert ei.value.code == P.E_BUDGET
+    tm.admit("t", budget_s=10.0)         # top-up re-opens the account
+    assert not ts.exhausted
+    tm.check_submit(ts)
+
+
+def test_tenant_fairness_least_spent_first():
+    tm = TenantManager()
+    for name, spend in (("hog", 9.0), ("mid", 1.0), ("new", 0.0)):
+        tm.charge(tm.admit(name), spend)
+    assert tm.fairness_order(["hog", "mid", "new"]) == ["new", "mid", "hog"]
+
+
+# =============================================================================
+# Daemon: in-process deterministic driving (no sockets, no loop thread)
+# =============================================================================
+def _daemon(store=None, **kw):
+    d = TuningDaemon(VirtualWorkerPool(workers=4),
+                     store if store is not None else ConfigStore(),
+                     default_trial_budget=6, **kw)
+    d.tuner.begin()
+    return d
+
+
+def _drive(d, until, max_iters=2000):
+    for _ in range(max_iters):
+        if until():
+            return
+        d._admit_pending()
+        d.tuner.step(max_wait=0.01)
+        d._meter()
+    raise AssertionError("daemon did not converge")
+
+
+def _submit_kernel(d, tenant, kernel="matmul", input="2048", hw=HW, **kw):
+    return d.handle(validate_request(dict(
+        op="submit", kind="kernel", tenant=tenant, kernel=kernel,
+        input=input, hardware=hw, **kw)))
+
+
+def test_daemon_cold_then_store_hit():
+    d = _daemon()
+    r1 = _submit_kernel(d, "a")
+    assert r1["ok"] and r1["state"] == "queued"
+    rid = r1["request_id"]
+    _drive(d, lambda: d._records[rid].state == "done")
+    res = d.handle({"op": "result", "request_id": rid})
+    assert res["ok"] and res["trials"] == 6 and res["source"] == "tuned"
+    # repeat key: answered inline from the store with zero trials
+    r2 = _submit_kernel(d, "b")
+    assert r2["state"] == "done" and r2["trials"] == 0
+    assert r2["source"] == "store"
+    assert r2["config"] == res["config"]
+
+
+def test_daemon_coalesces_identical_inflight_requests():
+    d = _daemon()
+    r1 = _submit_kernel(d, "a")
+    r2 = _submit_kernel(d, "b")          # same key, primary still queued
+    assert r2["coalesced"] == r1["request_id"]
+    _drive(d, lambda: d._records[r2["request_id"]].state == "done")
+    res = d.handle({"op": "result", "request_id": r2["request_id"]})
+    assert res["trials"] == 0 and res["source"] == "coalesced"
+    # the follower's tenant paid nothing; the primary's paid the tuning
+    assert d.tenants.get("b").spent_s == 0.0
+    assert d.tenants.get("a").spent_s > 0.0
+
+
+def test_daemon_unknown_kernel_and_request():
+    d = _daemon()
+    r = _submit_kernel(d, "a", kernel="no_such_kernel")
+    assert not r["ok"] and r["code"] == P.E_UNKNOWN_KERNEL
+    for op in ("status", "result", "cancel"):
+        r = d.handle({"op": op, "request_id": "r999999"})
+        assert not r["ok"] and r["code"] == P.E_UNKNOWN_REQUEST
+
+
+def test_daemon_cancel_queued_and_running():
+    d = _daemon(max_active_jobs=1)
+    r1 = _submit_kernel(d, "a", kernel="matmul")
+    r2 = _submit_kernel(d, "a", kernel="transpose", input=None)
+    d._admit_pending()                   # r1 running, r2 still queued
+    c2 = d.handle({"op": "cancel", "request_id": r2["request_id"]})
+    assert c2["cancelled"]
+    assert d._records[r2["request_id"]].state == "cancelled"
+    d.tuner.step(max_wait=0.01)          # a few trials land for r1
+    c1 = d.handle({"op": "cancel", "request_id": r1["request_id"]})
+    assert c1["cancelled"]
+    rec1 = d._records[r1["request_id"]]
+    assert rec1.state == "cancelled"
+    res = d.handle({"op": "result", "request_id": r1["request_id"]})
+    assert not res["ok"] and res["code"] == P.E_NOT_DONE
+    # nothing was published for a cancelled tuning run
+    assert len(d.store) == 0
+
+
+def test_daemon_meters_and_parks_over_budget_tenant():
+    """The over-spender is rejected/parked; other tenants are untouched."""
+    d = _daemon(tenants=TenantManager(max_active_per_tenant=1))
+    rp = _submit_kernel(d, "poor", kernel="matmul", tenant_budget_s=1e-7)
+    rq = _submit_kernel(d, "poor", kernel="transpose", input=None)
+    rr = _submit_kernel(d, "rich", kernel="conv2d", input=None)
+    done = lambda rid: d._records[rid].state in ("done", "cancelled")
+    _drive(d, lambda: done(rp["request_id"]) and done(rr["request_id"]))
+    poor = d.tenants.get("poor")
+    assert poor.exhausted and poor.spent_s > 1e-7
+    # the queued request was parked, not silently dropped
+    d._admit_pending()
+    assert d._records[rq["request_id"]].state == "parked"
+    # new submits from the exhausted tenant bounce with the budget code
+    r4 = _submit_kernel(d, "poor", kernel="attention", input=None)
+    assert not r4["ok"] and r4["code"] == P.E_BUDGET
+    # the solvent tenant's request completed normally
+    assert d._records[rr["request_id"]].state == "done"
+    assert not d.tenants.get("rich").exhausted
+    # request-level metering adds up to the tenant ledger
+    recs = [d._records[r["request_id"]] for r in (rp, rq)]
+    assert abs(sum(r.spent_s for r in recs) - poor.spent_s) < 1e-9
+
+
+def test_daemon_drain_resolves_running_as_cancelled():
+    d = _daemon()
+    r1 = _submit_kernel(d, "a", budget=50)
+    d._admit_pending()
+    d.tuner.step(max_wait=0.01)          # strictly fewer than 50 trials in
+    d._draining = True                   # what shutdown() sets...
+    d.tuner.stop()
+    while d.tuner.step(max_wait=0.01):   # ...and the loop thread drains
+        pass
+    rep = d.tuner.finish()
+    rec = d._records[r1["request_id"]]
+    assert rec.state == "cancelled"
+    assert rep.results and rep.results[0].cancelled
+    assert 0 < rec.trials < 50           # partial progress was collected
+
+
+def test_daemon_serve_kind_submit(tmp_path):
+    d = _daemon(store=ShardedConfigStore(str(tmp_path / "c"), n_shards=2))
+    r = d.handle(validate_request({
+        "op": "submit", "kind": "serve", "tenant": "engine-1",
+        "hardware": HW, "bucket": "p2n2", "bucket_shape": [40, 12],
+        "batch_sizes": [1, 2, 4, 8, 16], "max_seqs": [32, 64, 96, 128]}))
+    rid = r["request_id"]
+    _drive(d, lambda: d._records[rid].state == "done")
+    res = d.handle({"op": "result", "request_id": rid})
+    assert res["ok"]
+    # the winner holds the bucket's representative shape
+    assert res["config"]["MAX_SEQ"] >= 40 + 12
+    entry = d.store.get("serve_online", "p2n2", HW)
+    assert entry is not None and entry.config == res["config"]
+
+
+def test_daemon_serve_kind_unregistered_hardware_ships_spec():
+    """A replica whose hardware label isn't in the registry (a CPU host)
+    ships its pricing spec's numbers; the daemon prices on them and keys
+    the store by the spec fingerprint — without the payload the submit
+    is rejected, not mispriced."""
+    import dataclasses as dc
+
+    from repro.core import hwspec
+    from repro.core.hwspec import SPECS
+
+    d = _daemon()
+    base = dict(op="submit", kind="serve", tenant="replica",
+                hardware="cpu", bucket="p2n2", bucket_shape=[40, 12],
+                batch_sizes=[1, 2, 4, 8], max_seqs=[64, 96, 128])
+    r = d.handle(validate_request(dict(base)))
+    assert not r["ok"] and r["code"] == P.E_BAD_REQUEST
+
+    spec = dc.replace(SPECS[HW], name="cpu")
+    r = d.handle(validate_request(dict(
+        base, hardware_spec=dc.asdict(spec))))
+    rid = r["request_id"]
+    _drive(d, lambda: d._records[rid].state == "done")
+    res = d.handle({"op": "result", "request_id": rid})
+    assert res["ok"] and res["config"]["MAX_SEQ"] >= 40 + 12
+    # keyed by fingerprint, so two replicas with the same label but
+    # different silicon don't collide
+    entry = d.store.get("serve_online", "p2n2", hwspec.fingerprint(spec))
+    assert entry is not None and entry.config == res["config"]
+    # ...and a repeat submit with the same spec is a store hit
+    r2 = d.handle(validate_request(dict(
+        base, hardware_spec=dc.asdict(spec))))
+    assert r2["state"] == "done" and r2["trials"] == 0
+
+
+def test_daemon_stats_shape():
+    d = _daemon()
+    _submit_kernel(d, "a")
+    st = d.handle({"op": "stats"})
+    assert st["ok"] and not st["draining"]
+    assert st["fleet"]["jobs"] == 0      # not admitted yet (no loop ran)
+    assert "a" in st["tenants"]
+    assert st["requests"] == {"queued": 1}
+
+
+# =============================================================================
+# Daemon over a real socket (threaded loop + client)
+# =============================================================================
+@pytest.fixture()
+def live_daemon(tmp_path):
+    store = ShardedConfigStore(str(tmp_path / "corpus"), n_shards=2)
+    d = TuningDaemon(VirtualWorkerPool(workers=4), store,
+                     default_trial_budget=6)
+    d.start()
+    yield d
+    d.shutdown(drain=False)
+    assert d.wait(timeout=60)
+
+
+def test_daemon_socket_end_to_end(live_daemon):
+    with ServiceClient(live_daemon.address) as c:
+        assert c.ping()["version"] == P.PROTOCOL_VERSION
+        r = c.submit_kernel("a", "matmul", HW, input="2048")
+        res = c.result(r["request_id"], timeout=120)
+        assert res["state"] == "done" and res["trials"] == 6
+        repeat = c.submit_kernel("other-tenant", "matmul", HW, input="2048")
+        assert repeat["state"] == "done" and repeat["trials"] == 0
+        st = c.stats()
+        assert st["tenants"]["other-tenant"]["store_hits"] == 1
+        assert st["store_entries"] >= 1
+
+
+def test_daemon_socket_rejects_malformed_line(live_daemon):
+    import socket as socketlib
+
+    with socketlib.create_connection(live_daemon.address, timeout=10) as s:
+        s.sendall(b"this is not json\n")
+        resp = P.decode(s.makefile("rb").readline())
+        assert not resp["ok"] and resp["code"] == P.E_BAD_REQUEST
+
+
+def test_daemon_socket_drain_shutdown(live_daemon):
+    with ServiceClient(live_daemon.address) as c:
+        assert c.shutdown(drain=True)["draining"]
+        assert live_daemon.wait(timeout=60)
+        with pytest.raises(ServiceError):
+            ServiceClient(live_daemon.address).ping()
+
+
+# =============================================================================
+# OnlineAutotuner --service routing
+# =============================================================================
+def _serve_tuner(service, hardware_name=HW, **kw):
+    from repro.serve.autotune import (OnlineAutotuner, ServeWorkloadStats,
+                                      SyntheticServeBackend, serve_space)
+
+    hw = hwget(HW)
+    stats = ServeWorkloadStats()
+    backend = SyntheticServeBackend(hw, stats, seed=1)
+    return backend, OnlineAutotuner(
+        backend, store=ConfigStore(), space=serve_space(), hw=hw,
+        stats=stats, hardware_name=hardware_name, service=service,
+        max_live_trials=6, **kw)
+
+
+def _requests(n=8, plen=20, new=8):
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(0)
+    return [Request(uid=i, prompt=rng.integers(1, 100, size=plen),
+                    max_new_tokens=new) for i in range(n)]
+
+
+def test_online_autotuner_routes_via_service(live_daemon):
+    backend, tuner = _serve_tuner(f"127.0.0.1:{live_daemon.port}")
+    _, rep = tuner.serve(_requests())
+    assert rep.via_service and not rep.reused and rep.live_trials == 0
+    assert backend.measure_calls == 0    # zero live trials on the engine
+    # adopted locally: revisiting the bucket is a plain local store hit
+    _, rep2 = tuner.serve(_requests())
+    assert not rep2.drift
+    tuner._active = None                 # force a re-ensure
+    _, rep3 = tuner.serve(_requests())
+    assert rep3.reused and not rep3.via_service
+
+
+def test_online_autotuner_falls_back_when_unreachable():
+    backend, tuner = _serve_tuner("127.0.0.1:1", service_timeout=2.0)
+    _, rep = tuner.serve(_requests())
+    assert not rep.via_service and rep.live_trials > 0
+    assert backend.measure_calls == rep.live_trials
+
+
+def test_online_autotuner_routes_with_unregistered_hardware(live_daemon):
+    """A replica labeled outside the spec registry (jax.default_backend()
+    says "cpu") still routes via the service: its pricing spec rides
+    along with the submit instead of silently falling back."""
+    backend, tuner = _serve_tuner(f"127.0.0.1:{live_daemon.port}",
+                                  hardware_name="cpu")
+    _, rep = tuner.serve(_requests())
+    assert rep.via_service and rep.live_trials == 0
+    assert backend.measure_calls == 0
+    # adopted into the local store under the replica's own label
+    assert tuner.store.get(tuner.space.name, rep.bucket, "cpu") is not None

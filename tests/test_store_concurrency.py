@@ -94,6 +94,68 @@ def test_save_merge_false_overwrites(tmp_path):
     assert len(final) == 1 and final.get("sp", "bB", "hw") is not None
 
 
+def _sharded_daemon_writer(root: str, tag: int, barrier) -> None:
+    """One 'daemon': opens the shared sharded corpus, then publishes
+    entries and revisioned model artifacts for keys overlapping the
+    other daemon's."""
+    from repro.service import ShardedConfigStore
+
+    store = ShardedConfigStore(root, n_shards=3)
+    barrier.wait(timeout=30)
+    # disjoint keys: each daemon's private tenants
+    store.put("sp", f"own{tag}", "hw", config={"X": tag},
+              runtime=1.0 + tag, trials=1)
+    # overlapping entry key: better runtime must win the merge
+    store.put("sp", "shared", "hw", config={"RT": tag},
+              runtime=2.0 - tag, trials=1)
+    # overlapping model key: HIGHER revision must win the merge
+    store.put_model_dict("sp", "shared", "hw",
+                         {"format": "repro.tppc_model", "tag": tag},
+                         revision=10 + tag)
+
+
+@pytest.mark.skipif(sys.platform == "win32", reason="needs fork + flock")
+def test_concurrent_daemons_share_sharded_corpus(tmp_path):
+    """Two daemon processes over one sharded corpus: disjoint keys both
+    survive, a conflicting entry resolves to the better runtime, and a
+    conflicting model artifact resolves to the highest revision."""
+    from repro.service import ShardedConfigStore
+
+    root = str(tmp_path / "corpus")
+    ctx = multiprocessing.get_context("fork")
+    barrier = ctx.Barrier(2)
+    procs = [ctx.Process(target=_sharded_daemon_writer,
+                         args=(root, tag, barrier)) for tag in (0, 1)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=60)
+        assert p.exitcode == 0
+    merged = ShardedConfigStore(root, n_shards=3)
+    assert len(merged) == 3            # own0, own1, shared
+    for tag in (0, 1):
+        assert merged.get("sp", f"own{tag}", "hw") is not None
+    shared = merged.get("sp", "shared", "hw")
+    assert shared is not None and shared.runtime == 1.0   # tag=1's result
+    model = merged.get_model_dict("sp", "shared", "hw")
+    assert model is not None and model["revision"] == 11  # highest revision
+    assert model["tag"] == 1
+
+
+@pytest.mark.skipif(sys.platform == "win32", reason="needs fork + flock")
+def test_sharded_corpus_shard_count_agreement(tmp_path):
+    """A second opener requesting a different shard count adopts the
+    recorded one — both processes must partition keys identically."""
+    from repro.service import ShardedConfigStore
+
+    root = str(tmp_path / "corpus")
+    first = ShardedConfigStore(root, n_shards=5)
+    second = ShardedConfigStore(root, n_shards=2)
+    assert first.n_shards == second.n_shards == 5
+    first.put("sp", "b", "hw", config={"X": 1}, runtime=1.0, trials=1)
+    assert ShardedConfigStore(root).get("sp", "b", "hw") is not None
+
+
 def test_save_refuses_to_merge_foreign_file(tmp_path):
     path = str(tmp_path / "store.json")
     with open(path, "w") as f:
