@@ -1,0 +1,329 @@
+"""Chaos harness: crash the tuning service mid-flight, prove nothing is lost.
+
+Three fault-injection experiments over the deterministic virtual worker
+pool (bit-reproducible trial counts), each asserting the crash-safety
+contract of the journaled ``TuningDaemon``:
+
+1. **Seeded mid-tuning kills** — 8 tenant requests (4 cold distinct
+   keys over 2 kernels × 2 hardware keys, then 4 repeats of the same
+   keys, all carrying idempotency keys) are driven to a seeded crash
+   point, the daemon is abandoned without ANY shutdown courtesy (the
+   in-process equivalent of SIGKILL: the write-ahead journal fsyncs per
+   append, so durability cannot depend on a clean exit), and a fresh
+   daemon recovers over the same journal + store.  Gates, per seeded
+   crash point: every request resolves, and total empirical trials
+   across both incarnations stay within ``--max-overhead`` (1.3×) of
+   the crash-free run — interrupted jobs must RESUME from their
+   journaled progress checkpoints, not retune from scratch.
+
+2. **Socket drop + retried submit** — against a live socket daemon, the
+   client's connection is severed mid-conversation; the reconnecting
+   retry of an idempotency-keyed submit must dedupe onto the original
+   request (no duplicate paid tuning run), and the handle must still
+   resolve.
+
+3. **Corrupted shard** — a shard of the corpus is bit-rotted on disk;
+   reopening must quarantine it (``<path>.corrupt``) instead of
+   crashing, recovery must rebuild the lost entries from the journal,
+   and a repeat submit must be answered store-first with zero trials.
+
+Writes ``BENCH_chaos.json``; exits non-zero when a gate is violated.
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos [--smoke]
+        [--out BENCH_chaos.json] [--max-overhead 1.3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import random
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+from repro.fleet import VirtualWorkerPool
+from repro.service import (ServiceClient, ShardedConfigStore, TuningDaemon)
+from repro.service import protocol as P
+
+SCHEMA = "repro.bench_chaos"
+VERSION = 1
+
+KERNELS = (("matmul", "2048"), ("transpose", "8192"))
+HW = ("tpu_v4", "tpu_v5e")
+WORKERS = 4
+
+
+# -- in-process harness (deterministic: no loop thread, no sockets) ------------
+def _daemon(root: str, budget: int, recover: bool = False) -> TuningDaemon:
+    d = TuningDaemon(
+        VirtualWorkerPool(workers=WORKERS),
+        ShardedConfigStore(os.path.join(root, "corpus"), n_shards=4),
+        default_trial_budget=budget, in_flight=WORKERS,
+        journal=os.path.join(root, "journal.jsonl"), recover=recover)
+    d.tuner.begin()
+    return d
+
+
+def _tick(d: TuningDaemon) -> None:
+    d._admit_pending()
+    d.tuner.step(max_wait=0.01)
+    d._meter()
+
+
+def _submit_all(d: TuningDaemon, budget: int, seed: int) -> List[str]:
+    """The 8-request tenant mix: 4 cold distinct keys + 4 repeats."""
+    rids = []
+    keys = [(k, inp, hw) for k, inp in KERNELS for hw in HW]
+    for wave in ("cold", "repeat"):
+        for i, (k, inp, hw) in enumerate(keys):
+            r = d.handle(P.validate_request(dict(
+                op="submit", kind="kernel", tenant=f"{wave}-{i}",
+                kernel=k, input=inp, hardware=hw, budget=budget,
+                seed=seed, idempotency_key=f"{wave}-{i}-{k}-{hw}")))
+            assert r["ok"], r
+            rids.append(r["request_id"])
+    return rids
+
+
+def _drive_to_resolution(d: TuningDaemon, rids: List[str],
+                         max_iters: int = 5000) -> None:
+    for _ in range(max_iters):
+        if all(d._records[r].state in ("done", "cancelled") for r in rids):
+            return
+        _tick(d)
+    raise AssertionError("daemon did not resolve all requests")
+
+
+def _fleet_trials(d: TuningDaemon) -> int:
+    return sum(js.account.steps for js in d.tuner._states)
+
+
+def run_crash_recovery(root: str, budget: int, seed: int,
+                       crash_points: int, max_overhead: float) -> Dict:
+    """Seeded mid-tuning kills; every request must resolve cheaply."""
+    # crash-free baseline: same 8 requests, same seed, no fault
+    base_root = os.path.join(root, "baseline")
+    os.makedirs(base_root)
+    d = _daemon(base_root, budget)
+    rids = _submit_all(d, budget, seed)
+    _drive_to_resolution(d, rids)
+    baseline_trials = _fleet_trials(d)
+    baseline_states = [d._records[r].state for r in rids]
+    d.journal.close()
+
+    rng = random.Random(seed)
+    runs = []
+    for trial_i in range(crash_points):
+        run_root = os.path.join(root, f"crash-{trial_i}")
+        os.makedirs(run_root)
+        d1 = _daemon(run_root, budget)
+        rids = _submit_all(d1, budget, seed)
+        # crash somewhere genuinely mid-tuning: after some progress,
+        # before the cold wave could possibly finish
+        crash_tick = rng.randint(2, max(3, budget * len(KERNELS) - 1))
+        for _ in range(crash_tick):
+            _tick(d1)
+        trials_1 = _fleet_trials(d1)
+        resolved_1 = sum(1 for r in rids
+                         if d1._records[r].state in ("done", "cancelled"))
+        d1.journal.close()       # the abandonment: no drain, no save
+
+        d2 = _daemon(run_root, budget, recover=True)
+        _drive_to_resolution(d2, rids)
+        trials_2 = _fleet_trials(d2)
+        total = trials_1 + trials_2
+        states = {r: d2._records[r].state for r in rids}
+        runs.append({
+            "crash_tick": crash_tick,
+            "trials_before_crash": trials_1,
+            "resolved_before_crash": resolved_1,
+            "trials_after_recovery": trials_2,
+            "total_trials": total,
+            "overhead_vs_crash_free": total / max(baseline_trials, 1),
+            "all_resolved": all(s == "done" for s in states.values()),
+            "recovery": {k: v for k, v in d2.recovery.items()
+                         if k != "journal"},
+        })
+        d2.journal.close()
+    worst = max(r["overhead_vs_crash_free"] for r in runs)
+    return {
+        "requests": 8,
+        "budget_per_job": budget,
+        "crash_points": crash_points,
+        "baseline_trials": baseline_trials,
+        "baseline_all_done": all(s == "done" for s in baseline_states),
+        "runs": runs,
+        "worst_overhead": worst,
+        "all_requests_resolve": all(r["all_resolved"] for r in runs),
+        "meets_overhead_target": worst <= max_overhead,
+    }
+
+
+def run_socket_drop(root: str, budget: int, seed: int) -> Dict:
+    """Severed connection mid-conversation; keyed resubmit must dedupe."""
+    d = TuningDaemon(
+        VirtualWorkerPool(workers=WORKERS),
+        ShardedConfigStore(os.path.join(root, "corpus"), n_shards=4),
+        default_trial_budget=budget, in_flight=WORKERS,
+        journal=os.path.join(root, "journal.jsonl"))
+    d.start()
+    try:
+        c = ServiceClient(d.address, retries=3, backoff=0.01,
+                          jitter_seed=seed)
+        r1 = c.submit_kernel("drop", "matmul", "tpu_v4", input="2048",
+                             budget=budget, seed=seed,
+                             idempotency_key="drop-1")
+        # sever the transport the rude way: the client's next call must
+        # transparently reconnect
+        c._sock.close()
+        r2 = c.submit_kernel("drop", "matmul", "tpu_v4", input="2048",
+                             budget=budget, seed=seed,
+                             idempotency_key="drop-1")
+        res = c.result(r1["request_id"], timeout=120)
+        health = c.health()
+        c.shutdown(drain=True)
+        d.wait(timeout=120)
+    finally:
+        d.pool.close()
+    return {
+        "first_request": r1["request_id"],
+        "retry_request": r2["request_id"],
+        "retry_deduped": bool(r2.get("deduped")),
+        "no_duplicate_run": r1["request_id"] == r2["request_id"],
+        "request_resolved": res["state"] == "done",
+        "trials": res["trials"],
+        "daemon_was_healthy": bool(health["live"] and health["ready"]),
+    }
+
+
+def run_shard_corruption(root: str, budget: int, seed: int) -> Dict:
+    """Bit-rot a shard; quarantine + journal-rebuild must cover it."""
+    d = _daemon(root, budget)
+    r = d.handle(P.validate_request(dict(
+        op="submit", kind="kernel", tenant="victim", kernel="matmul",
+        input="2048", hardware="tpu_v4", budget=budget, seed=seed)))
+    rid = r["request_id"]
+    _drive_to_resolution(d, [rid])
+    d.store.save()
+    d.journal.close()
+    corpus = os.path.join(root, "corpus")
+    shard_files = sorted(f for f in os.listdir(corpus)
+                         if f.startswith("shard-") and f.endswith(".json")
+                         and os.path.getsize(os.path.join(corpus, f)) > 0)
+    for f in shard_files:        # rot every populated shard
+        with open(os.path.join(corpus, f), "r+") as fh:
+            fh.seek(max(0, os.path.getsize(os.path.join(corpus, f)) // 2))
+            fh.write("\x00GARBAGE")
+
+    d2 = _daemon(root, budget, recover=True)
+    quarantined = list(d2.store.quarantined)
+    repeat = d2.handle(P.validate_request(dict(
+        op="submit", kind="kernel", tenant="after", kernel="matmul",
+        input="2048", hardware="tpu_v4", budget=budget, seed=seed)))
+    d2.journal.close()
+    return {
+        "shards_corrupted": len(shard_files),
+        "quarantined_files": len(quarantined),
+        "corrupt_markers_on_disk": sum(
+            1 for f in os.listdir(corpus) if ".corrupt" in f),
+        "repaired_entries": d2.recovery["repaired_entries"],
+        "repeat_state": repeat.get("state"),
+        "repeat_trials": repeat.get("trials"),
+        "repeat_answered_from_store": (repeat.get("state") == "done"
+                                       and repeat.get("trials") == 0),
+    }
+
+
+def run_benchmark(budget: int, seed: int, crash_points: int,
+                  max_overhead: float) -> Dict:
+    t0 = time.time()
+    with tempfile.TemporaryDirectory(prefix="bench_chaos.") as root:
+        crash = run_crash_recovery(os.path.join(root, "crash"), budget,
+                                   seed, crash_points, max_overhead)
+        drop = run_socket_drop(os.path.join(root, "drop"), budget, seed)
+        rot = run_shard_corruption(os.path.join(root, "rot"), budget, seed)
+
+    violations = []
+    if not crash["all_requests_resolve"]:
+        violations.append("a request failed to resolve after recovery")
+    if not crash["meets_overhead_target"]:
+        violations.append(
+            f"recovery overhead {crash['worst_overhead']:.3f}x exceeds "
+            f"{max_overhead}x crash-free trials")
+    if not (drop["retry_deduped"] and drop["no_duplicate_run"]):
+        violations.append("socket-drop resubmit was not deduped")
+    if not drop["request_resolved"]:
+        violations.append("socket-drop request did not resolve")
+    if not rot["repeat_answered_from_store"]:
+        violations.append("corrupted shard was not rebuilt from journal")
+    if rot["quarantined_files"] < 1:
+        violations.append("corrupted shard was not quarantined")
+
+    return {
+        "schema": SCHEMA,
+        "version": VERSION,
+        "config": {"budget": budget, "seed": seed,
+                   "crash_points": crash_points,
+                   "max_overhead": max_overhead, "workers": WORKERS},
+        "env": {"python": platform.python_version(),
+                "platform": platform.platform()},
+        "crash_recovery": crash,
+        "socket_drop": drop,
+        "shard_corruption": rot,
+        "summary": {
+            "all_requests_resolve": crash["all_requests_resolve"],
+            "worst_overhead": crash["worst_overhead"],
+            "meets_overhead_target": crash["meets_overhead_target"],
+            "socket_drop_deduped": drop["retry_deduped"],
+            "shard_rebuilt_from_journal":
+                rot["repeat_answered_from_store"],
+        },
+        "violations": violations,
+        "wall_s": round(time.time() - t0, 3),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--budget", type=int, default=12,
+                    help="per-request trial budget")
+    ap.add_argument("--seed", type=int, default=13)
+    ap.add_argument("--crash-points", type=int, default=5,
+                    help="seeded mid-tuning kill points to try")
+    ap.add_argument("--max-overhead", type=float, default=1.3,
+                    help="max total-trials ratio vs the crash-free run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: smaller budgets, fewer crash points")
+    args = ap.parse_args(argv)
+
+    budget = 6 if args.smoke else args.budget
+    crash_points = 3 if args.smoke else args.crash_points
+    result = run_benchmark(budget, args.seed, crash_points,
+                           args.max_overhead)
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    s = result["summary"]
+    print(f"wrote {args.out}")
+    print(f"crash recovery over {crash_points} seeded kill points: "
+          f"all resolve {'PASS' if s['all_requests_resolve'] else 'FAIL'}, "
+          f"worst overhead {s['worst_overhead']:.3f}x "
+          f"(target <= {args.max_overhead}x: "
+          f"{'PASS' if s['meets_overhead_target'] else 'FAIL'})")
+    print(f"socket drop: dedupe "
+          f"{'PASS' if s['socket_drop_deduped'] else 'FAIL'}")
+    print(f"shard corruption: journal rebuild "
+          f"{'PASS' if s['shard_rebuilt_from_journal'] else 'FAIL'}")
+    if result["violations"]:
+        print("TARGETS VIOLATED:\n  " + "\n  ".join(result["violations"]),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -213,7 +213,8 @@ class FleetTuner:
                  park_factor: Optional[float] = None,
                  in_flight_max: Optional[int] = None,
                  allow_empty: bool = False,
-                 on_job_done=None):
+                 on_job_done=None,
+                 on_trial=None):
         if not jobs and not allow_empty:
             raise ValueError("FleetTuner needs at least one job "
                              "(allow_empty=True for a service fleet that "
@@ -241,6 +242,11 @@ class FleetTuner:
         self.straggler_factor = straggler_factor
         self.park_factor = park_factor
         self.on_job_done = on_job_done
+        # fires after EVERY resolved empirical test with
+        # (job_name, trials_so_far, best_runtime) — the service journals
+        # these as progress checkpoints so a crashed daemon resumes an
+        # interrupted job with only its REMAINING budget
+        self.on_trial = on_trial
         self._uid = 0
         self._states: List[_JobState] = []
         self._by_name: Dict[str, _JobState] = {}
@@ -418,6 +424,9 @@ class FleetTuner:
         js.searcher.observe([Observation(
             index=index, runtime=runtime, counters=counters,
             step=js.account.steps, elapsed=js.account.elapsed)])
+        if self.on_trial is not None:
+            self.on_trial(js.job.name, js.account.steps,
+                          js.account.best_runtime)
         self._maybe_park(js)
         if js.pending == 0 and js.submitted >= js.job.budget:
             self._finalize(js)

@@ -61,6 +61,15 @@ def main(argv=None) -> int:
                     "periodic store GC (default: GC disabled)")
     ap.add_argument("--gc-every", type=float, default=60.0,
                     help="pool-seconds between GC passes")
+    ap.add_argument("--journal", default=None,
+                    help="write-ahead request journal path (default: "
+                    "<store-dir>/journal.jsonl when using a store dir)")
+    ap.add_argument("--no-journal", action="store_true",
+                    help="disable the request journal entirely")
+    ap.add_argument("--recover", action="store_true",
+                    help="replay the journal on startup: restore "
+                    "resolved requests, resubmit interrupted ones with "
+                    "their remaining budget, restore tenant spend")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -70,11 +79,18 @@ def main(argv=None) -> int:
     from repro.service.tenants import TenantManager
     from repro.tuning import ConfigStore
 
+    import os
     if args.store is not None:
         store = ConfigStore(args.store)
+        store_root = os.path.dirname(os.path.abspath(args.store))
     else:
-        store = ShardedConfigStore(args.store_dir or "tuning_corpus",
-                                   n_shards=args.shards)
+        store_root = args.store_dir or "tuning_corpus"
+        store = ShardedConfigStore(store_root, n_shards=args.shards)
+    journal = None
+    if not args.no_journal:
+        journal = args.journal or os.path.join(store_root, "journal.jsonl")
+    if args.recover and journal is None:
+        ap.error("--recover requires a journal (drop --no-journal)")
     pool = build_pool(args.backend, args.workers, args.devices_per_worker)
     gc_keep = None
     if args.gc_keep_hardware:
@@ -91,12 +107,16 @@ def main(argv=None) -> int:
         default_trial_budget=args.budget,
         max_active_jobs=args.max_active_jobs,
         gc_keep=gc_keep, gc_every_s=args.gc_every,
+        journal=journal, recover=args.recover,
         verbose=args.verbose,
         in_flight=args.in_flight, in_flight_max=args.in_flight_max,
         retries=args.retries, straggler_factor=args.straggler_factor,
         park_factor=args.park_factor,
         publish_models=not args.no_publish)
     host, port = daemon.start()
+    if daemon.recovery is not None:
+        print(f"[daemon] recovered: {json.dumps(daemon.recovery)}",
+              flush=True)
     print(f"[daemon] tuning service on {host}:{port} "
           f"({args.backend} backend, {pool.workers} workers, "
           f"store={store.path})", flush=True)

@@ -17,24 +17,32 @@ straight from the shared store with ZERO trials.
   fairness so no tenant starves while a cold tenant burns budget;
 * ``shards``    — ``ShardedConfigStore``: one corpus hash-partitioned
   across store files, so many daemons share it without lock convoys;
-* ``client``    — ``ServiceClient`` (blocking) and ``AsyncServiceClient``
-  (handle-based) speakers of the protocol.
+* ``client``    — ``ServiceClient`` (blocking, self-healing reconnect)
+  and ``AsyncServiceClient`` (handle-based) speakers of the protocol;
+* ``journal``   — ``RequestJournal``: the daemon's checksummed
+  write-ahead request journal; replaying it under ``--recover``
+  rebuilds the request table after a crash;
+* ``health``    — liveness/readiness probes behind the ``health`` op.
 
-CLI: ``python -m repro.launch.daemon``; the serve path joins with
+CLI: ``python -m repro.launch.daemon`` (``--journal``/``--recover`` for
+crash safety); the serve path joins with
 ``python -m repro.launch.serve --autotune --service HOST:PORT``.
 """
 from repro.service.client import (AsyncServiceClient, PendingTuning,
                                   ServiceClient, ServiceError,
                                   ServiceUnavailable)
 from repro.service.daemon import RequestRecord, TuningDaemon
+from repro.service.health import HealthReport
+from repro.service.journal import ReplayStats, RequestJournal
 from repro.service.protocol import (PROTOCOL, PROTOCOL_VERSION,
                                     ProtocolError, validate_request)
 from repro.service.shards import ShardedConfigStore
 from repro.service.tenants import AdmissionError, TenantManager, TenantState
 
 __all__ = [
-    "AdmissionError", "AsyncServiceClient", "PROTOCOL", "PROTOCOL_VERSION",
-    "PendingTuning", "ProtocolError", "RequestRecord", "ServiceClient",
-    "ServiceError", "ServiceUnavailable", "ShardedConfigStore",
-    "TenantManager", "TenantState", "TuningDaemon", "validate_request",
+    "AdmissionError", "AsyncServiceClient", "HealthReport", "PROTOCOL",
+    "PROTOCOL_VERSION", "PendingTuning", "ProtocolError", "ReplayStats",
+    "RequestJournal", "RequestRecord", "ServiceClient", "ServiceError",
+    "ServiceUnavailable", "ShardedConfigStore", "TenantManager",
+    "TenantState", "TuningDaemon", "validate_request",
 ]

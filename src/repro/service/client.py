@@ -8,16 +8,33 @@ restarts.  Failed responses raise ``ServiceError`` carrying the wire
 timeout) raise ``ServiceUnavailable`` — callers like the serve path
 catch *that* to fall back to in-process tuning.
 
+Self-healing: ``call`` distinguishes *request never sent* (connect or
+send failed — the daemon cannot have acted on it, always safe to retry)
+from *response never read* (sent, then the socket died — the daemon may
+have already executed it).  The former is retried up to ``retries``
+times with exponential backoff + jitter; the latter is retried only for
+idempotent operations — reads (``status``/``result``/``stats``/
+``health``/``ping``), operations safe to repeat (``cancel``,
+``shutdown``), and submits that carry an ``idempotency_key`` (the daemon
+dedupes those onto the original request, even across its own restarts).
+A bare submit whose response was lost raises ``ServiceUnavailable``
+rather than risk a duplicate paid tuning run.
+
 ``AsyncServiceClient`` layers fire-and-forget submits on top: every
 submit returns a ``PendingTuning`` handle whose ``result()`` blocks only
 when the answer is actually needed — the natural shape for a serving
-engine that wants tuning off its tick path.
+engine that wants tuning off its tick path.  Async submits generate an
+idempotency key automatically, so handles survive daemon crashes: the
+daemon recovers the request from its journal and ``result()`` rides out
+the restart inside its reconnect window.
 """
 from __future__ import annotations
 
+import random
 import socket
 import threading
 import time
+import uuid
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 from repro.service import protocol as P
@@ -53,12 +70,25 @@ def parse_address(address: Union[str, Tuple[str, int]]
 
 
 class ServiceClient:
-    """Blocking JSON-lines client for one tuning daemon."""
+    """Blocking JSON-lines client for one tuning daemon.
+
+    ``retries`` bounds reconnect attempts per call; waits grow
+    ``backoff * 2**attempt`` (capped at ``backoff_max``) with up to 50%
+    jitter so a daemon restart is not greeted by a synchronized thundering
+    herd of clients.  ``deadline`` per call (or the ``timeout`` socket
+    default) bounds total wall time including the backoff sleeps.
+    """
 
     def __init__(self, address: Union[str, Tuple[str, int]],
-                 timeout: float = 30.0):
+                 timeout: float = 30.0, retries: int = 3,
+                 backoff: float = 0.05, backoff_max: float = 2.0,
+                 jitter_seed: Optional[int] = None):
         self.host, self.port = parse_address(address)
         self.timeout = float(timeout)
+        self.retries = int(retries)
+        self.backoff = float(backoff)
+        self.backoff_max = float(backoff_max)
+        self._rng = random.Random(jitter_seed)
         self._lock = threading.Lock()
         self._sock: Optional[socket.socket] = None
         self._rfile = None
@@ -94,28 +124,67 @@ class ServiceClient:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def call(self, obj: Dict[str, Any]) -> Dict[str, Any]:
-        """One raw request→response round trip (no ok-checking)."""
-        with self._lock:
-            try:
-                if self._sock is None:
-                    self._connect()
-                self._sock.sendall(P.encode(obj))
-                line = P.read_line(self._rfile)
-            except (OSError, P.ProtocolError) as exc:
-                self._reset()
-                raise ServiceUnavailable(
-                    f"tuning service at {self.host}:{self.port} "
-                    f"unavailable: {exc}") from None
-            if line is None:
-                self._reset()
-                raise ServiceUnavailable(
-                    f"tuning service at {self.host}:{self.port} "
-                    f"closed the connection")
-            return P.decode(line)
+    def _sleep_backoff(self, attempt: int,
+                       deadline: Optional[float]) -> None:
+        wait = min(self.backoff_max, self.backoff * (2 ** attempt))
+        wait *= 1.0 + 0.5 * self._rng.random()
+        if deadline is not None:
+            wait = min(wait, max(0.0, deadline - time.monotonic()))
+        if wait > 0:
+            time.sleep(wait)
 
-    def _checked(self, obj: Dict[str, Any]) -> Dict[str, Any]:
-        resp = self.call(obj)
+    def _round_trip(self, obj: Dict[str, Any]) -> Dict[str, Any]:
+        """One attempt.  Raises ``(sent, exc)`` info via exception args."""
+        sent = False
+        try:
+            if self._sock is None:
+                self._connect()
+            self._sock.sendall(P.encode(obj))
+            sent = True
+            line = P.read_line(self._rfile)
+        except (OSError, P.ProtocolError) as exc:
+            self._reset()
+            raise _TransportFailure(sent, str(exc)) from None
+        if line is None:
+            self._reset()
+            raise _TransportFailure(True, "daemon closed the connection")
+        return P.decode(line)
+
+    def call(self, obj: Dict[str, Any], idempotent: bool = False,
+             deadline_s: Optional[float] = None) -> Dict[str, Any]:
+        """One request→response round trip (no ok-checking), self-healing.
+
+        ``idempotent=True`` allows retrying even after the request may
+        have reached the daemon (response lost); otherwise only
+        never-sent failures retry.  ``deadline_s`` caps total time spent
+        across attempts and backoff waits.
+        """
+        deadline = None if deadline_s is None \
+            else time.monotonic() + float(deadline_s)
+        last = "unavailable"
+        with self._lock:
+            for attempt in range(self.retries + 1):
+                if deadline is not None and time.monotonic() >= deadline:
+                    break
+                try:
+                    return self._round_trip(obj)
+                except _TransportFailure as tf:
+                    last = tf.detail
+                    retryable = idempotent or not tf.sent
+                    if not retryable or attempt >= self.retries:
+                        if tf.sent and not idempotent:
+                            last += (" (request may have been received; "
+                                     "not retrying a non-idempotent op)")
+                        break
+                    self._sleep_backoff(attempt, deadline)
+        raise ServiceUnavailable(
+            f"tuning service at {self.host}:{self.port} "
+            f"unavailable: {last}")
+
+    def _checked(self, obj: Dict[str, Any], idempotent: bool = False,
+                 deadline_s: Optional[float] = None) -> Dict[str, Any]:
+        resp = self.call(obj, idempotent=idempotent,
+                         deadline_s=deadline_s)
         if not resp.get("ok"):
             raise ServiceError(resp.get("error", "request failed"),
                                code=resp.get("code", P.E_INTERNAL),
@@ -124,19 +193,46 @@ class ServiceClient:
 
     # -- ops -------------------------------------------------------------------
     def ping(self) -> Dict[str, Any]:
-        return self._checked({"op": "ping"})
+        return self._checked({"op": "ping"}, idempotent=True)
+
+    def health(self) -> Dict[str, Any]:
+        """Daemon liveness/readiness report (see ``service.health``)."""
+        return self._checked({"op": "health"}, idempotent=True)
+
+    # the ops vocabulary calls this the heartbeat; same probe
+    heartbeat = health
+
+    def wait_ready(self, timeout: float = 30.0,
+                   poll: float = 0.1) -> Dict[str, Any]:
+        """Block until the daemon reports ``ready`` (or raise on timeout)."""
+        deadline = time.monotonic() + float(timeout)
+        last: Dict[str, Any] = {}
+        while time.monotonic() < deadline:
+            try:
+                last = self.health()
+                if last.get("ready"):
+                    return last
+            except ServiceUnavailable:
+                pass
+            time.sleep(poll)
+        raise ServiceUnavailable(
+            f"tuning service at {self.host}:{self.port} not ready "
+            f"after {timeout}s: {last.get('detail', 'unreachable')}")
 
     def submit_kernel(self, tenant: str, kernel: str, hardware: str,
                       input: Optional[str] = None,
                       budget: Optional[int] = None, seed: int = 0,
                       searcher: Optional[str] = None,
-                      tenant_budget_s: Optional[float] = None
+                      tenant_budget_s: Optional[float] = None,
+                      idempotency_key: Optional[str] = None
                       ) -> Dict[str, Any]:
         return self._checked({
             "op": "submit", "kind": "kernel", "tenant": tenant,
             "kernel": kernel, "input": input, "hardware": hardware,
             "budget": budget, "seed": seed, "searcher": searcher,
-            "tenant_budget_s": tenant_budget_s})
+            "tenant_budget_s": tenant_budget_s,
+            "idempotency_key": idempotency_key},
+            idempotent=idempotency_key is not None)
 
     def submit_serve(self, tenant: str, hardware: str, bucket: str,
                      bucket_shape: Sequence[int],
@@ -146,7 +242,8 @@ class ServiceClient:
                      stats: Optional[Dict[str, Any]] = None,
                      budget: Optional[int] = None, seed: int = 0,
                      tenant_budget_s: Optional[float] = None,
-                     hardware_spec: Optional[Dict[str, Any]] = None
+                     hardware_spec: Optional[Dict[str, Any]] = None,
+                     idempotency_key: Optional[str] = None
                      ) -> Dict[str, Any]:
         return self._checked({
             "op": "submit", "kind": "serve", "tenant": tenant,
@@ -157,25 +254,45 @@ class ServiceClient:
             "calib_n": calib_n, "stats": dict(stats or {}),
             "budget": budget, "seed": seed,
             "tenant_budget_s": tenant_budget_s,
-            "hardware_spec": hardware_spec})
+            "hardware_spec": hardware_spec,
+            "idempotency_key": idempotency_key},
+            idempotent=idempotency_key is not None)
 
     def status(self, request_id: str) -> Dict[str, Any]:
-        return self._checked({"op": "status", "request_id": request_id})
+        return self._checked({"op": "status", "request_id": request_id},
+                             idempotent=True)
 
     def result(self, request_id: str, timeout: Optional[float] = None,
-               poll: float = 0.05) -> Dict[str, Any]:
+               poll: float = 0.05,
+               reconnect_window: float = 60.0) -> Dict[str, Any]:
         """Block until the request resolves; return its result payload.
 
         Raises ``ServiceError(code="not_done")`` if the request was
-        cancelled, ``TimeoutError`` past ``timeout`` seconds.
+        cancelled, ``TimeoutError`` past ``timeout`` seconds.  A daemon
+        outage shorter than ``reconnect_window`` is ridden out: the poll
+        keeps retrying, so a handle survives a crash + ``--recover``
+        restart (the recovered daemon still knows the request id).
         """
         deadline = None if timeout is None \
             else time.monotonic() + float(timeout)
+        down_since: Optional[float] = None
         while True:
-            st = self.status(request_id)
+            try:
+                st = self.status(request_id)
+                down_since = None
+            except ServiceUnavailable:
+                now = time.monotonic()
+                if down_since is None:
+                    down_since = now
+                if now - down_since >= reconnect_window or \
+                        (deadline is not None and now >= deadline):
+                    raise
+                time.sleep(min(1.0, poll * 4))
+                continue
             if st["state"] == "done":
                 return self._checked({"op": "result",
-                                      "request_id": request_id})
+                                      "request_id": request_id},
+                                     idempotent=True)
             if st["state"] == "cancelled":
                 raise ServiceError(
                     st.get("error") or f"request {request_id} cancelled",
@@ -187,13 +304,25 @@ class ServiceClient:
             time.sleep(poll)
 
     def cancel(self, request_id: str) -> Dict[str, Any]:
-        return self._checked({"op": "cancel", "request_id": request_id})
+        return self._checked({"op": "cancel", "request_id": request_id},
+                             idempotent=True)
 
     def stats(self) -> Dict[str, Any]:
-        return self._checked({"op": "stats"})
+        return self._checked({"op": "stats"}, idempotent=True)
 
     def shutdown(self, drain: bool = True) -> Dict[str, Any]:
-        return self._checked({"op": "shutdown", "drain": drain})
+        return self._checked({"op": "shutdown", "drain": drain},
+                             idempotent=True)
+
+
+class _TransportFailure(Exception):
+    """Internal: one failed round trip; ``sent`` says whether the request
+    bytes left this process before the failure."""
+
+    def __init__(self, sent: bool, detail: str):
+        super().__init__(detail)
+        self.sent = sent
+        self.detail = detail
 
 
 class PendingTuning:
@@ -212,31 +341,44 @@ class PendingTuning:
         return self.status()["state"] in ("done", "cancelled")
 
     def result(self, timeout: Optional[float] = None,
-               poll: float = 0.05) -> Dict[str, Any]:
+               poll: float = 0.05,
+               reconnect_window: float = 60.0) -> Dict[str, Any]:
         return self.client.result(self.request_id, timeout=timeout,
-                                  poll=poll)
+                                  poll=poll,
+                                  reconnect_window=reconnect_window)
 
     def cancel(self) -> Dict[str, Any]:
         return self.client.cancel(self.request_id)
 
 
 class AsyncServiceClient:
-    """Handle-based wrapper: submits return ``PendingTuning``."""
+    """Handle-based wrapper: submits return ``PendingTuning``.
+
+    Every submit carries an idempotency key (caller's, or a generated
+    uuid), so a retried/resubmitted request can never fork into two paid
+    tuning runs and handles stay valid across daemon crash-recovery.
+    """
 
     def __init__(self, address: Union[str, Tuple[str, int]],
-                 timeout: float = 30.0):
-        self.client = ServiceClient(address, timeout=timeout)
+                 timeout: float = 30.0, **client_kwargs):
+        self.client = ServiceClient(address, timeout=timeout,
+                                    **client_kwargs)
 
     def submit_kernel(self, *args, **kwargs) -> PendingTuning:
+        kwargs.setdefault("idempotency_key", uuid.uuid4().hex)
         resp = self.client.submit_kernel(*args, **kwargs)
         return PendingTuning(self.client, resp["request_id"], resp)
 
     def submit_serve(self, *args, **kwargs) -> PendingTuning:
+        kwargs.setdefault("idempotency_key", uuid.uuid4().hex)
         resp = self.client.submit_serve(*args, **kwargs)
         return PendingTuning(self.client, resp["request_id"], resp)
 
     def stats(self) -> Dict[str, Any]:
         return self.client.stats()
+
+    def health(self) -> Dict[str, Any]:
+        return self.client.health()
 
     def close(self) -> None:
         self.client.close()

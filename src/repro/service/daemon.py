@@ -26,18 +26,35 @@ state under ``self._lock``; the single loop thread holds the same lock
 across ``admit → fleet.step → meter``, so fleet internals are never
 entered concurrently.  ``step`` bounds its wait (``max_wait``) to keep
 submit latency low while the pool is busy.
+
+Crash safety: with a ``journal`` configured, every request state
+transition (and every tenant budget charge) is appended to a
+write-ahead ``RequestJournal`` BEFORE the acknowledging response is
+sent.  A daemon restarted over the same journal with ``recover=True``
+replays it: requests that finished are answered from the store,
+interrupted ones are resubmitted with only their REMAINING trial
+budget (progress checkpoints journal per completed trial), tenant
+spend is restored so budgets survive the restart, and journaled
+results missing from the store (e.g. a quarantined shard) are re-put.
+Submits carrying an ``idempotency_key`` dedupe onto the original
+request across retries and restarts.
 """
 from __future__ import annotations
 
 import dataclasses
 import socket
 import threading
+import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 from repro.core.account import AccountSnapshot
 from repro.fleet import FleetTuner, JobResult, TuningJob
+from repro.service import health as H
 from repro.service import protocol as P
+from repro.service.journal import (EV_CANCELLED, EV_CHARGE, EV_DAEMON_START,
+                                   EV_DONE, EV_PROGRESS, EV_START, EV_SUBMIT,
+                                   RequestJournal)
 from repro.service.tenants import AdmissionError, TenantManager
 from repro.tuning.store import store_key
 
@@ -67,6 +84,9 @@ class RequestRecord:
     followers: List[str] = dataclasses.field(default_factory=list)
     result: Optional[Dict[str, Any]] = None
     error: Optional[str] = None
+    idem: Optional[str] = None    # client-supplied idempotency key
+    recovered: bool = False       # restored/resubmitted by journal replay
+    resumed_trials: int = 0       # trials checkpointed before the crash
 
     def status_dict(self) -> Dict[str, Any]:
         return {
@@ -74,7 +94,7 @@ class RequestRecord:
             "kind": self.kind, "key": self.key, "state": self.state,
             "trials": self.trials, "spent_s": round(self.spent_s, 6),
             "source": self.source, "primary": self.primary,
-            "error": self.error,
+            "error": self.error, "recovered": self.recovered,
         }
 
 
@@ -122,6 +142,8 @@ class TuningDaemon:
                  step_wait: float = 0.05,
                  gc_keep: Optional[Dict[str, Any]] = None,
                  gc_every_s: float = 60.0,
+                 journal: Optional[Union[str, RequestJournal]] = None,
+                 recover: bool = False,
                  verbose: bool = False,
                  **fleet_kwargs):
         self.pool = pool
@@ -138,6 +160,7 @@ class TuningDaemon:
         self.verbose = verbose
         self.tuner = FleetTuner([], pool, store=store, allow_empty=True,
                                 on_job_done=self._on_job_done,
+                                on_trial=self._on_trial,
                                 **fleet_kwargs)
         self.final_report = None
         self._lock = threading.RLock()
@@ -148,9 +171,24 @@ class TuningDaemon:
         self._records: Dict[str, RequestRecord] = {}
         self._pending: deque = deque()          # rids waiting for the fleet
         self._by_key: Dict[str, str] = {}       # active primary per key
+        self._idem: Dict[Tuple[str, str], str] = {}   # (tenant, key) -> rid
         self._server: Optional[socket.socket] = None
         self._threads: List[threading.Thread] = []
+        self._loop_thread: Optional[threading.Thread] = None
+        self._heartbeat: Optional[float] = None
         self._last_gc = 0.0
+        self.journal: Optional[RequestJournal] = None
+        if isinstance(journal, RequestJournal):
+            self.journal = journal
+        elif journal is not None:
+            self.journal = RequestJournal(journal)
+        self.recovery: Optional[Dict[str, Any]] = None
+        if recover:
+            if self.journal is None:
+                raise ValueError("recover=True requires a journal")
+            self._recover()
+        if self.journal is not None:
+            self.journal.append(EV_DAEMON_START, recovered=bool(recover))
 
     # -- lifecycle -------------------------------------------------------------
     def start(self) -> Tuple[str, int]:
@@ -163,6 +201,8 @@ class TuningDaemon:
             t = threading.Thread(target=fn, name=name, daemon=True)
             t.start()
             self._threads.append(t)
+            if name == "service-fleet":
+                self._loop_thread = t
         if self.verbose:
             print(f"[service] listening on {self.host}:{self.port}")
         return self.host, self.port
@@ -215,6 +255,7 @@ class TuningDaemon:
     # -- the fleet loop --------------------------------------------------------
     def _fleet_loop(self) -> None:
         while True:
+            self._heartbeat = time.monotonic()
             with self._lock:
                 if not self._draining:
                     self._admit_pending()
@@ -230,6 +271,8 @@ class TuningDaemon:
             self.final_report = self.tuner.finish()
             if getattr(self.store, "autosave", True) is False:
                 self.store.save()
+            if self.journal is not None:
+                self.journal.sync()
         if self._server is not None:
             # close() alone does not wake a thread blocked in accept();
             # shutdown() forces it out with an error first
@@ -244,6 +287,11 @@ class TuningDaemon:
         self._stopped.set()
         if self.verbose:
             print("[service] stopped")
+
+    def _j(self, ev: str, **fields: Any) -> None:
+        """Append one write-ahead journal record (no-op when disabled)."""
+        if self.journal is not None:
+            self.journal.append(ev, **fields)
 
     def _admit_pending(self) -> None:
         """Move queued requests into the fleet, least-spent tenant first."""
@@ -277,6 +325,7 @@ class TuningDaemon:
             acct = self.tuner.job_account(rid)
             rec.snap = acct.snapshot() if acct is not None else None
             rec.state = RUNNING
+            self._j(EV_START, rid=rid)
             ts.queued -= 1
             ts.active += 1
             active += 1
@@ -296,6 +345,9 @@ class TuningDaemon:
                 ts = self.tenants.get(rec.tenant)
                 if ts is not None:
                     self.tenants.charge(ts, delta.busy)
+                if delta.busy > 0:
+                    self._j(EV_CHARGE, tenant=rec.tenant, rid=rec.rid,
+                            s=round(delta.busy, 9))
                 rec.spent_s += delta.busy
                 rec.snap = acct.snapshot()
                 rec.trials = rec.snap.steps
@@ -325,19 +377,22 @@ class TuningDaemon:
             rec.state = CANCELLED
             rec.error = "cancelled before completion" if jr.cancelled \
                 else "every empirical test failed"
+            self._j(EV_CANCELLED, rid=rec.rid, error=rec.error)
             for frid in rec.followers:
                 self._resolve_cancelled_rid(
                     frid, f"primary {rec.rid} was cancelled")
         else:
             rec.state = DONE
             rec.source = "tuned"
-            rec.trials = jr.trials
+            rec.trials = jr.trials + rec.resumed_trials
             rec.result = {
                 "key": rec.key, "config": dict(jr.best_config),
-                "runtime": jr.best_runtime, "trials": jr.trials,
+                "runtime": jr.best_runtime, "trials": rec.trials,
                 "searcher": jr.searcher, "warm_started": jr.warm_started,
                 "source": "tuned",
             }
+            self._j(EV_DONE, rid=rec.rid, result=rec.result,
+                    spent=round(rec.spent_s, 9))
             for frid in rec.followers:
                 frec = self._records.get(frid)
                 if frec is None or frec.state == CANCELLED:
@@ -350,6 +405,8 @@ class TuningDaemon:
                 frec.source = "coalesced"
                 frec.result = dict(rec.result, source="coalesced",
                                    trials=0)
+                self._j(EV_DONE, rid=frid, result=frec.result,
+                        spent=round(frec.spent_s, 9))
         if self.verbose:
             print(f"[service] {rec.rid} {rec.state} "
                   f"(trials={rec.trials}, spent={rec.spent_s:.3f}s)")
@@ -362,9 +419,23 @@ class TuningDaemon:
         ts = self.tenants.get(rec.tenant)
         if ts is not None:
             self.tenants.charge(ts, delta.busy)
+        if delta.busy > 0:
+            self._j(EV_CHARGE, tenant=rec.tenant, rid=rec.rid,
+                    s=round(delta.busy, 9))
         rec.spent_s += delta.busy
         rec.snap = acct.snapshot()
         rec.trials = rec.snap.steps
+
+    def _on_trial(self, job_name: str, trials: int, best: float) -> None:
+        """Fleet per-trial hook: journal a progress checkpoint so a
+        crashed daemon resumes this request with its REMAINING budget
+        (daemon jobs are named after their rid)."""
+        rec = self._records.get(job_name)
+        if rec is None:
+            return
+        self._j(EV_PROGRESS, rid=rec.rid,
+                trials=int(trials) + rec.resumed_trials,
+                best=(best if best != float("inf") else None))
 
     def _resolve_cancelled_rid(self, rid: str, why: str) -> None:
         rec = self._records.get(rid)
@@ -376,6 +447,7 @@ class TuningDaemon:
                 ts.queued -= 1
         rec.state = CANCELLED
         rec.error = why
+        self._j(EV_CANCELLED, rid=rid, error=why)
         self._by_key.pop(rec.key, None)
         if rec.primary is not None:
             prec = self._records.get(rec.primary)
@@ -400,6 +472,8 @@ class TuningDaemon:
                 return self._op_cancel(req)
             if op == "stats":
                 return self._op_stats()
+            if op == "health":
+                return self._op_health()
             if op == "shutdown":
                 threading.Thread(target=self.shutdown,
                                  kwargs={"drain": req["drain"]},
@@ -412,6 +486,15 @@ class TuningDaemon:
         return f"r{self._seq:06d}"
 
     def _op_submit(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        # idempotent resubmit: a key we have seen resolves to the
+        # ORIGINAL request, whatever state it is in — checked before
+        # draining/admission so a crash-retry is never double-charged
+        # or bounced by queue caps its first attempt already passed
+        idem = req.get("idempotency_key")
+        if idem is not None:
+            prev = self._idem.get((req["tenant"], idem))
+            if prev is not None and prev in self._records:
+                return self._dedupe_response(self._records[prev])
         if self._draining:
             return P.err("daemon is draining", code=P.E_DRAINING)
         try:
@@ -427,9 +510,15 @@ class TuningDaemon:
             return P.err(str(exc), code=exc.code)
         rid = self._next_rid()
         rec = RequestRecord(rid=rid, tenant=req["tenant"],
-                            kind=req["kind"], key=key, job=job)
+                            kind=req["kind"], key=key, job=job, idem=idem)
         self._records[rid] = rec
+        if idem is not None:
+            self._idem[(req["tenant"], idem)] = rid
         ts.submitted += 1
+        # write-ahead: the accepted submit (with its full validated
+        # payload — enough to rebuild the job after a crash) is durable
+        # BEFORE the client sees the request id
+        self._j(EV_SUBMIT, rid=rid, key=key, idem=idem, req=req)
         # store-first: a known key is answered with zero trials
         space, bucket, hw = key.split("|")
         entry = self.store.get(space, bucket, hw)
@@ -441,6 +530,7 @@ class TuningDaemon:
                           "trials": 0, "entry_trials": entry.trials,
                           "source": "store"}
             ts.store_hits += 1
+            self._j(EV_DONE, rid=rid, result=rec.result, spent=0.0)
             return P.ok(request_id=rid, state=DONE, **rec.result)
         # coalesce onto an identical request already in flight
         primary = self._by_key.get(key)
@@ -457,6 +547,13 @@ class TuningDaemon:
         ts.queued += 1
         self._wake.set()
         return P.ok(request_id=rid, state=QUEUED)
+
+    def _dedupe_response(self, rec: RequestRecord) -> Dict[str, Any]:
+        """Answer a retried submit from the original request's state."""
+        if rec.state == DONE and rec.result is not None:
+            return P.ok(request_id=rec.rid, state=DONE, deduped=True,
+                        **rec.result)
+        return P.ok(request_id=rec.rid, state=rec.state, deduped=True)
 
     def _build_job(self, req: Dict[str, Any]) -> Tuple[TuningJob, str]:
         budget = req["budget"] if req["budget"] is not None \
@@ -574,7 +671,181 @@ class TuningDaemon:
             requests=by_state,
             store_entries=len(self.store),
             gc=self.gc_stats,
+            journal=(None if self.journal is None
+                     else {"path": self.journal.path,
+                           "appends": self.journal.appends,
+                           "fsync_lag_s": round(
+                               self.journal.fsync_lag_s, 6)}),
+            recovery=self.recovery,
         )
+
+    def _op_health(self) -> Dict[str, Any]:
+        """Liveness + readiness (the ``health``/heartbeat op).
+
+        In-process driving (tests, recovery drills) has no loop thread;
+        liveness then reports on the daemon state alone."""
+        alive = self._loop_thread.is_alive() \
+            if self._loop_thread is not None else not self._stopped.is_set()
+        age = None if self._heartbeat is None \
+            else time.monotonic() - self._heartbeat
+        rep = H.assess(age, alive, self._draining, self.store,
+                       self.journal)
+        return P.ok(**rep.to_dict())
+
+    # -- crash recovery --------------------------------------------------------
+    def _recover(self) -> None:
+        """Rebuild daemon state by replaying the write-ahead journal.
+
+        Runs in the constructor, before any socket or loop exists:
+
+        * resolved requests (``done``/``cancelled``) are restored so old
+          request ids keep answering ``status``/``result``;
+        * journaled results MISSING from the store are re-put (this is
+          how a quarantined shard gets rebuilt from the journal);
+        * unfinished requests are resubmitted through ``_build_job``
+          with their remaining trial budget (journaled ``progress``
+          checkpoints), re-coalescing identical keys; a request whose
+          key reached the store before the crash is answered from it;
+        * tenant budgets/spend are restored from ``submit`` payloads
+          and ``charge`` records, so a restart cannot reset anyone's
+          allowance.
+        """
+        events, jstats = self.journal.replay()
+        seen: Dict[str, Dict[str, Any]] = {}
+        order: List[str] = []
+        spend: Dict[str, float] = {}
+        for ev in events:
+            kind = ev.get("ev")
+            rid = ev.get("rid")
+            if kind == EV_SUBMIT and rid is not None:
+                seen[rid] = {"req": ev.get("req") or {},
+                             "key": ev.get("key"),
+                             "idem": ev.get("idem"),
+                             "state": QUEUED, "trials": 0,
+                             "spent": 0.0, "result": None, "error": None}
+                if rid not in order:
+                    order.append(rid)
+                try:
+                    self._seq = max(self._seq, int(rid.lstrip("r")))
+                except ValueError:
+                    pass
+            elif kind == EV_CHARGE:
+                t = ev.get("tenant")
+                if t is not None:
+                    spend[t] = spend.get(t, 0.0) + float(ev.get("s", 0.0))
+                if rid in seen:
+                    seen[rid]["spent"] += float(ev.get("s", 0.0))
+            elif kind == EV_PROGRESS and rid in seen:
+                seen[rid]["trials"] = int(ev.get("trials", 0))
+            elif kind == EV_DONE and rid in seen:
+                seen[rid]["state"] = DONE
+                seen[rid]["result"] = ev.get("result")
+            elif kind == EV_CANCELLED and rid in seen:
+                seen[rid]["state"] = CANCELLED
+                seen[rid]["error"] = ev.get("error")
+        stats = {"requests": len(order), "restored_done": 0,
+                 "restored_cancelled": 0, "answered_from_store": 0,
+                 "resubmitted": 0, "rebuild_failed": 0,
+                 "repaired_entries": 0, "journal": jstats.to_dict()}
+        # tenants first: budgets + spend survive the restart
+        for rid in order:
+            req = seen[rid]["req"]
+            if req.get("tenant"):
+                try:
+                    ts = self.tenants.admit(
+                        req["tenant"], budget_s=req.get("tenant_budget_s"))
+                    ts.submitted += 1
+                except AdmissionError:
+                    pass             # smaller table post-restart: best effort
+        for tenant, s in spend.items():
+            ts = self.tenants.get(tenant)
+            if ts is not None:
+                self.tenants.charge(ts, s)
+        # repair the store from journaled results it is missing (e.g. a
+        # shard quarantined by a checksum failure)
+        for rid in order:
+            res = seen[rid]["result"]
+            if seen[rid]["state"] != DONE or not res \
+                    or not res.get("config") or not seen[rid]["key"]:
+                continue
+            space, bucket, hw = seen[rid]["key"].split("|")
+            if self.store.get(space, bucket, hw) is None:
+                self.store.put(space, bucket, hw,
+                               config=dict(res["config"]),
+                               runtime=float(res["runtime"]),
+                               trials=int(res.get("trials", 0)),
+                               meta={"recovered": True, "rid": rid})
+                stats["repaired_entries"] += 1
+        # rebuild the request table
+        for rid in order:
+            s = seen[rid]
+            req = s["req"]
+            rec = RequestRecord(
+                rid=rid, tenant=req.get("tenant", "?"),
+                kind=req.get("kind", "kernel"), key=s["key"] or "?|?|?",
+                idem=s["idem"], recovered=True)
+            self._records[rid] = rec
+            if s["idem"] is not None and req.get("tenant"):
+                self._idem[(req["tenant"], s["idem"])] = rid
+            ts = self.tenants.get(rec.tenant)
+            if s["state"] == DONE:
+                rec.state = DONE
+                rec.result = s["result"]
+                rec.source = (s["result"] or {}).get("source")
+                rec.trials = int((s["result"] or {}).get("trials", 0))
+                rec.spent_s = s["spent"]
+                stats["restored_done"] += 1
+                continue
+            if s["state"] == CANCELLED:
+                rec.state = CANCELLED
+                rec.error = s["error"] or "cancelled before daemon crash"
+                stats["restored_cancelled"] += 1
+                continue
+            # unfinished at crash time: answer from the store if its key
+            # landed, else resubmit with the remaining budget
+            rec.spent_s = s["spent"]
+            rec.resumed_trials = s["trials"]
+            space, bucket, hw = rec.key.split("|")
+            entry = self.store.get(space, bucket, hw)
+            if entry is not None:
+                rec.state = DONE
+                rec.source = "store"
+                rec.result = {"key": rec.key,
+                              "config": dict(entry.config),
+                              "runtime": entry.runtime, "trials": 0,
+                              "entry_trials": entry.trials,
+                              "source": "store"}
+                if ts is not None:
+                    ts.store_hits += 1
+                self._j(EV_DONE, rid=rid, result=rec.result,
+                        spent=round(rec.spent_s, 9))
+                stats["answered_from_store"] += 1
+                continue
+            try:
+                job, _ = self._build_job(req)
+            except (P.ProtocolError, KeyError, TypeError) as exc:
+                rec.state = CANCELLED
+                rec.error = f"recovery could not rebuild job: {exc}"
+                self._j(EV_CANCELLED, rid=rid, error=rec.error)
+                stats["rebuild_failed"] += 1
+                continue
+            job.budget = max(1, job.budget - rec.resumed_trials)
+            rec.job = job
+            primary = self._by_key.get(rec.key)
+            if primary is not None:
+                self._records[primary].followers.append(rid)
+                rec.primary = primary
+                rec.source = "coalesced"
+            else:
+                job.name = rid
+                self._by_key[rec.key] = rid
+                self._pending.append(rid)
+            if ts is not None:
+                ts.queued += 1
+            stats["resubmitted"] += 1
+        self.recovery = stats
+        if self.verbose:
+            print(f"[service] recovery: {stats}")
 
     # -- socket plumbing -------------------------------------------------------
     def _accept_loop(self) -> None:

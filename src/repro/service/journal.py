@@ -1,0 +1,188 @@
+"""``RequestJournal`` — the daemon's write-ahead request journal.
+
+The store persists *outcomes*; the journal persists *promises*.  Every
+wire-visible state transition of every request — accepted, dispatched,
+partial-progress checkpoints, resolved, cancelled — plus every tenant
+budget charge is appended to a JSON-lines file BEFORE the response that
+acknowledges it goes back to the client (write-ahead discipline).  A
+daemon that dies mid-tuning can then be restarted with ``--recover``:
+replaying the journal reconstructs the request table, answers
+already-finished requests from the store, resubmits interrupted jobs
+with their remaining trial budget, and restores tenant spend — so a
+crash costs at most the in-flight work, never the whole run.
+
+Record format (one JSON object per line)::
+
+    {"seq": 17, "ev": "submit", "rid": "r000003", ..., "crc": 2974301200}
+
+``seq`` is monotonic per journal file; ``crc`` is the crc32 of the
+record's canonical JSON *without* the crc field, so truncated or
+bit-rotted lines are detected on replay.  Replay is forgiving by design:
+a torn final record (the classic SIGKILL-mid-write artifact) is dropped
+and counted, an interior record failing its checksum is skipped and
+counted — the daemon must come back up on the journal a crash actually
+left behind, not on the journal we wish it had.
+
+Event vocabulary (the ``ev`` field)::
+
+    daemon_start   one per daemon boot ({"recovered": bool})
+    submit         accepted request: validated request payload + rid +
+                   idempotency key (enough to rebuild the TuningJob)
+    start          request entered the fleet
+    progress       per-request checkpoint: trials completed so far
+    charge         tenant budget charge (worker-seconds delta)
+    done           request resolved: full result payload
+    cancelled      request resolved without a result: reason
+
+Appends are flushed per record and (by default) fsynced, so a SIGKILL
+loses at most the record being written; ``fsync=False`` trades that for
+lower latency (a process kill still loses nothing — the OS holds the
+page — only a machine crash can).  ``fsync_lag_s`` reports how long the
+oldest unsynced record has been exposed, which the ``health`` op
+surfaces as a readiness signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+FORMAT = "repro.tuning-journal"
+VERSION = 1
+
+# the ``ev`` values replay understands; unknown events are skipped (a
+# newer daemon's journal should degrade, not crash, an older one)
+EV_DAEMON_START = "daemon_start"
+EV_SUBMIT = "submit"
+EV_START = "start"
+EV_PROGRESS = "progress"
+EV_CHARGE = "charge"
+EV_DONE = "done"
+EV_CANCELLED = "cancelled"
+
+
+def record_crc(record: Dict[str, Any]) -> int:
+    """crc32 over the record's canonical JSON, excluding ``crc`` itself."""
+    body = {k: v for k, v in record.items() if k != "crc"}
+    return zlib.crc32(json.dumps(body, separators=(",", ":"),
+                                 sort_keys=True).encode("utf-8"))
+
+
+@dataclasses.dataclass
+class ReplayStats:
+    """What a journal replay found (and what it had to forgive)."""
+
+    events: int = 0          # well-formed records yielded
+    corrupt: int = 0         # interior records failing JSON/crc, skipped
+    torn: int = 0            # truncated tail records dropped (SIGKILL scar)
+    last_seq: int = 0        # highest seq seen (appends continue after it)
+
+    def to_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def replay(path: str) -> Tuple[List[Dict[str, Any]], ReplayStats]:
+    """Read every verifiable record from a journal file, in order.
+
+    Never raises on a damaged journal: malformed/bad-crc lines are
+    skipped (counted ``corrupt``, or ``torn`` when they form the
+    file's tail — the expected scar of a kill mid-append).
+    """
+    events: List[Dict[str, Any]] = []
+    stats = ReplayStats()
+    if not os.path.exists(path):
+        return events, stats
+    bad_streak = 0           # trailing bad lines -> torn, interior -> corrupt
+    with open(path, "rb") as f:
+        for raw in f:
+            try:
+                rec = json.loads(raw.decode("utf-8"))
+                if not isinstance(rec, dict) \
+                        or rec.get("crc") != record_crc(rec):
+                    raise ValueError("bad checksum")
+            except (ValueError, UnicodeDecodeError):
+                bad_streak += 1
+                continue
+            stats.corrupt += bad_streak   # bad lines had good ones after
+            bad_streak = 0
+            stats.events += 1
+            stats.last_seq = max(stats.last_seq, int(rec.get("seq", 0)))
+            events.append(rec)
+    stats.torn = bad_streak
+    return events, stats
+
+
+class RequestJournal:
+    """Append-only, checksummed JSON-lines journal bound to one file.
+
+    ``append`` is the only mutator; it is NOT thread-safe on its own —
+    the daemon calls it under its request lock, which also guarantees
+    journal order matches the order responses were issued.
+    """
+
+    def __init__(self, path: str, fsync: bool = True):
+        self.path = path
+        self.fsync = fsync
+        d = os.path.dirname(os.path.abspath(path))
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._seq = 0
+        self._f = open(path, "ab")
+        self._appends = 0
+        self._oldest_unsynced: Optional[float] = None
+
+    def replay(self) -> Tuple[List[Dict[str, Any]], ReplayStats]:
+        """Replay this journal's existing records; future appends
+        continue after the highest sequence number found."""
+        events, stats = replay(self.path)
+        self._seq = stats.last_seq
+        return events, stats
+
+    def append(self, ev: str, **fields: Any) -> Dict[str, Any]:
+        self._seq += 1
+        record: Dict[str, Any] = {"seq": self._seq, "ev": ev,
+                                  "t": round(time.time(), 6)}
+        record.update(fields)
+        record["crc"] = record_crc(record)
+        self._f.write((json.dumps(record, separators=(",", ":"),
+                                  sort_keys=True) + "\n").encode("utf-8"))
+        self._f.flush()
+        self._appends += 1
+        if self.fsync:
+            os.fsync(self._f.fileno())
+            self._oldest_unsynced = None
+        elif self._oldest_unsynced is None:
+            self._oldest_unsynced = time.monotonic()
+        return record
+
+    def sync(self) -> None:
+        """Force the unsynced tail to disk (no-op when already clean)."""
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._oldest_unsynced = None
+
+    @property
+    def appends(self) -> int:
+        return self._appends
+
+    @property
+    def fsync_lag_s(self) -> float:
+        """Seconds the oldest unsynced record has been exposed (0: clean)."""
+        if self._oldest_unsynced is None:
+            return 0.0
+        return time.monotonic() - self._oldest_unsynced
+
+    def close(self) -> None:
+        try:
+            self._f.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "RequestJournal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -19,8 +19,17 @@ Ops
 ``result``    fetch the final entry for a *done* request.
 ``cancel``    abandon a queued or running request.
 ``stats``     daemon-wide snapshot: fleet progress, tenants, store size.
+``health``    liveness + readiness: fleet loop alive, store writable,
+              journal fsync lag, draining flag (heartbeat probe).
 ``shutdown``  stop accepting work; ``drain=true`` (default) finishes
               in-flight trials first.
+
+Crash safety (protocol v2): a ``submit`` may carry a client-supplied
+``idempotency_key`` (unique per logical request, per tenant).  A retried
+submit after a timeout, socket drop, or daemon restart then DEDUPES onto
+the original request instead of spawning a duplicate tuning run — the
+response echoes the original request id with ``deduped: true``.  Without
+a key, a retried submit is a new request (at-least-once semantics).
 
 The protocol is deliberately version-tagged and flat (no nesting beyond
 one level) so non-Python tenants can speak it with any JSON library.
@@ -31,12 +40,13 @@ import json
 from typing import Any, Dict, List, Optional, Tuple
 
 PROTOCOL = "repro.tuning-service"
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2     # v2: idempotency_key on submit + health op
 
 # Guard against a hostile/broken peer streaming an unbounded line.
 MAX_LINE_BYTES = 1 << 20
 
-OPS = ("ping", "submit", "status", "result", "cancel", "stats", "shutdown")
+OPS = ("ping", "submit", "status", "result", "cancel", "stats", "health",
+       "shutdown")
 SUBMIT_KINDS = ("kernel", "serve")
 
 # Machine-checkable error codes (the ``code`` field of failed responses).
@@ -142,9 +152,15 @@ def _validate_submit(obj: Dict[str, Any]) -> Dict[str, Any]:
         # sight; None leaves whatever the daemon already knows.
         "tenant_budget_s": _want(obj, "tenant_budget_s", (int, float),
                                  required=False),
+        # Client-supplied dedupe token: a retried submit carrying the
+        # same (tenant, key) resolves to the ORIGINAL request.
+        "idempotency_key": _want(obj, "idempotency_key", (str,),
+                                 required=False),
     }
     if not req["tenant"]:
         raise ProtocolError("field 'tenant': must be non-empty")
+    if req["idempotency_key"] is not None and not req["idempotency_key"]:
+        raise ProtocolError("field 'idempotency_key': must be non-empty")
     if req["budget"] is not None and req["budget"] <= 0:
         raise ProtocolError("field 'budget': must be positive")
     if kind == "kernel":
@@ -196,18 +212,22 @@ def validate_request(obj: Dict[str, Any]) -> Dict[str, Any]:
         return {"op": op,
                 "drain": _want(obj, "drain", (bool,), required=False,
                                default=True)}
-    return {"op": op}  # ping / stats carry no payload
+    return {"op": op}  # ping / stats / health carry no payload
 
 
-def read_line(sock_file) -> Optional[bytes]:
-    """Read one protocol line from a file-like socket wrapper.
+def read_line(sock_file, max_bytes: int = MAX_LINE_BYTES
+              ) -> Optional[bytes]:
+    """Read one protocol line from a file-like socket wrapper, bounded.
 
     Returns ``None`` on clean EOF.  Raises ``ProtocolError`` when the
-    peer exceeds the line-size guard.
+    peer exceeds ``max_bytes`` before terminating the line — the bound
+    caps how much a misbehaving client can make the reader buffer (the
+    daemon answers ``E_BAD_REQUEST`` and closes the connection, leaving
+    the rest of the oversize line undelivered on the dead socket).
     """
-    line = sock_file.readline(MAX_LINE_BYTES + 1)
+    line = sock_file.readline(max_bytes + 1)
     if not line:
         return None
-    if len(line) > MAX_LINE_BYTES:
-        raise ProtocolError(f"line exceeds {MAX_LINE_BYTES} bytes")
+    if len(line) > max_bytes:
+        raise ProtocolError(f"line exceeds {max_bytes} bytes")
     return line

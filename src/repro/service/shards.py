@@ -38,7 +38,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 from repro.core.model import TPPCModel
 from repro.core.tuning_space import Config, TuningSpace
 from repro.tuning.store import (ConfigStore, StoreEntry, _FileLock, _SEP,
-                                store_key)
+                                quarantine_file, store_key)
 
 META_FORMAT = "repro.sharded_store"
 META_VERSION = 1
@@ -84,6 +84,16 @@ class ShardedConfigStore:
         return self.root
 
     @property
+    def quarantined(self) -> List[str]:
+        """Damaged files moved aside across all shards (load/merge time).
+
+        A quarantined shard comes up empty instead of crashing the load
+        path; its keys are then rebuilt from peers' merges and/or the
+        daemon's journal replay (``TuningDaemon`` re-puts journaled
+        results that are missing from the store on ``--recover``)."""
+        return [p for s in self._shards for p in s.quarantined]
+
+    @property
     def autosave(self) -> bool:
         return self._autosave
 
@@ -108,17 +118,42 @@ class ShardedConfigStore:
         meta = self._meta_path()
         with _FileLock(meta):
             if os.path.exists(meta):
-                with open(meta) as f:
-                    d = json.load(f)
-                if d.get("format") != META_FORMAT:
+                d = None
+                try:
+                    with open(meta) as f:
+                        d = json.load(f)
+                except (json.JSONDecodeError, UnicodeDecodeError, OSError):
+                    d = None
+                if isinstance(d, dict) and d.get("format") == META_FORMAT \
+                        and isinstance(d.get("shards"), int):
+                    return int(d["shards"])
+                if isinstance(d, dict) \
+                        and d.get("format") not in (None, META_FORMAT):
+                    # a valid file of some OTHER format: caller error,
+                    # not data damage — refuse loudly
                     raise ValueError(f"{meta} is not a {META_FORMAT} file")
-                return int(d["shards"])
+                # torn/truncated metafile: quarantine it and re-derive
+                # the count from the shard files already on disk.  Only
+                # TOUCHED shards materialize, so the highest index is a
+                # floor, not the count — the requested count fills in
+                # (reopening with the same config is the common case).
+                quarantine_file(meta, "unreadable shard metafile")
+                highest = -1
+                for f in os.listdir(self.root):
+                    if f.startswith("shard-") and f.endswith(".json"):
+                        try:
+                            highest = max(highest, int(f[6:-5]))
+                        except ValueError:
+                            pass
+                n = max(int(requested), highest + 1)
+            else:
+                n = int(requested)
             tmp = meta + ".tmp"
             with open(tmp, "w") as f:
                 json.dump({"format": META_FORMAT, "version": META_VERSION,
-                           "shards": int(requested)}, f, indent=1)
+                           "shards": n}, f, indent=1)
             os.replace(tmp, meta)
-            return int(requested)
+            return n
 
     def _shard(self, key: str) -> Tuple[ConfigStore, int]:
         i = shard_of(key, self.n_shards)
@@ -247,8 +282,9 @@ class ShardedConfigStore:
         """
         for shard in self._shards:
             if os.path.exists(shard.path):
-                with open(shard.path) as f:
-                    shard._merge_from(json.load(f))
+                d = shard._read_checked(shard.path)
+                if d is not None:     # damaged shard: quarantined, skipped
+                    shard._merge_from(d)
 
     def prune(self, keep_hardware=None, keep_spaces=None,
               keep_buckets=None, dry_run: bool = False) -> Dict[str, int]:

@@ -54,8 +54,10 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import sys
 import tempfile
-from typing import Any, Dict, Iterator, Optional, Tuple
+import zlib
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 try:
     import fcntl
@@ -69,6 +71,39 @@ from repro.tuning.serialize import model_from_dict, model_to_dict
 FORMAT = "repro.config_store"
 VERSION = 1
 _SEP = "|"
+
+
+def content_crc(entries: Dict[str, Any], models: Dict[str, Any]) -> int:
+    """crc32 over the store's canonical content JSON.
+
+    Saved as the top-level ``crc`` field; verified on load so a torn
+    write or bit rot is detected instead of silently adopted.  Files
+    written before checksumming (no ``crc`` field) still load.
+    """
+    return zlib.crc32(json.dumps(
+        {"entries": entries, "models": models},
+        separators=(",", ":"), sort_keys=True).encode("utf-8"))
+
+
+def quarantine_file(path: str, why: str) -> str:
+    """Move a damaged artifact aside as ``<path>.corrupt`` and log it.
+
+    Never clobbers an earlier quarantine (numeric suffixes) and never
+    raises — worst case the damaged file stays in place and the caller
+    proceeds without it anyway.  Returns the destination (or ``path``
+    itself when the move failed).
+    """
+    dest = path + ".corrupt"
+    n = 1
+    while os.path.exists(dest):
+        dest = f"{path}.corrupt.{n}"
+        n += 1
+    try:
+        os.replace(path, dest)
+    except OSError:
+        dest = path
+    print(f"[store] quarantined {path} -> {dest}: {why}", file=sys.stderr)
+    return dest
 
 
 def store_key(space: str, bucket: str, hardware: str) -> str:
@@ -153,6 +188,7 @@ class ConfigStore:
         self.autosave = autosave
         self._entries: Dict[str, StoreEntry] = {}
         self._models: Dict[str, Dict] = {}
+        self.quarantined: List[str] = []   # damaged files moved aside
         if path is not None and os.path.exists(path):
             self.load(path)
 
@@ -275,12 +311,14 @@ class ConfigStore:
 
     # -- persistence -----------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
+        entries = {k: e.to_dict() for k, e in sorted(self._entries.items())}
+        models = {k: m for k, m in sorted(self._models.items())}
         return {
             "format": FORMAT,
             "version": VERSION,
-            "entries": {k: e.to_dict() for k, e in
-                        sorted(self._entries.items())},
-            "models": {k: m for k, m in sorted(self._models.items())},
+            "crc": content_crc(entries, models),
+            "entries": entries,
+            "models": models,
         }
 
     def save(self, path: Optional[str] = None, merge: bool = True,
@@ -301,8 +339,9 @@ class ConfigStore:
             raise ValueError("ConfigStore has no path; pass save(path=...)")
         with _FileLock(path):
             if merge and os.path.exists(path):
-                with open(path) as f:
-                    self._merge_from(json.load(f))
+                on_disk = self._read_checked(path)
+                if on_disk is not None:
+                    self._merge_from(on_disk)
             if _post_merge is not None:
                 _post_merge()
             d = os.path.dirname(os.path.abspath(path)) or "."
@@ -397,15 +436,48 @@ class ConfigStore:
             self.save(_post_merge=apply)
         return stats
 
-    def load(self, path: str) -> "ConfigStore":
-        with open(path) as f:
-            d = json.load(f)
+    def _read_checked(self, path: str) -> Optional[Dict[str, Any]]:
+        """Parse + checksum-verify a store file; quarantine on damage.
+
+        Truncated/invalid JSON and checksum mismatches — the artifacts a
+        crashed writer or bad disk leaves behind — move the file aside
+        as ``<path>.corrupt`` and return None so the caller continues
+        with what it has, instead of taking the whole load path down.
+        A VALID file of the wrong format still raises: that is a caller
+        pointing at the wrong file, not data damage.
+        """
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as exc:
+            self.quarantined.append(
+                quarantine_file(path, f"unreadable store file: {exc}"))
+            return None
+        if not isinstance(d, dict):
+            self.quarantined.append(
+                quarantine_file(path, "store file is not a JSON object"))
+            return None
         if d.get("format") != FORMAT:
             raise ValueError(
                 f"not a {FORMAT} artifact: format={d.get('format')!r}")
         if d.get("version") != VERSION:
             raise ValueError(
                 f"unsupported {FORMAT} version {d.get('version')!r}")
+        crc = d.get("crc")
+        if crc is not None and crc != content_crc(d.get("entries", {}),
+                                                  d.get("models", {})):
+            self.quarantined.append(
+                quarantine_file(path, "content checksum mismatch"))
+            return None
+        return d
+
+    def load(self, path: str) -> "ConfigStore":
+        """Load a store file; a damaged one is quarantined and the store
+        comes up EMPTY (but usable) rather than crashing the caller."""
+        d = self._read_checked(path)
+        if d is None:
+            self._entries, self._models = {}, {}
+            return self
         self._entries = {k: StoreEntry.from_dict(e)
                          for k, e in d.get("entries", {}).items()}
         self._models = dict(d.get("models", {}))

@@ -1,0 +1,411 @@
+"""Crash safety: journal, recovery, self-healing clients, store integrity.
+
+The acceptance surface (ISSUE 7): every accepted request survives a
+daemon SIGKILL — the write-ahead journal makes submits durable before
+the client sees a request id, ``recover=True`` replays it (finished
+requests answer from the store, interrupted ones resume with their
+REMAINING trial budget, tenant spend is restored), idempotency keys
+dedupe retried submits across restarts, damaged store files quarantine
+instead of crashing the load path, and the client distinguishes
+"request never sent" from "response never read" so a lost response can
+never fork a duplicate paid tuning run.
+"""
+import json
+import os
+import signal
+import socket as socketlib
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.fleet import VirtualWorkerPool
+from repro.service import (RequestJournal, ServiceClient, ServiceError,
+                           ServiceUnavailable, ShardedConfigStore,
+                           TuningDaemon)
+from repro.service import protocol as P
+from repro.service.client import _TransportFailure
+from repro.service.journal import EV_SUBMIT, replay
+from repro.tuning import ConfigStore
+
+HW = "tpu_v4"
+
+
+# =============================================================================
+# Journal: append, replay, damage tolerance
+# =============================================================================
+def test_journal_roundtrip(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with RequestJournal(path) as j:
+        j.append(EV_SUBMIT, rid="r000001", key="a|b|c")
+        j.append("done", rid="r000001", result={"runtime": 1.5})
+    events, stats = replay(path)
+    assert [e["ev"] for e in events] == ["submit", "done"]
+    assert stats.events == 2 and stats.corrupt == 0 and stats.torn == 0
+    assert stats.last_seq == 2
+    # a reopened journal continues the sequence
+    with RequestJournal(path) as j2:
+        j2.replay()
+        rec = j2.append("cancelled", rid="r000002")
+    assert rec["seq"] == 3
+
+
+def test_journal_replay_forgives_torn_tail_and_corrupt_interior(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with RequestJournal(path) as j:
+        j.append(EV_SUBMIT, rid="r1")
+        j.append(EV_SUBMIT, rid="r2")
+        j.append(EV_SUBMIT, rid="r3")
+    lines = open(path, "rb").read().splitlines(keepends=True)
+    # flip a byte inside record 2 (interior corruption) and tear the tail
+    lines[1] = lines[1].replace(b'"rid":"r2"', b'"rid":"rX"')
+    lines.append(b'{"seq": 4, "ev": "done", "tru')       # SIGKILL scar
+    with open(path, "wb") as f:
+        f.writelines(lines)
+    events, stats = replay(path)
+    assert [e["rid"] for e in events] == ["r1", "r3"]
+    assert stats.corrupt == 1 and stats.torn == 1
+
+
+# =============================================================================
+# Daemon recovery (in-process crash drills: no sockets, no loop thread)
+# =============================================================================
+def _daemon(store, **kw):
+    d = TuningDaemon(VirtualWorkerPool(workers=4), store,
+                     default_trial_budget=6, **kw)
+    d.tuner.begin()
+    return d
+
+
+def _drive(d, until, max_iters=2000):
+    for _ in range(max_iters):
+        if until():
+            return
+        d._admit_pending()
+        d.tuner.step(max_wait=0.01)
+        d._meter()
+    raise AssertionError("daemon did not converge")
+
+
+def _submit(d, tenant, idem=None, budget_s=None, kernel="matmul",
+            input="2048"):
+    return d.handle(P.validate_request(dict(
+        op="submit", kind="kernel", tenant=tenant, kernel=kernel,
+        input=input, hardware=HW, idempotency_key=idem,
+        tenant_budget_s=budget_s)))
+
+
+def _fleet_trials(d):
+    return sum(js.account.steps for js in d.tuner._states)
+
+
+def test_recover_resumes_interrupted_job_with_remaining_budget(tmp_path):
+    jpath = str(tmp_path / "journal.jsonl")
+    store = ShardedConfigStore(str(tmp_path / "corpus"), n_shards=2)
+    d = _daemon(store, journal=jpath)
+    rid = _submit(d, "a", idem="k1", budget_s=60.0)["request_id"]
+    # a few ticks of progress, then the "crash": abandon the daemon
+    # (journal fsyncs per append, so nothing needs a clean shutdown)
+    _drive(d, lambda: d._records[rid].trials >= 2)
+    before = _fleet_trials(d)
+    assert 0 < before < 6
+    spent_before = d._records[rid].spent_s
+    d.journal.close()
+
+    store2 = ShardedConfigStore(str(tmp_path / "corpus"), n_shards=2)
+    d2 = _daemon(store2, journal=jpath, recover=True)
+    assert d2.recovery["resubmitted"] == 1
+    rec = d2._records[rid]
+    assert rec.recovered and rec.resumed_trials == before
+    _drive(d2, lambda: d2._records[rid].state == "done")
+    res = d2.handle({"op": "result", "request_id": rid})
+    # total trials across both incarnations == the budget, not 2x it
+    assert res["ok"] and res["trials"] == 6
+    assert before + _fleet_trials(d2) == 6
+    # tenant spend carried over and kept accruing
+    ts = d2.tenants.snapshot()["a"]
+    assert ts["budget_s"] == 60.0
+    assert ts["spent_s"] >= round(spent_before, 6) > 0
+
+
+def test_recover_restores_done_requests_and_tenant_spend(tmp_path):
+    jpath = str(tmp_path / "journal.jsonl")
+    store = ShardedConfigStore(str(tmp_path / "corpus"), n_shards=2)
+    d = _daemon(store, journal=jpath)
+    rid = _submit(d, "a", idem="k1", budget_s=60.0)["request_id"]
+    _drive(d, lambda: d._records[rid].state == "done")
+    want = d.handle({"op": "result", "request_id": rid})
+    spent = d.tenants.snapshot()["a"]["spent_s"]
+    d.journal.close()
+
+    d2 = _daemon(ShardedConfigStore(str(tmp_path / "corpus"), n_shards=2),
+                 journal=jpath, recover=True)
+    assert d2.recovery["restored_done"] == 1
+    got = d2.handle({"op": "result", "request_id": rid})
+    assert got["config"] == want["config"]
+    assert got["trials"] == want["trials"] == 6
+    assert d2.tenants.snapshot()["a"]["spent_s"] == pytest.approx(spent)
+    # the restored request still dedupes an idempotent resubmit
+    again = _submit(d2, "a", idem="k1")
+    assert again["request_id"] == rid and again["deduped"]
+    # and a fresh submit of the same key is a plain store hit
+    fresh = _submit(d2, "b")
+    assert fresh["state"] == "done" and fresh["trials"] == 0
+    assert fresh["source"] == "store"
+
+
+def test_recover_rebuilds_store_from_journal_after_shard_loss(tmp_path):
+    jpath = str(tmp_path / "journal.jsonl")
+    corpus = str(tmp_path / "corpus")
+    d = _daemon(ShardedConfigStore(corpus, n_shards=2), journal=jpath)
+    rid = _submit(d, "a")["request_id"]
+    _drive(d, lambda: d._records[rid].state == "done")
+    key = d._records[rid].key
+    d.journal.close()
+    # vaporize the whole corpus: every shard gone
+    for f in os.listdir(corpus):
+        if f.startswith("shard-"):
+            os.unlink(os.path.join(corpus, f))
+
+    d2 = _daemon(ShardedConfigStore(corpus, n_shards=2),
+                 journal=jpath, recover=True)
+    assert d2.recovery["repaired_entries"] == 1
+    space, bucket, hw = key.split("|")
+    entry = d2.store.get(space, bucket, hw)
+    assert entry is not None and entry.meta.get("recovered")
+    # repeat submit: answered from the repaired store, zero trials
+    r = _submit(d2, "b")
+    assert r["state"] == "done" and r["trials"] == 0
+
+
+def test_idempotent_resubmit_dedupes_in_flight(tmp_path):
+    d = _daemon(ShardedConfigStore(str(tmp_path / "c"), n_shards=2),
+                journal=str(tmp_path / "j.jsonl"))
+    r1 = _submit(d, "a", idem="once")
+    r2 = _submit(d, "a", idem="once")          # retried before resolution
+    assert r2["request_id"] == r1["request_id"] and r2["deduped"]
+    assert r2["state"] == "queued"
+    # a different tenant's identical key is NOT deduped (keys are
+    # per-tenant) — it coalesces like any identical in-flight request
+    r3 = _submit(d, "b", idem="once")
+    assert r3["request_id"] != r1["request_id"]
+    assert r3.get("coalesced") == r1["request_id"]
+    ts = d.tenants.snapshot()["a"]
+    assert ts["submitted"] == 1                # the retry was not admitted
+
+
+def test_recover_requires_journal(tmp_path):
+    with pytest.raises(ValueError):
+        TuningDaemon(VirtualWorkerPool(workers=2), ConfigStore(),
+                     recover=True)
+
+
+def test_health_op_in_process(tmp_path):
+    d = _daemon(ShardedConfigStore(str(tmp_path / "c"), n_shards=2),
+                journal=str(tmp_path / "j.jsonl"))
+    h = d.handle({"op": "health"})
+    assert h["ok"] and h["live"] and h["ready"]
+    assert h["journal_enabled"] and h["store_writable"]
+    d.shutdown(drain=False)
+    h2 = d.handle({"op": "health"})
+    assert h2["draining"] and not h2["ready"]
+
+
+# =============================================================================
+# Store integrity: quarantine instead of crash
+# =============================================================================
+def test_config_store_quarantines_truncated_file(tmp_path):
+    path = str(tmp_path / "store.json")
+    s = ConfigStore(path)
+    s.put("sp", "128", HW, config={"BM": 32}, runtime=1.0, trials=4)
+    with open(path, "r+b") as f:           # tear the file mid-JSON
+        f.truncate(os.path.getsize(path) // 2)
+    s2 = ConfigStore(path)                 # must not raise
+    assert len(s2) == 0 and s2.quarantined
+    assert os.path.exists(path + ".corrupt")
+    # the store is usable again immediately
+    s2.put("sp", "128", HW, config={"BM": 64}, runtime=2.0, trials=1)
+    assert ConfigStore(path).get("sp", "128", HW) is not None
+
+
+def test_config_store_quarantines_checksum_mismatch(tmp_path):
+    path = str(tmp_path / "store.json")
+    s = ConfigStore(path)
+    s.put("sp", "128", HW, config={"BM": 32}, runtime=1.0, trials=4)
+    d = json.load(open(path))
+    key = next(iter(d["entries"]))
+    d["entries"][key]["runtime"] = 0.001   # bit-rot without updating crc
+    json.dump(d, open(path, "w"))
+    s2 = ConfigStore(path)
+    assert len(s2) == 0 and s2.quarantined
+
+
+def test_sharded_store_quarantines_bad_shard_and_meta(tmp_path):
+    root = str(tmp_path / "corpus")
+    s = ShardedConfigStore(root, n_shards=2)
+    s.put("sp", "128", HW, config={"BM": 32}, runtime=1.0, trials=4)
+    for f in os.listdir(root):             # damage every file on disk
+        with open(os.path.join(root, f), "w") as fh:
+            fh.write('{"torn')
+    s2 = ShardedConfigStore(root, n_shards=2)   # must not raise
+    assert s2.n_shards == 2 and len(s2) == 0
+    assert os.path.exists(os.path.join(root, "shards.json"))
+    s2.put("sp", "128", HW, config={"BM": 64}, runtime=2.0, trials=1)
+    assert ShardedConfigStore(root).get("sp", "128", HW) is not None
+
+
+# =============================================================================
+# Client self-healing: sent-vs-unsent, idempotent-only retry
+# =============================================================================
+def _failing_client(failures, monkeypatch):
+    """Client whose first ``len(failures)`` round trips raise as scripted."""
+    c = ServiceClient(("127.0.0.1", 1), retries=3, backoff=0.001)
+    calls = {"n": 0}
+
+    def fake(obj):
+        i = calls["n"]
+        calls["n"] += 1
+        if i < len(failures):
+            raise _TransportFailure(failures[i], "scripted failure")
+        return {"ok": True, "echo": obj}
+
+    monkeypatch.setattr(c, "_round_trip", fake)
+    return c, calls
+
+
+def test_client_retries_unsent_requests(monkeypatch):
+    c, calls = _failing_client([False, False], monkeypatch)   # never sent
+    assert c.call({"op": "submit"})["ok"]
+    assert calls["n"] == 3
+
+
+def test_client_refuses_to_retry_sent_non_idempotent(monkeypatch):
+    c, calls = _failing_client([True], monkeypatch)           # response lost
+    with pytest.raises(ServiceUnavailable) as ei:
+        c.call({"op": "submit"})
+    assert "may have been received" in str(ei.value)
+    assert calls["n"] == 1
+
+
+def test_client_retries_sent_idempotent(monkeypatch):
+    c, calls = _failing_client([True, True], monkeypatch)
+    assert c.call({"op": "status"}, idempotent=True)["ok"]
+    assert calls["n"] == 3
+
+
+def test_client_deadline_bounds_retries(monkeypatch):
+    c, _ = _failing_client([False] * 10, monkeypatch)
+    c.retries = 100
+    c.backoff = 0.05
+    t0 = time.monotonic()
+    with pytest.raises(ServiceUnavailable):
+        c.call({"op": "ping"}, idempotent=True, deadline_s=0.2)
+    assert time.monotonic() - t0 < 2.0
+
+
+# =============================================================================
+# Protocol: oversize line bound (regression for read_line)
+# =============================================================================
+def test_protocol_read_line_bound():
+    import io
+    big = b"x" * (P.MAX_LINE_BYTES + 10) + b"\n"
+    with pytest.raises(P.ProtocolError):
+        P.read_line(io.BytesIO(big))
+    assert P.read_line(io.BytesIO(b"small\n")) == b"small\n"
+    assert P.read_line(io.BytesIO(b"")) is None
+
+
+def test_daemon_socket_rejects_oversize_line(tmp_path):
+    d = TuningDaemon(VirtualWorkerPool(workers=2),
+                     ShardedConfigStore(str(tmp_path / "c"), n_shards=2),
+                     default_trial_budget=4)
+    d.start()
+    try:
+        with socketlib.create_connection(d.address, timeout=10) as s:
+            s.sendall(b'{"op": "ping", "pad": "'
+                      + b"x" * (P.MAX_LINE_BYTES + 100) + b'"}\n')
+            resp = P.decode(s.makefile("rb").readline())
+            assert not resp["ok"] and resp["code"] == P.E_BAD_REQUEST
+            # the daemon closed the connection after answering
+            s.settimeout(10)
+            assert s.recv(1) == b""
+    finally:
+        d.shutdown(drain=False)
+        assert d.wait(timeout=60)
+
+
+# =============================================================================
+# Full SIGKILL drill: live daemon, kill -9, restart --recover, same handle
+# =============================================================================
+def _free_port():
+    s = socketlib.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _spawn_daemon(tmp_path, port, recover=False):
+    env = dict(os.environ, PYTHONPATH="src")
+    cmd = [sys.executable, "-m", "repro.launch.daemon",
+           "--backend", "virtual", "--workers", "4",
+           "--store-dir", str(tmp_path / "corpus"), "--shards", "2",
+           "--journal", str(tmp_path / "journal.jsonl"),
+           "--port", str(port), "--budget", "6"]
+    if recover:
+        cmd.append("--recover")
+    proc = subprocess.Popen(cmd, cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))),
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+    deadline = time.time() + 60
+    while time.time() < deadline:
+        line = proc.stdout.readline()
+        if "tuning service on" in line:
+            return proc
+        if proc.poll() is not None:
+            break
+    raise AssertionError(
+        f"daemon did not come up: {proc.stdout.read()}")
+
+
+@pytest.mark.slow
+def test_sigkill_recover_end_to_end(tmp_path):
+    port = _free_port()
+    proc = _spawn_daemon(tmp_path, port)
+    try:
+        c = ServiceClient(("127.0.0.1", port), timeout=30)
+        c.wait_ready(timeout=30)
+        r = c.submit_kernel("a", "matmul", HW, input="2048", budget=40,
+                            tenant_budget_s=120.0, idempotency_key="boom")
+        rid = r["request_id"]
+        # let some trials land, then SIGKILL mid-tuning
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            if c.status(rid)["trials"] >= 2:
+                break
+            time.sleep(0.05)
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(timeout=30)
+        with pytest.raises(ServiceError):
+            c.ping()
+
+        proc = _spawn_daemon(tmp_path, port, recover=True)
+        c.wait_ready(timeout=30)
+        # the ORIGINAL request id resolves on the recovered daemon
+        res = c.result(rid, timeout=120)
+        assert res["state"] == "done" and res["trials"] == 40
+        st = c.status(rid)
+        assert st["recovered"]
+        # the idempotency key still points at the original request
+        again = c.submit_kernel("a", "matmul", HW, input="2048",
+                                budget=40, idempotency_key="boom")
+        assert again["request_id"] == rid and again.get("deduped")
+        assert c.stats()["tenants"]["a"]["spent_s"] > 0
+        c.shutdown(drain=True)
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=30)
