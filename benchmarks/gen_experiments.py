@@ -43,13 +43,36 @@ def kernel_table():
               f"| {len(sp.binary_parameters)} | {len(bm.inputs)} |")
 
 
+def problem_table():
+    """Tuning-problem coverage across every registered kind — kernels,
+    train-step sharding, serve geometry — discovered through the problem
+    registry (``repro.tuning.problem``), so a new problem kind shows up
+    here without touching this script."""
+    from repro.tuning.problem import list_problems, parse_problem
+
+    print("\n### Tuning-problem coverage (registry-discovered)\n")
+    print("| problem | kind | space | configs | bucket |")
+    print("|---|---|---|---|---|")
+    for spec in list_problems():
+        p = parse_problem(spec)
+        sp = p.space()
+        print(f"| {spec} | {p.kind} | {sp.name} | {len(sp)} "
+              f"| {p.bucket} |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--kernels-only", action="store_true",
                     help="print only the registry-discovered kernel table")
+    ap.add_argument("--problems-only", action="store_true",
+                    help="print only the registry-discovered problem table")
     args = ap.parse_args()
 
+    if args.problems_only:
+        problem_table()
+        return
     kernel_table()
+    problem_table()
     if args.kernels_only:
         return
 

@@ -18,7 +18,8 @@ warm-start from the nearest stored TP→PC model artifact.
 CLI: ``python -m repro.launch.fleet``; benchmark:
 ``python -m benchmarks.bench_fleet`` (writes ``BENCH_fleet.json``).
 """
-from repro.fleet.job import JobResult, TuningJob, job_from_registry
+from repro.fleet.job import (JobResult, TuningJob, job_from_problem,
+                             job_from_registry)
 from repro.fleet.pool import (FAIL_LANE, FAIL_POOL, FAIL_TEST, FailedResult,
                               SubprocessWorkerPool, ThreadWorkerPool,
                               VirtualWorkerPool, WorkItem, WorkResult)
@@ -29,5 +30,5 @@ __all__ = [
     "FAIL_LANE", "FAIL_POOL", "FAIL_TEST", "FailedResult", "FleetReport",
     "FleetTuner", "JobResult", "SubprocessWorkerPool", "ThreadWorkerPool",
     "TuningJob", "VirtualWorkerPool", "WorkItem", "WorkResult",
-    "job_from_registry", "predicted_runtime_order",
+    "job_from_problem", "job_from_registry", "predicted_runtime_order",
 ]

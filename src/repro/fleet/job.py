@@ -1,16 +1,20 @@
 """``TuningJob`` / ``JobResult`` — the unit of fleet work.
 
-A job is one (kernel × input bucket × hardware) autotuning task: a tuning
+A job is one (problem × input bucket × hardware) autotuning task: a tuning
 space, the portable workload model for that input, the hardware target, and
 a trial budget.  The fleet schedules many of them over one worker pool and
 records each through its own ``EvalAccount`` (completion-ordered trace), so
 per-job convergence stays comparable to single-job tuning while the pool's
 wall-clock amortizes across the whole fleet.
 
-Jobs built from the kernel registry (``job_from_registry``) also carry
-their ``(kernel, input_key)`` provenance, which is what subprocess worker
-backends ship across the process boundary instead of the (unpicklable)
-workload closure.
+``job_from_problem`` is the generic entry: any ``TuningProblem`` (kernel
+tiles, train-step sharding, serve geometry, ...) becomes a fleet job, with
+the problem's ``kind`` namespacing its store artifacts and its
+``make_evaluator`` (when non-None) plugging in as the measurement closure.
+``job_from_registry`` remains as the kernel-specific shim — jobs built from
+the kernel registry also carry their ``(kernel, input_key)`` provenance,
+which is what subprocess worker backends ship across the process boundary
+instead of the (unpicklable) workload closure.
 """
 from __future__ import annotations
 
@@ -24,7 +28,7 @@ from repro.core.tuning_space import Config, TuningSpace
 
 @dataclasses.dataclass
 class TuningJob:
-    """One (kernel × input bucket × hardware) autotuning task."""
+    """One (problem × input bucket × hardware) autotuning task."""
 
     name: str
     space: TuningSpace
@@ -43,6 +47,16 @@ class TuningJob:
     # with the replay cost structure.  Thread pools time fn() wall-clock, so
     # a blocking eval_fn here is how real timed measurements plug in.
     eval_fn: Optional[Callable] = None
+    # problem-kind namespace for the job's store artifacts ("kernel",
+    # "serve", "sharding", ...).  None infers the legacy kind from the
+    # space name, so hand-built serve-space jobs keep hitting the store
+    # entries their pre-problem ancestors wrote.
+    kind: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.kind is None:
+            from repro.tuning.store import legacy_kind
+            self.kind = legacy_kind(self.space.name)
 
     def hw_spec(self) -> HardwareSpec:
         if isinstance(self.hardware, HardwareSpec):
@@ -55,33 +69,53 @@ class TuningJob:
         return hwspec.hardware_key(self.hardware)
 
 
+def job_from_problem(problem, hardware: Union[str, HardwareSpec],
+                     budget: int = 25, seed: int = 0,
+                     searcher: Optional[str] = None,
+                     cold_searcher: str = "random",
+                     name: Optional[str] = None) -> TuningJob:
+    """Build a fleet job from any ``TuningProblem``.
+
+    The problem's ``make_evaluator(hw)`` — when it returns a closure —
+    becomes the job's measurement substrate; ``None`` keeps the fleet's
+    cost-model replay path, which is what keeps kernel-adapter jobs
+    bit-identical to the legacy ``job_from_registry`` traces.
+    """
+    hw_key = hwspec.hardware_key(hardware)
+    job = TuningJob(
+        name=name if name is not None
+        else f"{problem.kind}:{problem.name}@{hw_key}",
+        space=problem.space(),
+        workload_fn=problem.workload_fn(),
+        hardware=hardware,
+        bucket=problem.bucket,
+        budget=budget,
+        seed=seed,
+        searcher=searcher,
+        cold_searcher=cold_searcher,
+        kernel=problem.kernel,
+        input_key=problem.input_key,
+        kind=problem.kind,
+    )
+    job.eval_fn = problem.make_evaluator(job.hw_spec())
+    return job
+
+
 def job_from_registry(kernel: str, input_key: str,
                       hardware: Union[str, HardwareSpec],
                       budget: int = 25, seed: int = 0,
                       searcher: Optional[str] = None,
                       cold_searcher: str = "random") -> TuningJob:
-    """Build a job from a registered kernel benchmark + named input."""
-    from repro.kernels.registry import BENCHMARKS
+    """Kernel-registry shim: ``job_from_problem`` over a
+    ``KernelProblem``, keeping the legacy ``kernel/input@hw`` job name."""
+    from repro.tuning.problem import KernelProblem
 
-    bm = BENCHMARKS[kernel]
-    if input_key not in bm.inputs:
-        raise KeyError(f"kernel {kernel!r} has no input {input_key!r}; "
-                       f"available: {sorted(bm.inputs)}")
-    inp = bm.inputs[input_key]
+    problem = KernelProblem(kernel, input_key)
     hw_key = hwspec.hardware_key(hardware)
-    return TuningJob(
-        name=f"{kernel}/{input_key}@{hw_key}",
-        space=bm.make_space(),
-        workload_fn=lambda cfg: bm.workload_fn(cfg, inp),
-        hardware=hardware,
-        bucket=input_key,
-        budget=budget,
-        seed=seed,
-        searcher=searcher,
+    return job_from_problem(
+        problem, hardware, budget=budget, seed=seed, searcher=searcher,
         cold_searcher=cold_searcher,
-        kernel=kernel,
-        input_key=input_key,
-    )
+        name=f"{kernel}/{input_key}@{hw_key}")
 
 
 @dataclasses.dataclass

@@ -274,7 +274,8 @@ class FleetTuner:
         pred = None
         if self.store is not None:
             model, key = self.store.load_nearest_model(
-                job.space.name, job.bucket, js.hw_key, bind_space=job.space)
+                job.space.name, job.bucket, js.hw_key, bind_space=job.space,
+                kind=job.kind)
             if model is not None:
                 pred = predicted_runtimes(model, job.space, js.hw)
                 js.predicted_best = float(np.min(pred))
@@ -718,20 +719,22 @@ class FleetTuner:
                       f"(predicted best "
                       f"{js.predicted_best * 1e3:.3f}ms)")
 
-    def _unpark_check(self, space_name: str) -> None:
+    def _unpark_check(self, space_name: str,
+                      kind: str = "kernel") -> None:
         """A model was just published for ``space_name``: parked jobs of
-        that space re-price their predicted best against the now-nearest
-        artifact, and unpark if it shows more remaining gain than the
-        stale artifact they parked on."""
+        that space (same problem kind) re-price their predicted best
+        against the now-nearest artifact, and unpark if it shows more
+        remaining gain than the stale artifact they parked on."""
         if self.park_factor is None or self.store is None:
             return
         for js in self._states:
             if js.done or not js.parked \
-                    or js.job.space.name != space_name:
+                    or js.job.space.name != space_name \
+                    or js.job.kind != kind:
                 continue
             model, _ = self.store.load_nearest_model(
                 space_name, js.job.bucket, js.hw_key,
-                bind_space=js.job.space)
+                bind_space=js.job.space, kind=kind)
             if model is None:
                 continue
             js.predicted_best = float(np.min(
@@ -811,9 +814,11 @@ class FleetTuner:
                 config=js.result.best_config, runtime=acct.best_runtime,
                 trials=acct.steps,
                 meta={"job": job.name, "searcher": js.searcher_name,
-                      "warm_started": js.warm_started})
+                      "warm_started": js.warm_started},
+                kind=job.kind)
             if self.publish_models and self.store.get_model_dict(
-                    job.space.name, job.bucket, js.hw_key) is None:
+                    job.space.name, job.bucket, js.hw_key,
+                    kind=job.kind) is None:
                 # train the portable TP→PC_ops model this job was missing
                 # and publish it — the next (input, hardware) arrival
                 # warm-starts from it
@@ -823,14 +828,14 @@ class FleetTuner:
                                         hw=js.hw, seed=job.seed)
                 session.train(kind=self.model_kind, sample="deliberate")
                 session.save_model_to_store(self.store, job.bucket,
-                                            js.hw_key)
+                                            js.hw_key, kind=job.kind)
                 published = True
         finally:
             self.store.autosave = was_autosave
         if was_autosave and self.store.path is not None:
             self.store.save()
         if published:
-            self._unpark_check(job.space.name)
+            self._unpark_check(job.space.name, kind=job.kind)
         self._absorb_stall(t0)
         if self.verbose:
             print(f"[fleet] {job.name}: best {acct.best_runtime*1e3:.3f}ms "

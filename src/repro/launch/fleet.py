@@ -13,6 +13,15 @@ artifacts into a shared ``ConfigStore`` — so re-running with more hardware
     # subprocess lanes, each with its own 2-device jax host runtime
     PYTHONPATH=src python -m repro.launch.fleet --backend subprocess \
         --workers 2 --devices-per-worker 2 --kernels matmul --hw tpu_v5e
+
+    # whole-system mode: kernel tiles + train-step sharding + serve
+    # geometry for one model-zoo entry, one fleet, one store
+    PYTHONPATH=src python -m repro.launch.fleet --system qwen2.5-3b \
+        --hw tpu_v5e --store system_store.json
+
+    # or cherry-pick registered problems by kind:name spec
+    PYTHONPATH=src python -m repro.launch.fleet \
+        --problem sharding:qwen2.5-3b/train_4k --problem serve:p9n9
 """
 from __future__ import annotations
 
@@ -42,6 +51,16 @@ def main(argv=None) -> int:
     ap.add_argument("--inputs", default=None,
                     help="comma-separated input keys, one per kernel "
                     "(default: each kernel's default input)")
+    ap.add_argument("--problem", action="append", default=None,
+                    help="tune registered problems 'kind:name' instead of "
+                    "--kernels (repeatable / comma-separated), e.g. "
+                    "kernel:matmul/128, sharding:qwen2.5-3b/train_4k, "
+                    "serve:p9n9")
+    ap.add_argument("--system", default=None,
+                    help="whole-system mode: one invocation tunes kernel "
+                    "tiles + train-step sharding + serve geometry for this "
+                    "model-zoo entry through one fleet and one store "
+                    "(overrides --kernels/--problem)")
     ap.add_argument("--hw", default="tpu_v4,tpu_v5e",
                     help="comma-separated hardware names (naming drift ok: "
                     "TPUv4 == tpu_v4)")
@@ -84,26 +103,50 @@ def main(argv=None) -> int:
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
-    from repro.fleet import FleetTuner, job_from_registry
+    from repro.fleet import (FleetTuner, job_from_problem,
+                             job_from_registry)
     from repro.kernels.registry import BENCHMARKS
     from repro.tuning import ConfigStore
 
-    kernels = [k.strip() for k in args.kernels.split(",") if k.strip()]
     hws = [h.strip() for h in args.hw.split(",") if h.strip()]
-    if args.inputs is not None:
-        inputs = [i.strip() for i in args.inputs.split(",")]
-        if len(inputs) != len(kernels):
-            raise SystemExit("--inputs must list one key per --kernels entry")
+    if args.system is not None:
+        from repro.tuning.problem import system_problems
+        try:
+            problems = system_problems(args.system)
+        except KeyError as exc:
+            raise SystemExit(f"--system: {exc}")
+        jobs = [job_from_problem(p, hw, budget=args.budget,
+                                 seed=args.seed, searcher=args.searcher)
+                for p in problems for hw in hws]
+    elif args.problem:
+        from repro.tuning.problem import parse_problem
+        specs = [s.strip() for chunk in args.problem
+                 for s in chunk.split(",") if s.strip()]
+        problems = []
+        for spec in specs:
+            try:
+                problems.append(parse_problem(spec))
+            except (KeyError, ValueError) as exc:
+                raise SystemExit(f"--problem {spec!r}: {exc}")
+        jobs = [job_from_problem(p, hw, budget=args.budget,
+                                 seed=args.seed, searcher=args.searcher)
+                for p in problems for hw in hws]
     else:
-        inputs = []
-        for k in kernels:
-            bm = BENCHMARKS[k]
-            inputs.append(next(key for key, v in bm.inputs.items()
-                               if v is bm.default_input))
-
-    jobs = [job_from_registry(k, inp, hw, budget=args.budget,
-                              seed=args.seed, searcher=args.searcher)
-            for k, inp in zip(kernels, inputs) for hw in hws]
+        kernels = [k.strip() for k in args.kernels.split(",") if k.strip()]
+        if args.inputs is not None:
+            inputs = [i.strip() for i in args.inputs.split(",")]
+            if len(inputs) != len(kernels):
+                raise SystemExit(
+                    "--inputs must list one key per --kernels entry")
+        else:
+            inputs = []
+            for k in kernels:
+                bm = BENCHMARKS[k]
+                inputs.append(next(key for key, v in bm.inputs.items()
+                                   if v is bm.default_input))
+        jobs = [job_from_registry(k, inp, hw, budget=args.budget,
+                                  seed=args.seed, searcher=args.searcher)
+                for k, inp in zip(kernels, inputs) for hw in hws]
     store = ConfigStore(args.store)
     pool = build_pool(args.backend, args.workers, args.devices_per_worker)
     t0 = time.time()

@@ -22,11 +22,59 @@ from repro.core.step_tuner import CompiledStepEvaluator  # noqa: E402
 from repro.tuning import SEARCHERS, TuningSession        # noqa: E402
 
 
+def _tune_problem(args) -> int:
+    """``--problem kind:name`` mode: tune one registered ``TuningProblem``
+    through the fleet machinery (problem evaluator or cost-model replay)."""
+    from repro.fleet import FleetTuner, VirtualWorkerPool, job_from_problem
+    from repro.tuning import ConfigStore
+    from repro.tuning.problem import parse_problem
+
+    try:
+        problem = parse_problem(args.problem)
+    except (KeyError, ValueError) as exc:
+        raise SystemExit(f"--problem: {exc}")
+    t0 = time.time()
+    job = job_from_problem(problem, args.hw, budget=args.budget,
+                           seed=args.seed, searcher=args.searcher)
+    store = ConfigStore(args.store)
+    pool = VirtualWorkerPool(workers=1)
+    try:
+        report = FleetTuner([job], pool, store=store).run()
+    finally:
+        pool.close()
+    r = report.results[0]
+    print(f"[tune] {problem.spec} on {args.hw} ({r.searcher}"
+          f"{', warm' if r.warm_started else ''}): "
+          f"best {r.best_runtime*1e3:.3f}ms after {r.trials} tests")
+    print(f"[tune] best config: {r.best_config}")
+    if args.store:
+        print(f"[tune] store -> {args.store} ({len(store)} entries)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"problem": problem.spec, "hardware": args.hw,
+                       "searcher": r.searcher,
+                       "best_ms": r.best_runtime * 1e3,
+                       "best_config": r.best_config, "trials": r.trials,
+                       "history": r.history,
+                       "seconds": time.time() - t0}, f, indent=2)
+        print(f"[tune] -> {args.out}")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--shape", default="train_4k")
-    ap.add_argument("--searcher", default="profile",
+    ap.add_argument("--problem", default=None,
+                    help="tune a registered problem 'kind:name' instead of "
+                    "the compiled train step (e.g. kernel:matmul/128, "
+                    "sharding:qwen2.5-3b/train_4k, serve:p9n9); see "
+                    "repro.tuning.problem_kinds()")
+    ap.add_argument("--hw", default="tpu_v5e",
+                    help="hardware target for --problem mode")
+    ap.add_argument("--store", default=None,
+                    help="ConfigStore path for --problem mode artifacts")
+    ap.add_argument("--searcher", default=None,
                     choices=sorted(SEARCHERS))
     ap.add_argument("--budget", type=int, default=10)
     ap.add_argument("--in-flight", type=int, default=1,
@@ -39,6 +87,12 @@ def main():
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.problem:
+        # fleet-auto searcher when unset: warm_start on store hit, else cold
+        return _tune_problem(args)
+    if args.searcher is None:
+        args.searcher = "profile"
 
     t0 = time.time()
     ev = CompiledStepEvaluator(args.arch, args.shape)

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import re
 import time
 from collections import Counter, deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -45,6 +46,7 @@ from repro.core.searcher import WarmStartSearcher, run_search
 from repro.core.tuner import predicted_runtimes
 from repro.core.tuning_space import Config, TuningParameter, TuningSpace
 from repro.serve.engine import Request, ServeEngine
+from repro.tuning.problem import TuningProblem
 from repro.tuning.session import TuningSession
 from repro.tuning.store import ConfigStore, StoreEntry
 
@@ -182,6 +184,127 @@ def serve_workload_fn(n_requests: int, prompt_len: int, new_tokens: int,
         }
 
     return wl
+
+
+# =============================================================================
+# The serve problem (registry kind "serve")
+# =============================================================================
+class ServeProblem(TuningProblem):
+    """Serving wave geometry (BATCH × MAX_SEQ) for one shape bucket.
+
+    The problem name is the bucket key (``"p9n9"``): prompt-length decile
+    × max-new decile of the serving range, resolved to its representative
+    shape by ``ShapeBucketer``.  ``make_evaluator`` prices the portable
+    serving workload through the cost model with configurations that
+    cannot hold the bucket's sequences charged ``INFEASIBLE_S`` — the
+    exact semantics the daemon's serve-kind special case hard-coded
+    before this class replaced it.
+
+    Workload-model constants come either from explicit ``stats`` (a
+    ``ServeWorkloadStats`` or its dict form — the service wire format) or
+    from a model-zoo entry via ``arch=`` (closed-form parameter count, no
+    jax).
+    """
+
+    kind = "serve"
+
+    def __init__(self, bucket: str, batch_sizes: Sequence[int] = None,
+                 max_seqs: Sequence[int] = None, space_name: str = SPACE_NAME,
+                 calib_n: int = 16, stats=None, arch: Optional[str] = None,
+                 max_prompt: int = 96, max_new: int = 32,
+                 shape: Optional[Tuple[int, int]] = None):
+        b = _parse_bucket(bucket)
+        if stats is not None and arch is not None:
+            raise ValueError("pass stats= or arch=, not both")
+        if isinstance(stats, dict):
+            allowed = {f.name for f in dataclasses.fields(ServeWorkloadStats)}
+            bad = set(stats) - allowed
+            if bad:
+                raise ValueError(f"unknown stats fields {sorted(bad)}")
+            stats = ServeWorkloadStats(**stats)
+        if arch is not None:
+            stats = stats_from_arch(arch)
+        self.stats = stats if stats is not None else ServeWorkloadStats()
+        self.bucketer = ShapeBucketer(max_prompt=max_prompt, max_new=max_new)
+        self._bucket = b
+        self.bucket = b.key
+        self.name = b.key
+        self.calib_n = int(calib_n)
+        # explicit (prompt_len, new_tokens) override: the service path
+        # measures at the CLIENT's representative shape, whatever its
+        # bucketer's deciles resolve to, not this problem's default
+        self._shape = (int(shape[0]), int(shape[1])) \
+            if shape is not None else None
+        self._space = serve_space(
+            batch_sizes if batch_sizes is not None else (1, 2, 4, 8, 16),
+            max_seqs if max_seqs is not None else (32, 64, 96, 128, 192),
+            name=space_name)
+
+    @classmethod
+    def from_name(cls, name: str, **params) -> "ServeProblem":
+        return cls(name, **params)
+
+    @property
+    def rep_shape(self) -> Tuple[int, int]:
+        """(prompt_len, new_tokens) at the bucket's upper decile edge
+        (or the explicit ``shape=`` override)."""
+        if self._shape is not None:
+            return self._shape
+        return self.bucketer.rep_shape(self._bucket)
+
+    def space(self) -> TuningSpace:
+        return self._space
+
+    def workload_fn(self) -> Callable[[Config], Dict[str, float]]:
+        plen, new = self.rep_shape
+        return serve_workload_fn(self.calib_n, plen, new, self.stats)
+
+    def make_evaluator(self, hw: HardwareSpec) -> Optional[Callable]:
+        from repro.core.evaluate import (PROFILE_FIXED, PROFILE_SLOWDOWN,
+                                         TEST_OVERHEAD)
+        space, wl = self._space, self.workload_fn()
+        plen, new = self.rep_shape
+        need = plen + new
+
+        def fn(index: int, profile: bool):
+            cfg = space[int(index)]
+            cs = costmodel.execute(wl(cfg), hw)
+            rt = INFEASIBLE_S if int(cfg["MAX_SEQ"]) < need \
+                else float(cs.runtime)
+            if profile:
+                return rt, cs, rt * PROFILE_SLOWDOWN + TEST_OVERHEAD \
+                    + PROFILE_FIXED
+            return rt, None, rt + TEST_OVERHEAD
+
+        return fn
+
+
+_BUCKET_RE = re.compile(r"^p(\d)n(\d)$")
+
+
+def _parse_bucket(key: str) -> Bucket:
+    m = _BUCKET_RE.match(str(key))
+    if not m:
+        raise ValueError(
+            f"serve problem name must be a bucket key 'p<0-9>n<0-9>', "
+            f"got {key!r}")
+    return Bucket(prompt_decile=int(m.group(1)), new_decile=int(m.group(2)))
+
+
+def stats_from_arch(arch: str, bytes_per_value: int = 2
+                    ) -> ServeWorkloadStats:
+    """Workload stats from a model-zoo entry WITHOUT building the model
+    (closed-form parameter count — usable on jax-free paths)."""
+    from repro.configs import ARCHS
+    from repro.distributed.tuning import arch_param_count
+    if arch not in ARCHS:
+        raise KeyError(f"unknown model-zoo entry {arch!r}; available: "
+                       f"{sorted(ARCHS)}")
+    cfg = ARCHS[arch]
+    return ServeWorkloadStats(
+        param_bytes=float(arch_param_count(cfg)) * bytes_per_value,
+        d_model=int(cfg.d_model), n_layers=int(cfg.n_layers),
+        bytes_per_value=bytes_per_value)
 
 
 # =============================================================================
@@ -423,14 +546,15 @@ class OnlineAutotuner:
             return model
         session = self._session_for(bucket)
         model = session.load_model_from_store(self.store, bucket.key,
-                                              self.hardware_name)
+                                              self.hardware_name,
+                                              kind="serve")
         if model is None:
             # train the portable TP→PC_ops model (on train_hw — possibly a
             # different machine than the one being tuned) and persist it
             session.train(train_hw=self.train_hw, kind=self.model_kind,
                           sample="full")
             session.save_model_to_store(self.store, bucket.key,
-                                        self.hardware_name)
+                                        self.hardware_name, kind="serve")
             model = session.model
         self._models[bucket.key] = model
         return model
@@ -515,7 +639,8 @@ class OnlineAutotuner:
             trials=int(res.get("trials", 0)),
             meta={"source": res.get("source", "service"),
                   "service": True, "bucket_shape": list(
-                      self.bucketer.rep_shape(bucket))})
+                      self.bucketer.rep_shape(bucket))},
+            kind="serve")
 
     def ensure(self, bucket: Bucket, calib: Sequence[Request]
                ) -> Tuple[StoreEntry, int, bool]:
@@ -524,7 +649,7 @@ class OnlineAutotuner:
         configured), and failing that tunes live and persists."""
         self._via_service = False
         entry = self.store.get(self.space.name, bucket.key,
-                               self.hardware_name)
+                               self.hardware_name, kind="serve")
         if entry is not None:
             return entry, 0, True
         entry = self._tune_via_service(bucket)
@@ -544,7 +669,8 @@ class OnlineAutotuner:
             config=self.space[ev.best_index],
             runtime=ev.best_runtime, trials=ev.steps,
             meta={"history": [[int(i), float(rt)] for i, rt in ev.history()],
-                  "bucket_shape": [plen, new]})
+                  "bucket_shape": [plen, new]},
+            kind="serve")
         return entry, ev.steps, False
 
     # -- the serving loop ------------------------------------------------------

@@ -234,6 +234,25 @@ class ServiceClient:
             "idempotency_key": idempotency_key},
             idempotent=idempotency_key is not None)
 
+    def submit_problem(self, tenant: str, problem: str, hardware: str,
+                       params: Optional[Dict[str, Any]] = None,
+                       budget: Optional[int] = None, seed: int = 0,
+                       searcher: Optional[str] = None,
+                       tenant_budget_s: Optional[float] = None,
+                       idempotency_key: Optional[str] = None
+                       ) -> Dict[str, Any]:
+        """Submit any registered ``TuningProblem`` by its ``"kind:name"``
+        spec (e.g. ``"sharding:qwen2.5-3b/train_4k"``, ``"serve:p9n9"``,
+        ``"kernel:matmul/128"``); ``params`` are forwarded to the
+        problem's constructor."""
+        return self._checked({
+            "op": "submit", "kind": "problem", "tenant": tenant,
+            "problem": problem, "params": dict(params or {}),
+            "hardware": hardware, "budget": budget, "seed": seed,
+            "searcher": searcher, "tenant_budget_s": tenant_budget_s,
+            "idempotency_key": idempotency_key},
+            idempotent=idempotency_key is not None)
+
     def submit_serve(self, tenant: str, hardware: str, bucket: str,
                      bucket_shape: Sequence[int],
                      batch_sizes: Sequence[int],
@@ -372,6 +391,11 @@ class AsyncServiceClient:
     def submit_serve(self, *args, **kwargs) -> PendingTuning:
         kwargs.setdefault("idempotency_key", uuid.uuid4().hex)
         resp = self.client.submit_serve(*args, **kwargs)
+        return PendingTuning(self.client, resp["request_id"], resp)
+
+    def submit_problem(self, *args, **kwargs) -> PendingTuning:
+        kwargs.setdefault("idempotency_key", uuid.uuid4().hex)
+        resp = self.client.submit_problem(*args, **kwargs)
         return PendingTuning(self.client, resp["request_id"], resp)
 
     def stats(self) -> Dict[str, Any]:

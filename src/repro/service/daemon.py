@@ -56,7 +56,7 @@ from repro.service.journal import (EV_CANCELLED, EV_CHARGE, EV_DAEMON_START,
                                    EV_DONE, EV_PROGRESS, EV_START, EV_SUBMIT,
                                    RequestJournal)
 from repro.service.tenants import AdmissionError, TenantManager
-from repro.tuning.store import store_key
+from repro.tuning.store import split_key, store_key, upgrade_key
 
 # request states (the wire-visible lifecycle)
 QUEUED = "queued"
@@ -72,8 +72,8 @@ class RequestRecord:
 
     rid: str
     tenant: str
-    kind: str                     # "kernel" | "serve"
-    key: str                      # space|bucket|hardware store key
+    kind: str                     # "kernel" | "serve" | "problem"
+    key: str                      # kind|space|bucket|hardware store key
     state: str = QUEUED
     job: Optional[TuningJob] = None
     snap: Optional[AccountSnapshot] = None   # metering baseline
@@ -96,32 +96,6 @@ class RequestRecord:
             "source": self.source, "primary": self.primary,
             "error": self.error, "recovered": self.recovered,
         }
-
-
-def _serve_eval_fn(space, wl, hw, need: int):
-    """Measurement closure for serve-kind jobs: the portable serving
-    workload priced through the cost model, with configurations that
-    cannot hold the bucket's sequences charged ``INFEASIBLE_S`` (the
-    same feasibility semantics the client-side ``OnlineAutotuner``
-    enforces via its ranking filter).  Closure-based, so serve-kind
-    submits need an in-process pool (virtual/thread), not subprocess
-    lanes."""
-    from repro.core import costmodel
-    from repro.core.evaluate import (PROFILE_FIXED, PROFILE_SLOWDOWN,
-                                     TEST_OVERHEAD)
-    from repro.serve.autotune import INFEASIBLE_S
-
-    def fn(index: int, profile: bool):
-        cfg = space[index]
-        cs = costmodel.execute(wl(cfg), hw)
-        rt = INFEASIBLE_S if int(cfg["MAX_SEQ"]) < need \
-            else float(cs.runtime)
-        if profile:
-            return rt, cs, rt * PROFILE_SLOWDOWN + TEST_OVERHEAD \
-                + PROFILE_FIXED
-        return rt, None, rt + TEST_OVERHEAD
-
-    return fn
 
 
 class TuningDaemon:
@@ -520,8 +494,8 @@ class TuningDaemon:
         # BEFORE the client sees the request id
         self._j(EV_SUBMIT, rid=rid, key=key, idem=idem, req=req)
         # store-first: a known key is answered with zero trials
-        space, bucket, hw = key.split("|")
-        entry = self.store.get(space, bucket, hw)
+        kind, space, bucket, hw = split_key(key)
+        entry = self.store.get(space, bucket, hw, kind=kind)
         if entry is not None:
             rec.state = DONE
             rec.source = "store"
@@ -558,6 +532,22 @@ class TuningDaemon:
     def _build_job(self, req: Dict[str, Any]) -> Tuple[TuningJob, str]:
         budget = req["budget"] if req["budget"] is not None \
             else self.default_trial_budget
+        if req["kind"] == "problem":
+            from repro.fleet import job_from_problem
+            from repro.tuning.problem import parse_problem
+            try:
+                problem = parse_problem(req["problem"], **req["params"])
+            except (KeyError, ValueError, TypeError) as exc:
+                raise P.ProtocolError(str(exc),
+                                      code=P.E_UNKNOWN_PROBLEM) from None
+            try:
+                job = job_from_problem(
+                    problem, req["hardware"], budget=budget,
+                    seed=req["seed"], searcher=req["searcher"])
+            except KeyError as exc:
+                raise P.ProtocolError(f"unknown hardware: {exc}") from None
+            return job, store_key(job.space.name, job.bucket,
+                                  job.hardware_key, kind=job.kind)
         if req["kind"] == "kernel":
             from repro.fleet import job_from_registry
             from repro.kernels.registry import BENCHMARKS
@@ -576,20 +566,20 @@ class TuningDaemon:
                 raise P.ProtocolError(str(exc), code=P.E_UNKNOWN_KERNEL) \
                     from None
             return job, store_key(job.space.name, job.bucket,
-                                  job.hardware_key)
+                                  job.hardware_key, kind=job.kind)
         return self._build_serve_job(req, budget)
 
     def _build_serve_job(self, req: Dict[str, Any],
                          budget: int) -> Tuple[TuningJob, str]:
-        """A serve-kind submit reconstructs the client's tuning problem:
-        the SAME space (so published model artifacts bind on the client
-        side) and the portable serving workload at the bucket's
-        representative shape, measured via the cost model with the
-        client's feasibility rule."""
+        """A serve-kind submit reconstructs the client's tuning problem as
+        a ``ServeProblem``: the SAME space (so published model artifacts
+        bind on the client side) and the portable serving workload at the
+        client's explicit bucket shape, measured via the cost model with
+        the client's feasibility rule."""
         from repro.core import hwspec
         from repro.core.hwspec import HardwareSpec
-        from repro.serve.autotune import (ServeWorkloadStats, serve_space,
-                                          serve_workload_fn)
+        from repro.fleet import job_from_problem
+        from repro.serve.autotune import ServeProblem
         if req["hardware_spec"] is not None:
             # hardware outside this daemon's registry (a replica's "cpu"
             # label, a lab chip): price on the shipped spec numbers and
@@ -604,24 +594,21 @@ class TuningDaemon:
                 hw = hwspec.get(req["hardware"])
             except KeyError as exc:
                 raise P.ProtocolError(f"unknown hardware: {exc}") from None
-        allowed = {f.name for f in
-                   dataclasses.fields(ServeWorkloadStats)}
-        bad = set(req["stats"]) - allowed
-        if bad:
-            raise P.ProtocolError(f"unknown stats fields {sorted(bad)}")
-        stats = ServeWorkloadStats(**req["stats"])
-        space = serve_space(req["batch_sizes"], req["max_seqs"],
-                            name=req["space"])
-        plen, new = req["bucket_shape"]
-        wl = serve_workload_fn(req["calib_n"], plen, new, stats)
-        job = TuningJob(
-            name=f"serve:{req['bucket']}",   # renamed to the rid on accept
-            space=space, workload_fn=wl,
-            hardware=hw if req["hardware_spec"] is not None
-            else req["hardware"],
-            bucket=req["bucket"], budget=budget, seed=req["seed"],
-            eval_fn=_serve_eval_fn(space, wl, hw, plen + new))
-        return job, store_key(space.name, req["bucket"], job.hardware_key)
+        try:
+            problem = ServeProblem(
+                req["bucket"], batch_sizes=req["batch_sizes"],
+                max_seqs=req["max_seqs"], space_name=req["space"],
+                calib_n=req["calib_n"], stats=req["stats"],
+                shape=tuple(req["bucket_shape"]))
+        except ValueError as exc:
+            raise P.ProtocolError(str(exc)) from None
+        job = job_from_problem(
+            problem,
+            hw if req["hardware_spec"] is not None else req["hardware"],
+            budget=budget, seed=req["seed"],
+            name=f"serve:{req['bucket']}")   # renamed to the rid on accept
+        return job, store_key(job.space.name, job.bucket,
+                              job.hardware_key, kind=job.kind)
 
     def _op_status(self, req: Dict[str, Any]) -> Dict[str, Any]:
         rec = self._records.get(req["request_id"])
@@ -768,13 +755,14 @@ class TuningDaemon:
             if seen[rid]["state"] != DONE or not res \
                     or not res.get("config") or not seen[rid]["key"]:
                 continue
-            space, bucket, hw = seen[rid]["key"].split("|")
-            if self.store.get(space, bucket, hw) is None:
+            kind, space, bucket, hw = split_key(seen[rid]["key"])
+            if self.store.get(space, bucket, hw, kind=kind) is None:
                 self.store.put(space, bucket, hw,
                                config=dict(res["config"]),
                                runtime=float(res["runtime"]),
                                trials=int(res.get("trials", 0)),
-                               meta={"recovered": True, "rid": rid})
+                               meta={"recovered": True, "rid": rid},
+                               kind=kind)
                 stats["repaired_entries"] += 1
         # rebuild the request table
         for rid in order:
@@ -782,7 +770,8 @@ class TuningDaemon:
             req = s["req"]
             rec = RequestRecord(
                 rid=rid, tenant=req.get("tenant", "?"),
-                kind=req.get("kind", "kernel"), key=s["key"] or "?|?|?",
+                kind=req.get("kind", "kernel"),
+                key=upgrade_key(s["key"]) if s["key"] else "?|?|?",
                 idem=s["idem"], recovered=True)
             self._records[rid] = rec
             if s["idem"] is not None and req.get("tenant"):
@@ -805,8 +794,8 @@ class TuningDaemon:
             # landed, else resubmit with the remaining budget
             rec.spent_s = s["spent"]
             rec.resumed_trials = s["trials"]
-            space, bucket, hw = rec.key.split("|")
-            entry = self.store.get(space, bucket, hw)
+            kind, space, bucket, hw = split_key(rec.key)
+            entry = self.store.get(space, bucket, hw, kind=kind)
             if entry is not None:
                 rec.state = DONE
                 rec.source = "store"

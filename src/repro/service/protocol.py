@@ -8,13 +8,17 @@ ones add ``"error"`` (human-readable) and ``"code"`` (machine-checkable).
 Ops
 ---
 ``ping``      liveness probe; echoes the protocol version.
-``submit``    enqueue a tuning request for a tenant.  Two kinds:
+``submit``    enqueue a tuning request for a tenant.  Three kinds:
               ``kind="kernel"`` names a registry benchmark
               (kernel / input / hardware), ``kind="serve"`` describes an
               online-serving space (batch_sizes × max_seqs + bucket shape)
               so drift retunes from ``OnlineAutotuner`` route through the
-              shared fleet.  Responds with a request id immediately; a
-              store hit resolves it inline with ``trials == 0``.
+              shared fleet, and ``kind="problem"`` names any registered
+              ``TuningProblem`` as a ``"kind:name"`` spec (e.g.
+              ``"sharding:qwen2.5-3b/train_4k"``) plus optional ``params``,
+              resolved through ``repro.tuning.problem``.  Responds with a
+              request id immediately; a store hit resolves it inline with
+              ``trials == 0``.
 ``status``    poll a request id: state + progress meters.
 ``result``    fetch the final entry for a *done* request.
 ``cancel``    abandon a queued or running request.
@@ -47,13 +51,14 @@ MAX_LINE_BYTES = 1 << 20
 
 OPS = ("ping", "submit", "status", "result", "cancel", "stats", "health",
        "shutdown")
-SUBMIT_KINDS = ("kernel", "serve")
+SUBMIT_KINDS = ("kernel", "serve", "problem")
 
 # Machine-checkable error codes (the ``code`` field of failed responses).
 E_BAD_REQUEST = "bad_request"        # malformed JSON / failed validation
 E_UNKNOWN_OP = "unknown_op"
 E_UNKNOWN_REQUEST = "unknown_request"   # no such request id
 E_UNKNOWN_KERNEL = "unknown_kernel"     # registry has no such kernel/input
+E_UNKNOWN_PROBLEM = "unknown_problem"   # problem registry has no such spec
 E_ADMISSION = "admission_denied"        # tenant/queue limits hit
 E_BUDGET = "budget_exhausted"           # tenant worker-seconds budget spent
 E_DRAINING = "draining"                 # daemon is shutting down
@@ -167,6 +172,14 @@ def _validate_submit(obj: Dict[str, Any]) -> Dict[str, Any]:
         req["kernel"] = _want(obj, "kernel", (str,))
         req["input"] = _want(obj, "input", (str,), required=False)
         req["searcher"] = _want(obj, "searcher", (str,), required=False)
+    elif kind == "problem":
+        # registry-resolved: "kind:name" spec + optional constructor params
+        req["problem"] = _want(obj, "problem", (str,))
+        req["params"] = _want(obj, "params", (dict,), required=False,
+                              default={})
+        req["searcher"] = _want(obj, "searcher", (str,), required=False)
+        if not req["problem"]:
+            raise ProtocolError("field 'problem': must be non-empty")
     else:  # serve
         req["bucket"] = _want(obj, "bucket", (str,))
         shape = _want_num_list(obj, "bucket_shape")

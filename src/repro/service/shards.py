@@ -37,8 +37,8 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from repro.core.model import TPPCModel
 from repro.core.tuning_space import Config, TuningSpace
-from repro.tuning.store import (ConfigStore, StoreEntry, _FileLock, _SEP,
-                                quarantine_file, store_key)
+from repro.tuning.store import (ConfigStore, StoreEntry, _FileLock,
+                                quarantine_file, split_key, store_key)
 
 META_FORMAT = "repro.sharded_store"
 META_VERSION = 1
@@ -76,6 +76,7 @@ class ShardedConfigStore:
             # the facade owns persistence: shards never autosave themselves
             self._shards.append(
                 ConfigStore(path=self._shard_path(i), autosave=False))
+        self._rebalance()
 
     # -- wiring ----------------------------------------------------------------
     @property
@@ -159,6 +160,59 @@ class ShardedConfigStore:
         i = shard_of(key, self.n_shards)
         return self._shards[i], i
 
+    def _rebalance(self) -> int:
+        """Re-home keys stranded in the wrong shard by the v1→v2 key
+        upgrade.
+
+        Pre-refactor corpora partitioned by the 3-part key string;
+        ``ConfigStore.load`` upgrades those keys to the 4-part
+        ``kind|...`` form, whose crc32 generally lands in a DIFFERENT
+        shard — lookups routing by the new hash would miss them.  Moves
+        persist immediately (destination before source, so a crash can
+        duplicate but never lose a key; the source shard drops its copy
+        via the post-merge filter so the on-disk legacy key is not
+        re-adopted).  Returns how many artifacts moved.
+        """
+        moved = 0
+        for i, shard in enumerate(self._shards):
+            bad_e = [k for k in shard._entries
+                     if shard_of(k, self.n_shards) != i]
+            bad_m = [k for k in shard._models
+                     if shard_of(k, self.n_shards) != i]
+            if not bad_e and not bad_m:
+                continue
+
+            def drop_bad(shard=shard, bad_e=tuple(bad_e),
+                         bad_m=tuple(bad_m)):
+                for k in bad_e:
+                    shard._entries.pop(k, None)
+                for k in bad_m:
+                    shard._models.pop(k, None)
+
+            touched = set()
+            for k in bad_e:
+                j = shard_of(k, self.n_shards)
+                dest, other = self._shards[j], shard._entries[k]
+                mine = dest._entries.get(k)
+                if mine is None or other.runtime < mine.runtime:
+                    dest._entries[k] = other
+                touched.add(j)
+            for k in bad_m:
+                j = shard_of(k, self.n_shards)
+                dest, m = self._shards[j], shard._models[k]
+                mine = dest._models.get(k)
+                if mine is None or int(m.get("revision", 0)) \
+                        > int(mine.get("revision", 0)):
+                    dest._models[k] = m
+                touched.add(j)
+            for j in sorted(touched):
+                self._shards[j].save()
+            drop_bad()
+            if os.path.exists(shard.path):
+                shard.save(_post_merge=drop_bad)
+            moved += len(bad_e) + len(bad_m)
+        return moved
+
     def _touched(self, i: int) -> None:
         if self._autosave:
             self._shards[i].save()
@@ -166,17 +220,18 @@ class ShardedConfigStore:
             self._dirty.add(i)
 
     # -- tuned configs ---------------------------------------------------------
-    def get(self, space: str, bucket: str, hardware: str
-            ) -> Optional[StoreEntry]:
-        shard, _ = self._shard(store_key(space, bucket, hardware))
-        return shard.get(space, bucket, hardware)
+    def get(self, space: str, bucket: str, hardware: str,
+            kind: Optional[str] = None) -> Optional[StoreEntry]:
+        shard, _ = self._shard(store_key(space, bucket, hardware, kind=kind))
+        return shard.get(space, bucket, hardware, kind=kind)
 
     def put(self, space: str, bucket: str, hardware: str, config: Config,
             runtime: float, trials: int,
-            meta: Optional[Dict[str, Any]] = None) -> StoreEntry:
-        shard, i = self._shard(store_key(space, bucket, hardware))
+            meta: Optional[Dict[str, Any]] = None,
+            kind: Optional[str] = None) -> StoreEntry:
+        shard, i = self._shard(store_key(space, bucket, hardware, kind=kind))
         entry = shard.put(space, bucket, hardware, config, runtime,
-                          trials, meta)
+                          trials, meta, kind=kind)
         self._touched(i)
         return entry
 
@@ -192,10 +247,10 @@ class ShardedConfigStore:
         return key in shard
 
     # -- model artifacts -------------------------------------------------------
-    def get_model_dict(self, space: str, bucket: str, hardware: str
-                       ) -> Optional[Dict]:
-        shard, _ = self._shard(store_key(space, bucket, hardware))
-        return shard.get_model_dict(space, bucket, hardware)
+    def get_model_dict(self, space: str, bucket: str, hardware: str,
+                       kind: Optional[str] = None) -> Optional[Dict]:
+        shard, _ = self._shard(store_key(space, bucket, hardware, kind=kind))
+        return shard.get_model_dict(space, bucket, hardware, kind=kind)
 
     def model_keys(self) -> Iterator[str]:
         for shard in self._shards:
@@ -203,46 +258,51 @@ class ShardedConfigStore:
 
     def put_model_dict(self, space: str, bucket: str, hardware: str,
                        artifact: Dict, revision: Optional[int] = None,
-                       n_obs: Optional[int] = None) -> None:
-        shard, i = self._shard(store_key(space, bucket, hardware))
+                       n_obs: Optional[int] = None,
+                       kind: Optional[str] = None) -> None:
+        shard, i = self._shard(store_key(space, bucket, hardware, kind=kind))
         shard.put_model_dict(space, bucket, hardware, artifact,
-                             revision=revision, n_obs=n_obs)
+                             revision=revision, n_obs=n_obs, kind=kind)
         self._touched(i)
 
     def load_model(self, space: str, bucket: str, hardware: str,
-                   bind_space: Optional[TuningSpace] = None
-                   ) -> Optional[TPPCModel]:
-        shard, _ = self._shard(store_key(space, bucket, hardware))
+                   bind_space: Optional[TuningSpace] = None,
+                   kind: Optional[str] = None) -> Optional[TPPCModel]:
+        shard, _ = self._shard(store_key(space, bucket, hardware, kind=kind))
         return shard.load_model(space, bucket, hardware,
-                                bind_space=bind_space)
+                                bind_space=bind_space, kind=kind)
 
     def save_model(self, space: str, bucket: str, hardware: str,
                    model: TPPCModel,
                    model_space: Optional[TuningSpace] = None,
                    revision: Optional[int] = None,
-                   n_obs: Optional[int] = None) -> None:
-        shard, i = self._shard(store_key(space, bucket, hardware))
+                   n_obs: Optional[int] = None,
+                   kind: Optional[str] = None) -> None:
+        shard, i = self._shard(store_key(space, bucket, hardware, kind=kind))
         shard.save_model(space, bucket, hardware, model,
                          model_space=model_space, revision=revision,
-                         n_obs=n_obs)
+                         n_obs=n_obs, kind=kind)
         self._touched(i)
 
-    def nearest_model_key(self, space: str, bucket: str, hardware: str
-                          ) -> Optional[str]:
+    def nearest_model_key(self, space: str, bucket: str, hardware: str,
+                          kind: Optional[str] = None) -> Optional[str]:
         """Same portability tiering as ``ConfigStore``, over ALL shards.
 
         Exact hit short-circuits to the owning shard; otherwise the tier
         scan runs over the union of every shard's model keys (sorted, so
-        ties break identically to the single-file store).
+        ties break identically to the single-file store) — never
+        crossing problem kinds.
         """
-        exact = store_key(space, bucket, hardware)
+        exact = store_key(space, bucket, hardware, kind=kind)
+        want_kind = split_key(exact)[0]
         shard, _ = self._shard(exact)
-        if shard.get_model_dict(space, bucket, hardware) is not None:
+        if shard.get_model_dict(space, bucket, hardware,
+                                kind=kind) is not None:
             return exact
         same_bucket, same_hw, same_space = [], [], []
         for k in sorted(self.model_keys()):
-            s, b, h = k.split(_SEP)
-            if s != space:
+            kk, s, b, h = split_key(k)
+            if kk != want_kind or s != space:
                 continue
             if b == bucket:
                 same_bucket.append(k)
@@ -256,14 +316,16 @@ class ShardedConfigStore:
         return None
 
     def load_nearest_model(self, space: str, bucket: str, hardware: str,
-                           bind_space: Optional[TuningSpace] = None
+                           bind_space: Optional[TuningSpace] = None,
+                           kind: Optional[str] = None
                            ) -> Tuple[Optional[TPPCModel], Optional[str]]:
-        key = self.nearest_model_key(space, bucket, hardware)
+        key = self.nearest_model_key(space, bucket, hardware, kind=kind)
         if key is None:
             return None, None
-        s, b, h = key.split(_SEP)
+        kk, s, b, h = split_key(key)
         shard, _ = self._shard(key)
-        return shard.load_model(s, b, h, bind_space=bind_space), key
+        return shard.load_model(s, b, h, bind_space=bind_space,
+                                kind=kk), key
 
     # -- persistence -----------------------------------------------------------
     def save(self, merge: bool = True) -> str:
@@ -285,9 +347,13 @@ class ShardedConfigStore:
                 d = shard._read_checked(shard.path)
                 if d is not None:     # damaged shard: quarantined, skipped
                     shard._merge_from(d)
+        # a peer still writing v1 files may have stranded upgraded keys
+        # in the wrong shard; re-home them
+        self._rebalance()
 
     def prune(self, keep_hardware=None, keep_spaces=None,
-              keep_buckets=None, dry_run: bool = False) -> Dict[str, int]:
+              keep_buckets=None, keep_kinds=None,
+              dry_run: bool = False) -> Dict[str, int]:
         """Per-shard ``ConfigStore.prune``, stats aggregated across shards.
 
         A real (non-dry) prune persists each affected shard immediately —
@@ -304,6 +370,7 @@ class ShardedConfigStore:
                 stats = shard.prune(keep_hardware=keep_hardware,
                                     keep_spaces=keep_spaces,
                                     keep_buckets=keep_buckets,
+                                    keep_kinds=keep_kinds,
                                     dry_run=dry_run)
             finally:
                 shard.autosave = was

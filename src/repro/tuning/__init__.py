@@ -40,17 +40,23 @@ from repro.core.searcher import (SEARCHERS, Searcher, make_searcher,
 from repro.core.tuner import TuneResult, train_model, train_model_deliberate
 from repro.tuning.serialize import (model_from_dict, model_to_dict,
                                     space_from_dict, space_to_dict)
+from repro.tuning.problem import (KernelProblem, TuningProblem, list_problems,
+                                  make_problem, parse_problem, problem_kinds,
+                                  register_problem_kind)
 from repro.tuning.session import TuningSession
-from repro.tuning.store import ConfigStore, StoreEntry, store_key
+from repro.tuning.store import (ConfigStore, StoreEntry, legacy_kind,
+                                split_key, store_key, upgrade_key)
 
 __all__ = [
     "Candidate", "ConfigStore", "CostModelEvaluator", "EvalAccount",
-    "Evaluator", "FunctionEvaluator", "Observation", "ProfilingUnsupported",
-    "RecordedSpace", "ReplayEvaluator", "SEARCHERS", "Searcher", "StoreEntry",
-    "Ticket", "TuneResult", "TuningSession", "VirtualAsyncEvaluator",
-    "make_searcher", "model_from_dict",
-    "model_to_dict", "record_space", "register_searcher",
-    "resolve_searcher", "run_search", "sequential_run_search",
+    "Evaluator", "FunctionEvaluator", "KernelProblem", "Observation",
+    "ProfilingUnsupported", "RecordedSpace", "ReplayEvaluator", "SEARCHERS",
+    "Searcher", "StoreEntry", "Ticket", "TuneResult", "TuningProblem",
+    "TuningSession", "VirtualAsyncEvaluator", "legacy_kind", "list_problems",
+    "make_problem", "make_searcher", "model_from_dict",
+    "model_to_dict", "parse_problem", "problem_kinds", "record_space",
+    "register_problem_kind", "register_searcher",
+    "resolve_searcher", "run_search", "sequential_run_search", "split_key",
     "space_from_dict", "space_to_dict", "store_key", "train_model",
-    "train_model_deliberate",
+    "train_model_deliberate", "upgrade_key",
 ]

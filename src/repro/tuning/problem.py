@@ -1,0 +1,247 @@
+"""``TuningProblem`` — one tuner-facing interface from kernel tiles to
+whole-system spaces.
+
+The paper's method is problem-agnostic: a tuning space, a portable
+workload model ``g : TP × I → PC_ops`` whose counters feed the TP→PC
+model, and (optionally) a measurement substrate for the hardware of
+interest.  Historically "problem" meant "Pallas kernel" in this repo;
+this module lifts the contract out so the SAME fleet, store, service
+and searchers tune anything that speaks it:
+
+* ``kernel`` — a thin adapter over ``kernels/registry.py`` (bit-identical
+  to the legacy ``job_from_registry`` path, golden-gated);
+* ``sharding`` — train-step sharding layouts for a model-zoo entry
+  (mesh shape × ``ShardingRules`` variants), with roofline-style counters
+  (FLOPs, HBM bytes, collective volume) as the profile features
+  (``repro/distributed/tuning.py``);
+* ``serve`` — serving wave geometry (batch size × cache length),
+  wrapping ``serve/autotune.py``'s space + workload model
+  (``ServeProblem`` in that module).
+
+A problem also names its identity in the persistent ``ConfigStore``:
+``kind`` is the key namespace (``kind|space|bucket|hardware``) and
+``bucket`` the input-shape bucket, so artifacts from different problem
+kinds never collide even when space names do.
+
+The string registry (``register_problem_kind`` / ``make_problem`` /
+``parse_problem``) is what the service protocol's ``problem`` submits
+and the ``--problem kind:name`` CLI flags resolve through.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.hwspec import HardwareSpec
+from repro.core.tuning_space import Config, TuningSpace
+
+
+class TuningProblem:
+    """The tuner-facing contract every problem kind implements.
+
+    Subclasses set class attribute ``kind`` (the store-key namespace and
+    registry string) and instance attributes ``name`` (unique within the
+    kind, e.g. ``"matmul/2048"`` or ``"qwen2.5-3b/train_4k"``) and
+    ``bucket`` (the input-shape bucket the paper's ``I``), then implement:
+
+    * ``space()`` — the ``TuningSpace`` to search;
+    * ``workload_fn()`` — the portable counter model ``g(TP) → PC_ops``
+      (hardware-independent; trains the TP→PC model and prices
+      warm-start rankings);
+    * ``make_evaluator(hw)`` — an optional measurement closure
+      ``(index, profile) -> (runtime, counters, cost)`` for the hardware
+      of interest.  ``None`` (the default) means "price ``workload_fn``
+      through the analytic cost model" — the fleet's replay path, which
+      keeps the kernel adapter bit-identical to the legacy traces.
+
+    ``kernel``/``input_key`` are registry provenance for subprocess
+    worker pools (which ship names, not closures); non-kernel problems
+    leave them ``None`` and therefore need in-process pools.
+    """
+
+    kind: str = "problem"
+    name: str = ""
+    bucket: str = "default"
+    kernel: Optional[str] = None
+    input_key: Optional[str] = None
+
+    def space(self) -> TuningSpace:
+        raise NotImplementedError
+
+    def workload_fn(self) -> Callable[[Config], Dict[str, float]]:
+        raise NotImplementedError
+
+    def make_evaluator(self, hw: HardwareSpec) -> Optional[Callable]:
+        return None
+
+    @property
+    def spec(self) -> str:
+        """The registry string that reconstructs this problem."""
+        return f"{self.kind}:{self.name}"
+
+    def describe(self) -> Dict[str, Any]:
+        """Problem card for enumeration tools (``gen_experiments``)."""
+        sp = self.space()
+        return {
+            "kind": self.kind,
+            "name": self.name,
+            "bucket": self.bucket,
+            "space": sp.name,
+            "n_configs": len(sp),
+            "parameters": {p.name: list(p.values) for p in sp.parameters},
+        }
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.spec!r})"
+
+
+# =============================================================================
+# The string-keyed registry
+# =============================================================================
+_FACTORIES: Dict[str, Callable[..., TuningProblem]] = {}
+_LISTERS: Dict[str, Callable[[], List[str]]] = {}
+
+
+def register_problem_kind(kind: str,
+                          lister: Optional[Callable[[], List[str]]] = None):
+    """Register a factory ``f(name, **params) -> TuningProblem`` for
+    ``kind`` (decorator).  ``lister`` optionally enumerates example
+    problem names of the kind for discovery tools."""
+    def deco(factory):
+        _FACTORIES[kind] = factory
+        if lister is not None:
+            _LISTERS[kind] = lister
+        return factory
+    return deco
+
+
+def problem_kinds() -> List[str]:
+    """All registered problem kinds, sorted."""
+    return sorted(_FACTORIES)
+
+
+def make_problem(kind: str, name: str, **params: Any) -> TuningProblem:
+    """Instantiate a registered problem kind by name."""
+    if kind not in _FACTORIES:
+        raise KeyError(
+            f"unknown problem kind {kind!r}; valid kinds: "
+            f"{', '.join(problem_kinds())}")
+    return _FACTORIES[kind](name, **params)
+
+
+def parse_problem(spec: str, **params: Any) -> TuningProblem:
+    """Resolve a ``kind:name`` spec (the CLI/service form) to a problem."""
+    kind, sep, name = spec.partition(":")
+    if not sep or not kind or not name:
+        raise ValueError(
+            f"problem spec must be 'kind:name', got {spec!r}; valid "
+            f"kinds: {', '.join(problem_kinds())}")
+    return make_problem(kind, name, **params)
+
+
+def list_problems(kind: Optional[str] = None) -> List[str]:
+    """Example ``kind:name`` specs across registered kinds (or one kind)."""
+    kinds = [kind] if kind is not None else problem_kinds()
+    out: List[str] = []
+    for k in kinds:
+        lister = _LISTERS.get(k)
+        if lister is not None:
+            out.extend(f"{k}:{n}" for n in lister())
+    return out
+
+
+# =============================================================================
+# kind = "kernel" — the registry adapter (bit-identical to the legacy path)
+# =============================================================================
+class KernelProblem(TuningProblem):
+    """A registered Pallas kernel benchmark on one named input.
+
+    ``make_evaluator`` returns ``None`` on purpose: the fleet then prices
+    the workload through the analytic cost model exactly as the legacy
+    ``job_from_registry`` jobs did, so ask-tell traces stay bit-identical
+    (the golden gate in ``tests/test_problems.py``).
+    """
+
+    kind = "kernel"
+
+    def __init__(self, kernel: str, input_key: Optional[str] = None):
+        from repro.kernels.registry import BENCHMARKS
+        if kernel not in BENCHMARKS:
+            raise KeyError(f"unknown kernel {kernel!r}; available: "
+                           f"{sorted(BENCHMARKS)}")
+        bm = BENCHMARKS[kernel]
+        if input_key is None:
+            input_key = sorted(bm.inputs)[0]
+        if input_key not in bm.inputs:
+            raise KeyError(f"kernel {kernel!r} has no input {input_key!r}; "
+                           f"available: {sorted(bm.inputs)}")
+        self._bm = bm
+        self.kernel = kernel
+        self.input_key = input_key
+        self.name = f"{kernel}/{input_key}"
+        self.bucket = input_key
+
+    def space(self) -> TuningSpace:
+        return self._bm.make_space()
+
+    def workload_fn(self) -> Callable[[Config], Dict[str, float]]:
+        bm, inp = self._bm, self._bm.inputs[self.input_key]
+        return lambda cfg: bm.workload_fn(cfg, inp)
+
+
+def _kernel_names() -> List[str]:
+    from repro.kernels.registry import BENCHMARKS
+    return [f"{k}/{i}" for k in sorted(BENCHMARKS)
+            for i in sorted(BENCHMARKS[k].inputs)]
+
+
+@register_problem_kind("kernel", lister=_kernel_names)
+def _make_kernel(name: str, **params: Any) -> KernelProblem:
+    kernel, _, input_key = name.partition("/")
+    return KernelProblem(kernel, input_key or None, **params)
+
+
+# =============================================================================
+# kind = "sharding" / "serve" — lazy factories (heavy imports on demand)
+# =============================================================================
+def _sharding_names() -> List[str]:
+    from repro.configs import ARCHS
+    return [f"{a}/train_4k" for a in sorted(ARCHS)]
+
+
+@register_problem_kind("sharding", lister=_sharding_names)
+def _make_sharding(name: str, **params: Any) -> TuningProblem:
+    from repro.distributed.tuning import ShardingProblem
+    return ShardingProblem.from_name(name, **params)
+
+
+def _serve_names() -> List[str]:
+    return ["p9n9", "p4n4", "p9n0"]
+
+
+@register_problem_kind("serve", lister=_serve_names)
+def _make_serve(name: str, **params: Any) -> TuningProblem:
+    from repro.serve.autotune import ServeProblem
+    return ServeProblem.from_name(name, **params)
+
+
+# =============================================================================
+# Whole-system convenience: every problem kind for one model-zoo entry
+# =============================================================================
+def system_problems(arch: str, shape: str = "train_4k",
+                    n_devices: int = 64,
+                    kernels: Optional[List[str]] = None
+                    ) -> List[TuningProblem]:
+    """Kernel tiles + train-step sharding + serve geometry for one
+    model-zoo entry — the one-invocation ``launch/fleet.py --system``
+    mode tunes exactly this list through one fleet and one store."""
+    from repro.distributed.tuning import ShardingProblem
+    from repro.serve.autotune import ServeProblem
+
+    problems: List[TuningProblem] = []
+    from repro.kernels.registry import BENCHMARKS
+    for k in (kernels if kernels is not None else sorted(BENCHMARKS)):
+        problems.append(KernelProblem(k))
+    problems.append(ShardingProblem.from_name(f"{arch}/{shape}",
+                                              n_devices=n_devices))
+    problems.append(ServeProblem.from_name("p9n9", arch=arch))
+    return problems

@@ -8,7 +8,7 @@ process: the second time a workload shape shows up (or the service restarts)
 the tuned configuration is reused with ZERO live trials.
 
 The store is one JSON file holding two artifact kinds under the same key
-``(space name, input-shape bucket, hardware)``:
+``(problem kind, space name, input-shape bucket, hardware)``:
 
 * **entries** — tuned configurations (`config`, `runtime`, `trials`, free-form
   `meta`), written by the online tuner after live trials;
@@ -22,14 +22,15 @@ The store is one JSON file holding two artifact kinds under the same key
   ancestor instead of tying.  ``prune(keep_hardware=..., keep_spaces=...,
   keep_buckets=...)`` GCs artifacts for fleet members that no longer exist.
 
-Schema (``format: repro.config_store``, version 1)::
+Schema (``format: repro.config_store``, version 2)::
 
     {
       "format": "repro.config_store",
-      "version": 1,
+      "version": 2,
       "entries": {
-        "serve_online|p1n1|tpu_v5e": {
-          "space": "serve_online", "bucket": "p1n1", "hardware": "tpu_v5e",
+        "serve|serve_online|p1n1|tpu_v5e": {
+          "kind": "serve", "space": "serve_online", "bucket": "p1n1",
+          "hardware": "tpu_v5e",
           "config": {"BATCH": 8, "MAX_SEQ": 64},
           "runtime": 0.0123,          # best measured seconds
           "trials": 6,                # live empirical tests spent tuning it
@@ -38,6 +39,14 @@ Schema (``format: repro.config_store``, version 1)::
       },
       "models": { "<same key>": <repro.tppc_model artifact>, ... }
     }
+
+The leading ``kind`` field namespaces keys by *problem kind* (the
+``TuningProblem`` registry string: "kernel", "serve", "sharding", ...) so
+artifacts from different problem kinds never collide even when their
+space names do.  Version-1 files (3-part ``space|bucket|hardware`` keys)
+still load and merge: legacy keys upgrade on the way in, with the kind
+inferred from the space name (``legacy_kind``) — serve-autotuner spaces
+were the only non-kernel artifacts that existed before version 2.
 
 Writes are atomic (tempfile + ``os.replace``) and auto-saved when the store
 is bound to a path; ``ConfigStore()`` with no path is a process-local cache
@@ -69,8 +78,11 @@ from repro.core.tuning_space import Config, TuningSpace
 from repro.tuning.serialize import model_from_dict, model_to_dict
 
 FORMAT = "repro.config_store"
-VERSION = 1
+VERSION = 2
+# versions this code can read and merge (v1: 3-part keys, no kind)
+READABLE_VERSIONS = (1, 2)
 _SEP = "|"
+DEFAULT_KIND = "kernel"
 
 
 def content_crc(entries: Dict[str, Any], models: Dict[str, Any]) -> int:
@@ -106,13 +118,45 @@ def quarantine_file(path: str, why: str) -> str:
     return dest
 
 
-def store_key(space: str, bucket: str, hardware: str) -> str:
-    """Canonical ``space|bucket|hardware`` key (fields must not contain |)."""
-    parts = (str(space), str(bucket), str(hardware))
+def legacy_kind(space: str) -> str:
+    """Problem kind a pre-v2 (kind-less) key implies from its space name.
+
+    Before the ``TuningProblem`` refactor only two artifact producers
+    existed: the serve autotuner (space ``serve_online`` / ``serve*``)
+    and kernel tuning (everything else)."""
+    return "serve" if str(space).startswith("serve") else DEFAULT_KIND
+
+
+def store_key(space: str, bucket: str, hardware: str,
+              kind: Optional[str] = None) -> str:
+    """Canonical ``kind|space|bucket|hardware`` key (no field contains |).
+
+    ``kind=None`` infers the problem kind from the space name via
+    ``legacy_kind`` — exactly the rule version-1 keys upgrade under, so
+    pre-refactor call sites keep resolving to the same artifacts."""
+    parts = (str(kind if kind is not None else legacy_kind(space)),
+             str(space), str(bucket), str(hardware))
     for p in parts:
         if _SEP in p:
             raise ValueError(f"store key field {p!r} contains {_SEP!r}")
     return _SEP.join(parts)
+
+
+def split_key(key: str) -> Tuple[str, str, str, str]:
+    """``(kind, space, bucket, hardware)`` of a store key, tolerating the
+    3-part version-1 form (kind inferred via ``legacy_kind``)."""
+    parts = str(key).split(_SEP)
+    if len(parts) == 4:
+        return parts[0], parts[1], parts[2], parts[3]
+    if len(parts) == 3:
+        return legacy_kind(parts[0]), parts[0], parts[1], parts[2]
+    raise ValueError(f"malformed store key {key!r}")
+
+
+def upgrade_key(key: str) -> str:
+    """The version-2 form of any (possibly version-1) store key."""
+    kind, space, bucket, hardware = split_key(key)
+    return store_key(space, bucket, hardware, kind=kind)
 
 
 class _FileLock:
@@ -144,7 +188,7 @@ class _FileLock:
 
 @dataclasses.dataclass(frozen=True)
 class StoreEntry:
-    """One tuned configuration for one (space, bucket, hardware)."""
+    """One tuned configuration for one (kind, space, bucket, hardware)."""
 
     space: str
     bucket: str
@@ -153,14 +197,20 @@ class StoreEntry:
     runtime: float              # best measured seconds at tuning time
     trials: int                 # live empirical tests spent finding it
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    kind: str = ""              # "" => inferred from the space name
+
+    def __post_init__(self):
+        if not self.kind:
+            object.__setattr__(self, "kind", legacy_kind(self.space))
 
     @property
     def key(self) -> str:
-        return store_key(self.space, self.bucket, self.hardware)
+        return store_key(self.space, self.bucket, self.hardware,
+                         kind=self.kind)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
-            "space": self.space, "bucket": self.bucket,
+            "kind": self.kind, "space": self.space, "bucket": self.bucket,
             "hardware": self.hardware, "config": dict(self.config),
             "runtime": float(self.runtime), "trials": int(self.trials),
             "meta": self.meta,
@@ -172,6 +222,7 @@ class StoreEntry:
             space=d["space"], bucket=d["bucket"], hardware=d["hardware"],
             config=dict(d["config"]), runtime=float(d["runtime"]),
             trials=int(d["trials"]), meta=dict(d.get("meta", {})),
+            kind=str(d.get("kind", "")),   # v1 entry dicts carry no kind
         )
 
 
@@ -193,16 +244,19 @@ class ConfigStore:
             self.load(path)
 
     # -- tuned configs ---------------------------------------------------------
-    def get(self, space: str, bucket: str, hardware: str
-            ) -> Optional[StoreEntry]:
-        return self._entries.get(store_key(space, bucket, hardware))
+    def get(self, space: str, bucket: str, hardware: str,
+            kind: Optional[str] = None) -> Optional[StoreEntry]:
+        return self._entries.get(store_key(space, bucket, hardware,
+                                           kind=kind))
 
     def put(self, space: str, bucket: str, hardware: str, config: Config,
             runtime: float, trials: int,
-            meta: Optional[Dict[str, Any]] = None) -> StoreEntry:
+            meta: Optional[Dict[str, Any]] = None,
+            kind: Optional[str] = None) -> StoreEntry:
         entry = StoreEntry(space=space, bucket=bucket, hardware=hardware,
                            config=dict(config), runtime=float(runtime),
-                           trials=int(trials), meta=dict(meta or {}))
+                           trials=int(trials), meta=dict(meta or {}),
+                           kind=kind or "")
         self._entries[entry.key] = entry
         self._autosave()
         return entry
@@ -217,18 +271,20 @@ class ConfigStore:
         return key in self._entries
 
     # -- model artifacts -------------------------------------------------------
-    def get_model_dict(self, space: str, bucket: str, hardware: str
-                       ) -> Optional[Dict]:
-        return self._models.get(store_key(space, bucket, hardware))
+    def get_model_dict(self, space: str, bucket: str, hardware: str,
+                       kind: Optional[str] = None) -> Optional[Dict]:
+        return self._models.get(store_key(space, bucket, hardware,
+                                          kind=kind))
 
     def model_keys(self) -> Iterator[str]:
-        """All stored model-artifact keys (``space|bucket|hardware``)."""
+        """All stored model-artifact keys (``kind|space|bucket|hardware``)."""
         return iter(self._models)
 
     def put_model_dict(self, space: str, bucket: str, hardware: str,
                        artifact: Dict,
                        revision: Optional[int] = None,
-                       n_obs: Optional[int] = None) -> None:
+                       n_obs: Optional[int] = None,
+                       kind: Optional[str] = None) -> None:
         """Store a model artifact under a MONOTONIC ``revision``.
 
         A model retrained on more observations must supersede its stale
@@ -239,7 +295,7 @@ class ConfigStore:
         observations trained it, informational).  ``_merge_from`` resolves
         model conflicts by the higher revision.
         """
-        key = store_key(space, bucket, hardware)
+        key = store_key(space, bucket, hardware, kind=kind)
         artifact = dict(artifact)
         if revision is None:
             prev = self._models.get(key, {})
@@ -251,11 +307,11 @@ class ConfigStore:
         self._autosave()
 
     def load_model(self, space: str, bucket: str, hardware: str,
-                   bind_space: Optional[TuningSpace] = None
-                   ) -> Optional[TPPCModel]:
+                   bind_space: Optional[TuningSpace] = None,
+                   kind: Optional[str] = None) -> Optional[TPPCModel]:
         """Reconstruct a stored model, optionally bound to an existing space
         (compatibility-checked by the serializer)."""
-        d = self.get_model_dict(space, bucket, hardware)
+        d = self.get_model_dict(space, bucket, hardware, kind=kind)
         if d is None:
             return None
         return model_from_dict(d, space=bind_space)
@@ -264,29 +320,33 @@ class ConfigStore:
                    model: TPPCModel,
                    model_space: Optional[TuningSpace] = None,
                    revision: Optional[int] = None,
-                   n_obs: Optional[int] = None) -> None:
+                   n_obs: Optional[int] = None,
+                   kind: Optional[str] = None) -> None:
         self.put_model_dict(space, bucket, hardware,
                             model_to_dict(model, model_space),
-                            revision=revision, n_obs=n_obs)
+                            revision=revision, n_obs=n_obs, kind=kind)
 
-    def nearest_model_key(self, space: str, bucket: str, hardware: str
-                          ) -> Optional[str]:
-        """Best stored-model key for ``(space, bucket, hardware)``.
+    def nearest_model_key(self, space: str, bucket: str, hardware: str,
+                          kind: Optional[str] = None) -> Optional[str]:
+        """Best stored-model key for ``(kind, space, bucket, hardware)``.
 
         Preference order mirrors the paper's portability claims: exact hit;
         same bucket on other hardware (PC_ops predictions are
         hardware-independent — §4.4's cross-GPU scenario); same hardware on
         another input bucket (§4.5's cross-input scenario); any model of the
-        same space.  Ties break deterministically (sorted key order).
-        ``None`` when no model of the space exists.
+        same space.  The scan never crosses problem kinds — a serve-space
+        model must not warm-start a kernel job that happens to share the
+        space name.  Ties break deterministically (sorted key order).
+        ``None`` when no model of the kind+space exists.
         """
-        exact = store_key(space, bucket, hardware)
+        kind = kind if kind is not None else legacy_kind(space)
+        exact = store_key(space, bucket, hardware, kind=kind)
         if exact in self._models:
             return exact
         same_bucket, same_hw, same_space = [], [], []
         for k in sorted(self._models):
-            s, b, h = k.split(_SEP)
-            if s != space:
+            kk, s, b, h = split_key(k)
+            if kk != kind or s != space:
                 continue
             if b == bucket:
                 same_bucket.append(k)
@@ -300,11 +360,12 @@ class ConfigStore:
         return None
 
     def load_nearest_model(self, space: str, bucket: str, hardware: str,
-                           bind_space: Optional[TuningSpace] = None
+                           bind_space: Optional[TuningSpace] = None,
+                           kind: Optional[str] = None
                            ) -> Tuple[Optional[TPPCModel], Optional[str]]:
         """``(model, key)`` for the nearest stored artifact (None, None on
         miss) — the fleet's warm-start hook."""
-        key = self.nearest_model_key(space, bucket, hardware)
+        key = self.nearest_model_key(space, bucket, hardware, kind=kind)
         if key is None:
             return None, None
         return model_from_dict(self._models[key], space=bind_space), key
@@ -365,24 +426,33 @@ class ConfigStore:
         the HIGHER ``revision`` (a model retrained on more observations
         supersedes its stale ancestor; runtimes can't order artifacts);
         ties — including legacy revision-less artifacts — keep ours.
+
+        Version-1 dicts merge too: their 3-part keys upgrade to the
+        ``kind|...`` form on the way in (``upgrade_key``), so a daemon
+        running this code can share a corpus with files written before
+        the refactor.
         """
-        if d.get("format") != FORMAT or d.get("version") != VERSION:
+        if d.get("format") != FORMAT \
+                or d.get("version") not in READABLE_VERSIONS:
             raise ValueError(
-                f"refusing to merge non-{FORMAT}-v{VERSION} file "
+                f"refusing to merge non-{FORMAT}-v{READABLE_VERSIONS} file "
                 f"(format={d.get('format')!r} version={d.get('version')!r})")
         for k, e in d.get("entries", {}).items():
             other = StoreEntry.from_dict(e)
+            k = upgrade_key(k)
             mine = self._entries.get(k)
             if mine is None or other.runtime < mine.runtime:
                 self._entries[k] = other
         for k, m in d.get("models", {}).items():
+            k = upgrade_key(k)
             mine = self._models.get(k)
             if mine is None or int(m.get("revision", 0)) \
                     > int(mine.get("revision", 0)):
                 self._models[k] = m
 
     def prune(self, keep_hardware=None, keep_spaces=None,
-              keep_buckets=None, dry_run: bool = False) -> Dict[str, int]:
+              keep_buckets=None, keep_kinds=None,
+              dry_run: bool = False) -> Dict[str, int]:
         """GC entries and model artifacts for retired fleet members.
 
         Each ``keep_*`` is an iterable of values to KEEP for that key
@@ -395,6 +465,7 @@ class ConfigStore:
         path and something was actually dropped.
 
             store.prune(keep_hardware={"tpu_v5e"})   # tpu_v4 left the fleet
+            store.prune(keep_kinds={"kernel"})       # drop serve/sharding
             store.prune(keep_spaces={"gemm"}, dry_run=True)   # would-drop
         """
         keep_hardware = set(keep_hardware) if keep_hardware is not None \
@@ -402,10 +473,12 @@ class ConfigStore:
         keep_spaces = set(keep_spaces) if keep_spaces is not None else None
         keep_buckets = set(keep_buckets) if keep_buckets is not None \
             else None
+        keep_kinds = set(keep_kinds) if keep_kinds is not None else None
 
         def drop(key: str) -> bool:
-            s, b, h = key.split(_SEP)
-            return ((keep_spaces is not None and s not in keep_spaces)
+            kk, s, b, h = split_key(key)
+            return ((keep_kinds is not None and kk not in keep_kinds)
+                    or (keep_spaces is not None and s not in keep_spaces)
                     or (keep_buckets is not None and b not in keep_buckets)
                     or (keep_hardware is not None and h not in keep_hardware))
 
@@ -460,7 +533,7 @@ class ConfigStore:
         if d.get("format") != FORMAT:
             raise ValueError(
                 f"not a {FORMAT} artifact: format={d.get('format')!r}")
-        if d.get("version") != VERSION:
+        if d.get("version") not in READABLE_VERSIONS:
             raise ValueError(
                 f"unsupported {FORMAT} version {d.get('version')!r}")
         crc = d.get("crc")
@@ -473,14 +546,17 @@ class ConfigStore:
 
     def load(self, path: str) -> "ConfigStore":
         """Load a store file; a damaged one is quarantined and the store
-        comes up EMPTY (but usable) rather than crashing the caller."""
+        comes up EMPTY (but usable) rather than crashing the caller.
+        Version-1 keys upgrade to the ``kind|...`` schema on load (the
+        next save persists them in version-2 form)."""
         d = self._read_checked(path)
         if d is None:
             self._entries, self._models = {}, {}
             return self
-        self._entries = {k: StoreEntry.from_dict(e)
+        self._entries = {upgrade_key(k): StoreEntry.from_dict(e)
                          for k, e in d.get("entries", {}).items()}
-        self._models = dict(d.get("models", {}))
+        self._models = {upgrade_key(k): m
+                        for k, m in d.get("models", {}).items()}
         return self
 
     def _autosave(self) -> None:

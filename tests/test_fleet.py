@@ -427,16 +427,16 @@ def test_nearest_model_preference_order(gemm_recorded):
     store.save_model(space.name, "bucketB", "hw2", model, space)
     # exact
     assert store.nearest_model_key(space.name, "bucketA", "hw1") \
-        == f"{space.name}|bucketA|hw1"
+        == f"kernel|{space.name}|bucketA|hw1"
     # same bucket, other hardware beats same hardware, other bucket
     assert store.nearest_model_key(space.name, "bucketA", "hw2") \
-        == f"{space.name}|bucketA|hw1"
+        == f"kernel|{space.name}|bucketA|hw1"
     # same hardware, other bucket
     assert store.nearest_model_key(space.name, "bucketC", "hw2") \
-        == f"{space.name}|bucketB|hw2"
+        == f"kernel|{space.name}|bucketB|hw2"
     # any model of the space
     assert store.nearest_model_key(space.name, "bucketC", "hw9") \
-        == f"{space.name}|bucketA|hw1"
+        == f"kernel|{space.name}|bucketA|hw1"
     # unknown space: nothing
     assert store.nearest_model_key("other_space", "b", "h") is None
     m, key = store.load_nearest_model(space.name, "bucketA", "hw2",

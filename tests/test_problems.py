@@ -1,0 +1,322 @@
+"""Unified ``TuningProblem`` abstraction (ISSUE 8).
+
+The acceptance surface: every registered kernel routed through the
+``KernelProblem`` adapter produces a bit-identical ask-tell trace to the
+legacy ``job_from_registry`` path; the ``ConfigStore`` speaks the
+``kind|space|bucket|hardware`` key schema while still loading pre-refactor
+version-1 files; sharding and serve problems expose real spaces, portable
+counter workloads, and deterministic evaluators; ``parse_problem`` gives
+actionable errors; and the service daemon resolves ``kind="problem"``
+submits through the registry.
+"""
+import json
+
+import pytest
+
+from repro.core import SPECS
+from repro.fleet import (FleetTuner, VirtualWorkerPool, job_from_problem,
+                         job_from_registry)
+from repro.tuning import ConfigStore
+from repro.tuning.problem import (KernelProblem, list_problems, make_problem,
+                                  parse_problem, problem_kinds,
+                                  system_problems)
+from repro.tuning.store import (VERSION, content_crc, legacy_kind, split_key,
+                                store_key, upgrade_key)
+
+HW = "tpu_v4"
+
+
+def _run_single_lane(job):
+    pool = VirtualWorkerPool(workers=1)
+    try:
+        rep = FleetTuner([job], pool, store=None, in_flight=1,
+                         publish_models=False).run()
+    finally:
+        pool.close()
+    return rep.results[0]
+
+
+# =============================================================================
+# Golden gate: the kernel adapter is bit-identical to the legacy path
+# =============================================================================
+def test_kernel_adapter_golden_every_registered_kernel():
+    """job_from_problem(KernelProblem) must replay the exact legacy trace
+    for EVERY registered kernel benchmark — the refactor costs nothing."""
+    from repro.kernels.registry import BENCHMARKS
+
+    for kernel in sorted(BENCHMARKS):
+        for input_key in sorted(BENCHMARKS[kernel].inputs):
+            legacy = job_from_registry(kernel, input_key, HW,
+                                       budget=8, seed=3)
+            adapter = job_from_problem(KernelProblem(kernel, input_key),
+                                       HW, budget=8, seed=3,
+                                       name=legacy.name)
+            assert adapter.kind == "kernel"
+            assert adapter.bucket == legacy.bucket
+            r_legacy = _run_single_lane(legacy)
+            r_adapter = _run_single_lane(adapter)
+            assert r_adapter.trace == r_legacy.trace, \
+                f"{kernel}/{input_key} diverged"
+            assert r_adapter.history == r_legacy.history
+            assert r_adapter.best_config == r_legacy.best_config
+
+
+# =============================================================================
+# Store key schema: v2 keys, v1 files keep loading
+# =============================================================================
+def test_store_key_schema_and_legacy_inference():
+    assert store_key("gemm", "2048", "tpu_v4") == "kernel|gemm|2048|tpu_v4"
+    assert store_key("serve_online", "p1n1", "hw") == \
+        "serve|serve_online|p1n1|hw"
+    assert store_key("sharding_x", "b", "hw", kind="sharding") == \
+        "sharding|sharding_x|b|hw"
+    # 3-part (v1) keys split with the kind inferred from the space name
+    assert split_key("gemm|2048|tpu_v4") == \
+        ("kernel", "gemm", "2048", "tpu_v4")
+    assert split_key("serve_online|p1n1|hw") == \
+        ("serve", "serve_online", "p1n1", "hw")
+    assert upgrade_key("gemm|2048|tpu_v4") == "kernel|gemm|2048|tpu_v4"
+    assert upgrade_key("sharding|s|b|h") == "sharding|s|b|h"  # idempotent
+    assert legacy_kind("serve_online") == "serve"
+    assert legacy_kind("gemm") == "kernel"
+    with pytest.raises(ValueError):
+        split_key("only|two")
+    with pytest.raises(ValueError):
+        store_key("sp|ace", "b", "hw")
+
+
+def test_store_loads_pre_refactor_v1_file(tmp_path):
+    """A literal version-1 store file (3-part keys, no kind fields) must
+    load with keys upgraded, resolve through kind-aware gets, survive
+    prune(keep_kinds=), and re-save in version-2 form."""
+    entries = {
+        "gemm|2048|tpu_v4": {
+            "space": "gemm", "bucket": "2048", "hardware": "tpu_v4",
+            "config": {"TILE": 128}, "runtime": 0.002, "trials": 9,
+            "meta": {},
+        },
+        "serve_online|p1n1|tpu_v5e": {
+            "space": "serve_online", "bucket": "p1n1",
+            "hardware": "tpu_v5e",
+            "config": {"BATCH": 8, "MAX_SEQ": 64},
+            "runtime": 0.01, "trials": 6, "meta": {},
+        },
+    }
+    models = {"gemm|2048|tpu_v4": {"format": "repro.tppc_model",
+                                   "revision": 3}}
+    path = str(tmp_path / "v1_store.json")
+    with open(path, "w") as f:
+        json.dump({"format": "repro.config_store", "version": 1,
+                   "crc": content_crc(entries, models),
+                   "entries": entries, "models": models}, f)
+
+    store = ConfigStore(path)
+    assert not store.quarantined
+    assert len(store) == 2
+    # upgraded keys, kind-aware resolution (explicit and inferred)
+    e = store.get("gemm", "2048", "tpu_v4", kind="kernel")
+    assert e is not None and e.config == {"TILE": 128}
+    assert e.kind == "kernel" and e.key == "kernel|gemm|2048|tpu_v4"
+    assert store.get("gemm", "2048", "tpu_v4") is e     # legacy call site
+    s = store.get("serve_online", "p1n1", "tpu_v5e")
+    assert s is not None and s.kind == "serve"
+    assert store.get_model_dict("gemm", "2048", "tpu_v4",
+                                kind="kernel")["revision"] == 3
+    # a serve-kind get must NOT see the kernel entry
+    assert store.get("gemm", "2048", "tpu_v4", kind="serve") is None
+
+    stats = store.prune(keep_kinds={"kernel"})
+    assert stats["dropped_entries"] == 1
+    assert store.get("serve_online", "p1n1", "tpu_v5e") is None
+    assert store.get("gemm", "2048", "tpu_v4") is not None
+
+    # the autosaved file is now version 2 with 4-part keys throughout
+    with open(path) as f:
+        d = json.load(f)
+    assert d["version"] == VERSION == 2
+    assert set(d["entries"]) == {"kernel|gemm|2048|tpu_v4"}
+    assert set(d["models"]) == {"kernel|gemm|2048|tpu_v4"}
+    reopened = ConfigStore(path)
+    assert reopened.get("gemm", "2048", "tpu_v4").trials == 9
+
+
+def test_store_kinds_do_not_collide(tmp_path):
+    """Two problems sharing a space name but differing in kind hold
+    independent artifacts under the same (space, bucket, hardware)."""
+    store = ConfigStore(str(tmp_path / "s.json"))
+    store.put("sp", "b", "hw", config={"A": 1}, runtime=1.0, trials=1,
+              kind="kernel")
+    store.put("sp", "b", "hw", config={"A": 2}, runtime=2.0, trials=2,
+              kind="sharding")
+    assert len(store) == 2
+    assert store.get("sp", "b", "hw", kind="kernel").config == {"A": 1}
+    assert store.get("sp", "b", "hw", kind="sharding").config == {"A": 2}
+
+
+# =============================================================================
+# Registry: specs, errors, enumeration
+# =============================================================================
+def test_problem_registry_kinds_and_listing():
+    kinds = problem_kinds()
+    assert {"kernel", "serve", "sharding"} <= set(kinds)
+    specs = list_problems()
+    assert all(":" in s for s in specs)
+    assert any(s.startswith("kernel:matmul/") for s in specs)
+    assert any(s.startswith("sharding:") for s in specs)
+    assert "serve:p9n9" in specs
+    # every listed spec round-trips through parse_problem
+    for spec in specs:
+        p = parse_problem(spec)
+        assert p.spec == spec
+        assert len(p.space()) > 0
+
+
+def test_parse_problem_errors_list_valid_kinds():
+    with pytest.raises(ValueError) as ei:
+        parse_problem("bogus")                      # no colon
+    assert "kind:name" in str(ei.value) and "kernel" in str(ei.value)
+    with pytest.raises(KeyError) as ei:
+        parse_problem("wat:thing")                  # unknown kind
+    assert "valid kinds" in str(ei.value)
+    with pytest.raises(KeyError):
+        make_problem("kernel", "no_such_kernel/1")
+    with pytest.raises(KeyError):
+        KernelProblem("matmul", "no_such_input")
+
+
+def test_system_problems_covers_three_kinds():
+    problems = system_problems("qwen2.5-3b", kernels=["matmul"])
+    kinds = [p.kind for p in problems]
+    assert kinds == ["kernel", "sharding", "serve"]
+    jobs = [job_from_problem(p, HW, budget=4, seed=0) for p in problems]
+    assert {j.kind for j in jobs} == {"kernel", "sharding", "serve"}
+    # kernel jobs replay the cost model; system jobs measure in-process
+    assert jobs[0].eval_fn is None
+    assert jobs[1].eval_fn is not None and jobs[2].eval_fn is not None
+
+
+# =============================================================================
+# Sharding problem: space, portable counters, deterministic evaluator
+# =============================================================================
+def test_sharding_problem_space_and_counters():
+    from repro.distributed.tuning import ShardingProblem
+
+    p = ShardingProblem.from_name("qwen2.5-3b/train_4k", seed=5)
+    sp = p.space()
+    params = {pp.name: list(pp.values) for pp in sp.parameters}
+    assert set(params) == {"MESH", "FSDP", "SEQ", "GA"}
+    assert params["GA"] == [1, 2, 4]
+    # 7 meshes x FSDP x SEQ x GA = 84 minus the constraint-pruned layouts
+    assert len(sp) == 72
+    wl = p.workload_fn()
+    counters = wl(sp[0])
+    # portable counters only: every feature must be a modeled counter the
+    # TP→PC model can learn (the lane derate folds into MXU_FLOPS)
+    assert "LANE_E_HINT" not in counters
+    assert {"MXU_FLOPS", "HBM_RD", "HBM_WR", "ICI_B"} <= set(counters)
+    assert all(v >= 0.0 for v in counters.values())
+
+
+def test_sharding_evaluator_deterministic_and_skewed():
+    from repro.distributed.tuning import ShardingProblem
+
+    p = ShardingProblem.from_name("qwen2.5-3b/train_4k", seed=5)
+    sp = p.space()
+    hw = SPECS["tpu_v5e"]
+    ev = p.make_evaluator(hw)
+    r1 = ev(3, True)
+    r2 = ev(3, True)
+    assert r1[0] == r2[0] and r1[2] == r2[2]        # bit-reproducible
+    assert r1[1] is not None                         # profiled counters
+    assert ev(3, False)[1] is None                   # plain test: no counters
+    # the measured backend applies skews/jitter the analytic model lacks
+    from repro.core import costmodel
+    wl = p.workload_fn()
+    analytic = float(costmodel.execute(wl(sp[3]), hw).runtime)
+    assert ev(3, False)[0] != analytic
+    assert p.measured_runtime(sp[3], hw) > 0.0
+
+
+def test_sharding_problem_tunes_through_fleet(tmp_path):
+    from repro.distributed.tuning import ShardingProblem
+
+    p = ShardingProblem.from_name("qwen2.5-3b/train_4k", seed=0)
+    job = job_from_problem(p, "tpu_v5e", budget=10, seed=0)
+    assert job.kind == "sharding"
+    store = ConfigStore(str(tmp_path / "s.json"))
+    pool = VirtualWorkerPool(workers=2)
+    try:
+        rep = FleetTuner([job], pool, store=store).run()
+    finally:
+        pool.close()
+    r = rep.results[0]
+    assert r.trials == 10 and r.best_runtime > 0.0
+    entry = store.get(job.space.name, job.bucket, job.hardware_key,
+                      kind="sharding")
+    assert entry is not None and entry.config == r.best_config
+
+
+# =============================================================================
+# Serve problem: feasibility pricing + explicit shape override
+# =============================================================================
+def test_serve_problem_feasibility_and_shape_override():
+    from repro.serve.autotune import INFEASIBLE_S, ServeProblem
+
+    p = ServeProblem("p9n9")
+    plen, new = p.rep_shape
+    need = plen + new
+    sp = p.space()
+    hw = SPECS["tpu_v5e"]
+    ev = p.make_evaluator(hw)
+    saw_infeasible = saw_feasible = False
+    for i in range(len(sp)):
+        rt = ev(i, False)[0]
+        if int(sp[i]["MAX_SEQ"]) < need:
+            assert rt >= INFEASIBLE_S
+            saw_infeasible = True
+        else:
+            assert rt < INFEASIBLE_S
+            saw_feasible = True
+    assert saw_infeasible and saw_feasible
+
+    # the service path measures at the CLIENT's representative shape
+    p2 = ServeProblem("p9n9", shape=(16, 6))
+    assert p2.rep_shape == (16, 6)
+    assert p2.bucket == "p9n9"
+    with pytest.raises(ValueError):
+        ServeProblem("not-a-bucket")
+
+
+# =============================================================================
+# Service: kind="problem" submits resolve through the registry
+# =============================================================================
+def test_daemon_problem_submit_end_to_end(tmp_path):
+    from repro.fleet import VirtualWorkerPool as Pool
+    from repro.service import (ServiceClient, ServiceError, TuningDaemon)
+    from repro.service import protocol as P
+
+    d = TuningDaemon(Pool(workers=2), ConfigStore(),
+                     default_trial_budget=5)
+    d.start()
+    try:
+        with ServiceClient(d.address) as c:
+            r = c.submit_problem("t", "kernel:matmul/2048", HW)
+            res = c.result(r["request_id"], timeout=120)
+            assert res["state"] == "done" and res["trials"] == 5
+            # repeat resolves store-only under the kind-namespaced key
+            repeat = c.submit_problem("t2", "kernel:matmul/2048", HW)
+            assert repeat["state"] == "done" and repeat["trials"] == 0
+            # a non-kernel kind runs through the same daemon
+            r2 = c.submit_problem("t", "serve:p1n1", HW,
+                                  params={"arch": "qwen2.5-3b"}, budget=4)
+            res2 = c.result(r2["request_id"], timeout=120)
+            assert res2["state"] == "done" and res2["trials"] == 4
+            with pytest.raises(ServiceError) as ei:
+                c.submit_problem("t", "wat:thing", HW)
+            assert ei.value.code == P.E_UNKNOWN_PROBLEM
+            with pytest.raises(ServiceError) as ei:
+                c.submit_problem("t", "no-colon", HW)
+            assert ei.value.code == P.E_UNKNOWN_PROBLEM
+    finally:
+        d.shutdown(drain=False)
+        assert d.wait(timeout=60)

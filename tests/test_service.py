@@ -108,7 +108,7 @@ def test_sharded_store_api_parity(tmp_path):
         e = reopened.get(s, b, h)
         assert e is not None and e.config == {"X": i}
     assert {e.key for e in reopened.entries()} == \
-        {f"{s}|{b}|{h}" for s, b, h in keys}
+        {f"kernel|{s}|{b}|{h}" for s, b, h in keys}
 
 
 def test_sharded_store_nearest_model_tiers(tmp_path):
@@ -119,13 +119,13 @@ def test_sharded_store_nearest_model_tiers(tmp_path):
     store.put_model_dict("sp", "bucketB", "hw2", dict(art))
     # exact hit
     assert store.nearest_model_key("sp", "bucketA", "hw1") == \
-        "sp|bucketA|hw1"
+        "kernel|sp|bucketA|hw1"
     # same bucket, other hardware beats same hardware, other bucket
     assert store.nearest_model_key("sp", "bucketA", "hw2") == \
-        "sp|bucketA|hw1"
+        "kernel|sp|bucketA|hw1"
     # same hardware, other bucket
     assert store.nearest_model_key("sp", "bucketC", "hw2") == \
-        "sp|bucketB|hw2"
+        "kernel|sp|bucketB|hw2"
     assert store.nearest_model_key("other", "bucketA", "hw1") is None
 
 

@@ -171,8 +171,8 @@ def test_recover_rebuilds_store_from_journal_after_shard_loss(tmp_path):
     d2 = _daemon(ShardedConfigStore(corpus, n_shards=2),
                  journal=jpath, recover=True)
     assert d2.recovery["repaired_entries"] == 1
-    space, bucket, hw = key.split("|")
-    entry = d2.store.get(space, bucket, hw)
+    kind, space, bucket, hw = key.split("|")
+    entry = d2.store.get(space, bucket, hw, kind=kind)
     assert entry is not None and entry.meta.get("recovered")
     # repeat submit: answered from the repaired store, zero trials
     r = _submit(d2, "b")
