@@ -1,0 +1,594 @@
+"""Hot-path throughput benchmark: group commit, off-loop training, delta saves.
+
+Three experiments over the optimizations that moved durability and model
+training off the service hot path:
+
+1. **Journal storm** — one client process drives 8 tenant connections,
+   each with a sliding window of pipelined store-first submits, against
+   one ``TuningDaemon`` (real localhost sockets), so every ack costs
+   exactly two journal records and zero trials.  Each (mode, rep) runs
+   in a fresh subprocess; the same storm runs under each durability
+   mode: ``always`` (per-record inline fsync — the old behavior),
+   ``batch`` (group commit: acks still wait for the fsync covering their
+   records, one flush covers a burst), and ``off`` (flush only).  Gates:
+   batch ≥ ``--min-journal-speedup`` (3×) the submit-to-ack throughput
+   of always, and the batch journal is COMPLETE — every acked request's
+   submit+done records are on disk after the storm, on every rep.
+
+2. **Trainer offload** — a ``ThreadWorkerPool`` fleet over six jobs with
+   six DISTINCT search spaces and blocking measurement closures, run
+   from a cold store so every finalize trains and publishes a real
+   model: ``train_async=False`` (model training stalls the fleet loop,
+   the old behavior) vs ``train_async=True`` (background trainer
+   thread).  Budget multipliers stagger completion so the expensive
+   trainers finish while cheap-training jobs still have trials left to
+   overlap.  Gates: the async fleet's makespan beats sync by
+   ``--min-trainer-speedup`` and both runs produce IDENTICAL per-job
+   results (the offload must not change what gets tuned, only when the
+   loop blocks).
+
+3. **Store saves** — one ``ConfigStore`` with a populated corpus: a
+   forced full save (read-back + merge + rewrite, the old every-save
+   cost) vs a dirty save after one ``put`` (own-write fast path: the
+   stat token proves the file is ours, no read-back) vs a clean save
+   (pure no-op).  Gates: no-op ≥ ``--min-noop-speedup`` (10×) and the
+   dirty fast path ≥ ``--min-dirty-speedup`` (1.3×) vs the forced full
+   save.
+
+Writes ``BENCH_service_throughput.json``; exits non-zero on violation.
+
+    PYTHONPATH=src python -m benchmarks.bench_service_throughput [--smoke]
+        [--out BENCH_service_throughput.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.fleet import (FleetTuner, ThreadWorkerPool, VirtualWorkerPool,
+                         job_from_registry)
+from repro.service import ServiceClient, ShardedConfigStore, TuningDaemon
+from repro.service.journal import MODES, RequestJournal
+from repro.tuning import ConfigStore
+
+SCHEMA = "repro.bench_service_throughput"
+VERSION = 1
+
+STORM_KEYS = (("matmul", "2048", "tpu_v4"), ("transpose", "8192", "tpu_v4"),
+              ("conv2d", "4096", "tpu_v5e"), ("matmul", "128", "tpu_v5e"))
+STORM_TENANTS = 8
+STORM_DEPTH = 4     # in-flight submits per tenant (a suite, not one job)
+
+# Six jobs over six DISTINCT search spaces — each publishes its own model
+# key, so no job's searcher binding ever defers on another's pending
+# publish and every finalize performs real model training (cold store).
+# Budget multipliers stagger completion: the expensive trainers (coulomb
+# ~180ms, conv2d/matmul ~90ms) finish their trials early, so their
+# training either stalls dispatch (sync) or overlaps the cheap trainers'
+# long trial tails (async).
+TRAIN_KERNELS = (("coulomb", "small_grid", "tpu_v4", 1),
+                 ("conv2d", "4096", "tpu_v4", 1),
+                 ("matmul", "2048", "tpu_v5e", 1),
+                 ("nbody", "16k", "tpu_v5e", 2),
+                 ("attention", "default", "tpu_v4", 3),
+                 ("transpose", "8192", "tpu_v5e", 3))
+WORKERS = 4
+
+
+def _pctile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q))
+
+
+# ---------------------------------------------------------------- journal
+
+def _storm_daemon(root: str, mode: str) -> TuningDaemon:
+    """Daemon with a pre-populated store (every storm submit resolves
+    store-first: zero trials, two journal records) and a journal in the
+    requested durability mode."""
+    store = ShardedConfigStore(os.path.join(root, "corpus"), n_shards=4)
+    for k, inp, hw in STORM_KEYS:
+        job = job_from_registry(k, inp, hw)
+        store.put(job.space.name, job.bucket, job.hardware_key,
+                  config=dict(job.space[0]), runtime=1.0, trials=8,
+                  kind=job.kind)
+    store.save()
+    journal = RequestJournal(os.path.join(root, "journal.jsonl"), mode=mode)
+    d = TuningDaemon(VirtualWorkerPool(workers=WORKERS), store,
+                     journal=journal, in_flight=WORKERS)
+    d.start()
+    return d
+
+
+def _storm_child(argv: List[str]) -> int:
+    """The storm client process: 8 tenant connections, each keeping a
+    window of ``STORM_DEPTH`` submits in flight (a tenant tuning a
+    kernel suite submits a batch, not one job at a time).  Reports
+    per-ack latencies as JSON on stdout.
+
+    Runs out-of-process so the client's JSON/socket work does not share
+    the daemon's GIL, and as ONE process rather than one per tenant: on
+    a small host N client processes timeslice against the daemon, which
+    both steals server CPU and staggers arrivals that 8 genuinely
+    parallel clients would deliver simultaneously — understating every
+    mode and artificially starving the group commit of coalescable
+    records.  The sliding windows preserve the storm's defining
+    property (8 concurrent tenants under sustained submit pressure)
+    without the scheduler noise.  The submit lines are pre-encoded over
+    bare sockets for the same reason; latency is still full
+    submit-to-ack: send, wait, parse.
+    """
+    import socket
+    from collections import deque
+
+    from repro.service import protocol as P
+
+    host, port, tenants, per_tenant, seed, start_at = (
+        argv[0], int(argv[1]), int(argv[2]), int(argv[3]), int(argv[4]),
+        float(argv[5]))
+    out = {"lat": [], "rids": [], "errors": [], "start": 0.0, "end": 0.0}
+    loads, perf = json.loads, time.perf_counter
+    payloads = [[P.encode({"op": "submit", "kind": "kernel",
+                           "tenant": f"t{i}", "kernel": k, "input": inp,
+                           "hardware": hw, "budget": 4, "seed": seed})
+                 for k, inp, hw in STORM_KEYS] for i in range(tenants)]
+
+    def read_ack(i, f, sent_at):
+        r = loads(f.readline())
+        out["lat"].append(perf() - sent_at.popleft())
+        if not r.get("ok") or r.get("state") != "done":
+            out["errors"].append(f"t{i}: bad ack {r!r}")
+        else:
+            out["rids"].append(r["request_id"])
+
+    conns = []
+    try:
+        try:
+            for _ in range(tenants):
+                s = socket.create_connection((host, port), timeout=60)
+                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                conns.append((s, s.makefile("rb")))
+            nk = len(STORM_KEYS)
+            for n in range(2):  # warm every connection + the daemon path
+                for i, (s, _) in enumerate(conns):
+                    s.sendall(payloads[i][(i + n) % nk])
+                for _, f in conns:
+                    loads(f.readline())
+            while time.time() < start_at:
+                time.sleep(min(0.005, max(start_at - time.time(), 0)))
+            out["start"] = time.time()
+            sent = [deque() for _ in range(tenants)]
+            for n in range(per_tenant):
+                for i, (s, f) in enumerate(conns):
+                    if len(sent[i]) >= STORM_DEPTH:
+                        read_ack(i, f, sent[i])
+                    sent[i].append(perf())
+                    s.sendall(payloads[i][(i + n) % nk])
+            for i, (_, f) in enumerate(conns):
+                while sent[i]:
+                    read_ack(i, f, sent[i])
+            out["end"] = time.time()
+        finally:
+            for s, f in conns:
+                f.close()
+                s.close()
+    except Exception as exc:
+        out["errors"].append(f"storm: {exc!r}")
+    print(json.dumps(out))
+    return 0
+
+
+def _storm_once(root: str, mode: str, per_tenant: int, seed: int) -> Dict:
+    """8 pipelined tenant connections × ``per_tenant`` store-first
+    submits, driven by one out-of-process storm client."""
+    import subprocess
+
+    d = _storm_daemon(root, mode)
+    host, port = d.address
+    env = dict(os.environ)
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(sys.modules["repro"].__file__))))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    start_at = time.time() + 3.0   # lead time for child interpreter spinup
+    p = subprocess.Popen(
+        [sys.executable, "-m", "benchmarks.bench_service_throughput",
+         "--storm-child", host, str(port), str(STORM_TENANTS),
+         str(per_tenant), str(seed), repr(start_at)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    reports, errors = [], []
+    stdout, stderr = p.communicate(timeout=300)
+    if p.returncode != 0 or not stdout.strip():
+        errors.append(f"storm client died: {stderr.decode()[-300:]}")
+    else:
+        rep = json.loads(stdout)
+        reports.append(rep)
+        errors.extend(rep["errors"])
+    wall = (max(r["end"] for r in reports)
+            - min(r["start"] for r in reports)) if reports else 1.0
+    lat = [per["lat"] for per in reports]
+    acked = [per["rids"] for per in reports]
+    with ServiceClient(d.address) as c:
+        jstats = c.stats()["journal"]
+        c.shutdown(drain=True)
+    d.wait(timeout=120)
+    d.pool.close()
+    d.journal.close()
+
+    # completeness: every acked request's EV_SUBMIT and EV_DONE must be
+    # on disk after the storm (acks never outran durability)
+    on_disk: Dict[str, set] = {}
+    with open(os.path.join(root, "journal.jsonl")) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("rid"):
+                on_disk.setdefault(rec["rid"], set()).add(rec["ev"])
+    rids = [rid for per in acked for rid in per]
+    missing = [rid for rid in rids
+               if not {"submit", "done"} <= on_disk.get(rid, set())]
+    all_lat = [x for per in lat for x in per]
+    return {
+        "mode": mode,
+        "acks": len(all_lat),
+        "wall_s": wall,
+        "throughput_rps": len(all_lat) / max(wall, 1e-12),
+        "ack_p50_ms": _pctile(all_lat, 50) * 1e3 if all_lat else None,
+        "ack_p99_ms": _pctile(all_lat, 99) * 1e3 if all_lat else None,
+        "journal": {k: jstats[k] for k in
+                    ("mode", "records", "bytes", "commits", "last_batch",
+                     "max_batch", "pending") if k in jstats},
+        "complete": not missing and not errors,
+        "missing_records": missing[:5],
+        "errors": errors[:5],
+    }
+
+
+def _storm_isolated(root: str, mode: str, per_tenant: int,
+                    seed: int) -> Dict:
+    """One ``_storm_once`` in a fresh daemon process: long-lived
+    benchmark processes accumulate heap/allocator state that skews later
+    runs, so every (mode, rep) measurement starts from an identical
+    interpreter."""
+    import subprocess
+
+    env = dict(os.environ)
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(sys.modules["repro"].__file__))))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    p = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_service_throughput",
+         "--storm-once", root, mode, str(per_tenant), str(seed)],
+        capture_output=True, env=env, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if p.returncode != 0 or not p.stdout.strip():
+        return {"mode": mode, "acks": 0, "wall_s": 1.0,
+                "throughput_rps": 0.0, "ack_p50_ms": None,
+                "ack_p99_ms": None, "journal": {}, "complete": False,
+                "missing_records": [],
+                "errors": [f"storm daemon died: {p.stderr.decode()[-300:]}"]}
+    return json.loads(p.stdout)
+
+
+def run_journal_storm(root: str, per_tenant: int, seed: int,
+                      min_speedup: float, reps: int = 3) -> Dict:
+    """Interleaved repetitions — rep 0 of every mode, then rep 1, ... —
+    so slow drift in the host penalizes all modes alike; the gate reads
+    each mode's best rep (the run least disturbed by scheduler noise),
+    while completeness must hold on EVERY rep."""
+    runs: Dict[str, List[Dict]] = {m: [] for m in MODES}
+    for rep in range(reps):
+        for m in MODES:
+            runs[m].append(_storm_isolated(
+                os.path.join(root, f"{m}{rep}"), m, per_tenant,
+                seed + rep))
+    by_mode = {m: max(runs[m], key=lambda r: r["throughput_rps"])
+               for m in MODES}
+    for m in MODES:
+        by_mode[m]["complete"] = all(r["complete"] for r in runs[m])
+        by_mode[m]["rep_throughputs_rps"] = [
+            r["throughput_rps"] for r in runs[m]]
+    thr = {m: by_mode[m]["throughput_rps"] for m in MODES}
+    speedup = thr["batch"] / max(thr["always"], 1e-12)
+    b = by_mode["batch"]["journal"]
+    return {
+        "tenants": STORM_TENANTS,
+        "submits_per_tenant": per_tenant,
+        "reps": reps,
+        "keys": [list(k) for k in STORM_KEYS],
+        "modes": by_mode,
+        "batch_vs_always_speedup": speedup,
+        "off_vs_always_speedup": thr["off"] / max(thr["always"], 1e-12),
+        "batch_records_per_commit": (b.get("records", 0)
+                                     / max(b.get("commits", 1), 1)),
+        "meets_speedup_target": speedup >= min_speedup,
+        "batch_journal_complete": by_mode["batch"]["complete"],
+    }
+
+
+# ---------------------------------------------------------------- trainer
+
+def _train_jobs(budget: int, seed: int, delay_s: float):
+    """Six distinct-space model keys with a blocking, deterministic
+    measurement closure — real wall-clock trials on the thread pool,
+    identical runtimes regardless of scheduling."""
+    jobs = []
+    for k, inp, hw, mult in TRAIN_KERNELS:
+        job = job_from_registry(k, inp, hw, budget=budget * mult,
+                                seed=seed, searcher="random")
+
+        def eval_fn(index, profile, _n=len(job.space)):
+            time.sleep(delay_s)
+            return 1.0 + (index % _n) / _n, None, delay_s
+
+        job.eval_fn = eval_fn
+        jobs.append(job)
+    return jobs
+
+
+def _train_once(root: str, budget: int, seed: int, delay_s: float,
+                train_async: bool) -> Dict:
+    """One cold-store fleet pass: every job trains and publishes its
+    model at finalize (no key exists yet), work ``train_async=False``
+    performs inline on the scheduling loop — stalling dispatch while
+    other jobs' trials sleep on the pool — and ``train_async=True``
+    overlaps from the trainer thread."""
+    store = ShardedConfigStore(os.path.join(root, "corpus"), n_shards=4)
+    jobs = _train_jobs(budget, seed, delay_s)
+    pool = ThreadWorkerPool(workers=WORKERS)
+    try:
+        tuner = FleetTuner(jobs, pool, store=store, in_flight=len(jobs),
+                           train_async=train_async)
+        t0 = time.perf_counter()
+        rep = tuner.run()
+        wall = time.perf_counter() - t0
+    finally:
+        pool.close()
+    models = sum(1 for _ in store.model_keys())
+    return {
+        "train_async": train_async,
+        "wall_s": wall,
+        "jobs": len(rep.results),
+        "models_published": models,
+        "train_errors": list(getattr(tuner, "train_errors", [])),
+        "results": sorted((r.job, r.trials, round(r.best_runtime, 9))
+                          for r in rep.results),
+    }
+
+
+def run_trainer_offload(root: str, budget: int, seed: int, delay_s: float,
+                        min_speedup: float) -> Dict:
+    sync = _train_once(os.path.join(root, "sync"), budget, seed, delay_s,
+                       train_async=False)
+    off = _train_once(os.path.join(root, "async"), budget, seed, delay_s,
+                      train_async=True)
+    speedup = sync["wall_s"] / max(off["wall_s"], 1e-12)
+    return {
+        "budget_per_job": budget,
+        "trial_delay_ms": delay_s * 1e3,
+        "model_keys": len(TRAIN_KERNELS),
+        "sync": sync,
+        "async": off,
+        "makespan_speedup": speedup,
+        "meets_speedup_target": speedup >= min_speedup,
+        "results_identical": sync["results"] == off["results"],
+        "all_models_published": (off["models_published"]
+                                 == len(TRAIN_KERNELS)
+                                 and not off["train_errors"]),
+    }
+
+
+# ---------------------------------------------------------------- store
+
+def run_store_saves(root: str, n_entries: int, reps: int,
+                    min_noop_speedup: float,
+                    min_dirty_speedup: float) -> Dict:
+    os.makedirs(root, exist_ok=True)
+    path = os.path.join(root, "store.json")
+    store = ConfigStore(path)
+    store.autosave = False
+    for i in range(n_entries):
+        store.put(f"sp{i % 16}", f"b{i}", "tpu_v4",
+                  config={"BM": 64, "BN": 128, "i": i},
+                  runtime=1.0 + i * 1e-3, trials=8)
+    store.save()
+
+    def timed_once(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    i = [0]
+
+    def dirty_save():
+        i[0] += 1
+        store.put("sp0", "b0", "tpu_v4",
+                  config={"BM": 64, "BN": 128, "i": i[0]},
+                  runtime=0.5 - i[0] * 1e-6, trials=8)
+        store.save()
+
+    # Interleaved rounds, best-of per category: a CPU-pressure or fsync
+    # spike on a shared runner then lands on one sample of one category
+    # instead of poisoning a whole back-to-back block, and min measures
+    # the cost floor the fast path actually removes.
+    fulls, dirties = [], []
+    for _ in range(reps):
+        fulls.append(timed_once(lambda: store.save(force=True)))
+        dirties.append(timed_once(dirty_save))
+    t_full = min(fulls)
+    t_dirty = min(dirties)
+
+    n_noop = max(reps * 20, 100)
+    t0 = time.perf_counter()
+    for _ in range(n_noop):
+        store.save()
+    t_noop = (time.perf_counter() - t0) / n_noop
+
+    # round-trip sanity: what is on disk equals what is in memory
+    reread = ConfigStore(path)
+    equivalent = reread.to_dict()["entries"] == store.to_dict()["entries"]
+    noop_speedup = t_full / max(t_noop, 1e-12)
+    dirty_speedup = t_full / max(t_dirty, 1e-12)
+    return {
+        "entries": n_entries,
+        "reps": reps,
+        "full_save_ms": t_full * 1e3,
+        "dirty_save_ms": t_dirty * 1e3,
+        "noop_save_ms": t_noop * 1e3,
+        "noop_speedup": noop_speedup,
+        "dirty_speedup": dirty_speedup,
+        "save_stats": dict(store.save_stats),
+        "disk_matches_memory": equivalent,
+        "meets_noop_target": noop_speedup >= min_noop_speedup,
+        "meets_dirty_target": dirty_speedup >= min_dirty_speedup,
+    }
+
+
+# ---------------------------------------------------------------- driver
+
+def run_benchmark(smoke: bool, seed: int, min_journal: float,
+                  min_trainer: float, min_noop: float,
+                  min_dirty: float) -> Dict:
+    per_tenant = 60 if smoke else 200
+    budget = 8 if smoke else 12
+    delay_s = 0.02 if smoke else 0.025
+    n_entries = 500 if smoke else 800
+    reps = 6 if smoke else 10
+    with tempfile.TemporaryDirectory() as td:
+        journal = run_journal_storm(os.path.join(td, "j"), per_tenant,
+                                    seed, min_journal,
+                                    reps=2 if smoke else 3)
+        trainer = run_trainer_offload(os.path.join(td, "t"), budget, seed,
+                                      delay_s, min_trainer)
+        saves = run_store_saves(os.path.join(td, "s"), n_entries, reps,
+                                min_noop, min_dirty)
+    summary = {
+        "journal_speedup": journal["batch_vs_always_speedup"],
+        "journal_speedup_ok": journal["meets_speedup_target"],
+        "journal_complete": journal["batch_journal_complete"],
+        "trainer_speedup": trainer["makespan_speedup"],
+        "trainer_speedup_ok": trainer["meets_speedup_target"],
+        "trainer_deterministic": trainer["results_identical"],
+        "trainer_published_all": trainer["all_models_published"],
+        "noop_speedup": saves["noop_speedup"],
+        "noop_speedup_ok": saves["meets_noop_target"],
+        "dirty_speedup": saves["dirty_speedup"],
+        "dirty_speedup_ok": saves["meets_dirty_target"],
+        "store_roundtrip_ok": saves["disk_matches_memory"],
+    }
+    violations: List[str] = []
+    if not summary["journal_speedup_ok"]:
+        violations.append(
+            f"group commit speedup {summary['journal_speedup']:.2f}x "
+            f"< {min_journal}x (batch vs per-record fsync)")
+    if not summary["journal_complete"]:
+        violations.append("batch-mode journal lost acked records "
+                          "(ack outran durability)")
+    if not summary["trainer_speedup_ok"]:
+        violations.append(
+            f"trainer offload speedup {summary['trainer_speedup']:.2f}x "
+            f"< {min_trainer}x")
+    if not summary["trainer_deterministic"]:
+        violations.append("async training changed tuning results")
+    if not summary["trainer_published_all"]:
+        violations.append("async training dropped model publishes")
+    if not summary["noop_speedup_ok"]:
+        violations.append(
+            f"clean-save no-op speedup {summary['noop_speedup']:.1f}x "
+            f"< {min_noop}x")
+    if not summary["dirty_speedup_ok"]:
+        violations.append(
+            f"dirty-save fast path speedup "
+            f"{summary['dirty_speedup']:.2f}x < {min_dirty}x")
+    if not summary["store_roundtrip_ok"]:
+        violations.append("delta/fast-path save diverged from memory")
+    return {
+        "schema": SCHEMA,
+        "version": VERSION,
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "host": {"python": platform.python_version(),
+                 "numpy": np.__version__,
+                 "machine": platform.machine()},
+        "workload": {"smoke": smoke, "seed": seed,
+                     "storm_tenants": STORM_TENANTS,
+                     "storm_submits_per_tenant": per_tenant,
+                     "trainer_budget": budget,
+                     "store_entries": n_entries},
+        "targets": {"min_journal_speedup": min_journal,
+                    "min_trainer_speedup": min_trainer,
+                    "min_noop_speedup": min_noop,
+                    "min_dirty_speedup": min_dirty},
+        "journal_storm": journal,
+        "trainer_offload": trainer,
+        "store_saves": saves,
+        "summary": summary,
+        "violations": violations,
+    }
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv and argv[0] == "--storm-child":
+        return _storm_child(argv[1:])
+    if argv and argv[0] == "--storm-once":
+        root, mode, per_tenant, seed = argv[1:5]
+        print(json.dumps(_storm_once(root, mode, int(per_tenant),
+                                     int(seed))))
+        return 0
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="BENCH_service_throughput.json")
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--min-journal-speedup", type=float, default=3.0,
+                    help="required batch/always submit-to-ack throughput")
+    ap.add_argument("--min-trainer-speedup", type=float, default=None,
+                    help="required sync/async fleet makespan ratio "
+                    "(default 1.15; --smoke uses 1.1 for headroom on "
+                    "noisy shared runners)")
+    ap.add_argument("--min-noop-speedup", type=float, default=10.0)
+    ap.add_argument("--min-dirty-speedup", type=float, default=1.3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: smaller storm and corpus")
+    args = ap.parse_args(argv)
+
+    min_trainer = args.min_trainer_speedup
+    if min_trainer is None:
+        min_trainer = 1.1 if args.smoke else 1.15
+    result = run_benchmark(args.smoke, args.seed,
+                           args.min_journal_speedup, min_trainer,
+                           args.min_noop_speedup, args.min_dirty_speedup)
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    s = result["summary"]
+    j = result["journal_storm"]
+    print(f"wrote {args.out}")
+    print(f"journal storm ({j['tenants']} tenants x "
+          f"{j['submits_per_tenant']}): batch "
+          f"{j['modes']['batch']['throughput_rps']:.0f} rps vs always "
+          f"{j['modes']['always']['throughput_rps']:.0f} rps = "
+          f"{s['journal_speedup']:.2f}x "
+          f"({'PASS' if s['journal_speedup_ok'] else 'FAIL'}), "
+          f"complete {'PASS' if s['journal_complete'] else 'FAIL'}")
+    print(f"trainer offload: {s['trainer_speedup']:.2f}x makespan "
+          f"({'PASS' if s['trainer_speedup_ok'] else 'FAIL'}), "
+          f"deterministic "
+          f"{'PASS' if s['trainer_deterministic'] else 'FAIL'}")
+    print(f"store saves: no-op {s['noop_speedup']:.0f}x "
+          f"({'PASS' if s['noop_speedup_ok'] else 'FAIL'}), dirty "
+          f"{s['dirty_speedup']:.2f}x "
+          f"({'PASS' if s['dirty_speedup_ok'] else 'FAIL'})")
+    if result["violations"]:
+        print("TARGETS VIOLATED:\n  " + "\n  ".join(result["violations"]),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

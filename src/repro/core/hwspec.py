@@ -92,20 +92,34 @@ def _squash(name: str) -> str:
     return re.sub(r"[^a-z0-9]", "", str(name).lower())
 
 
+_NORMALIZE_CACHE: Dict[str, str] = {}
+
+
 def normalize_name(name: str) -> str:
     """Canonical hardware-name string, stable under naming drift.
 
     Resolves to a registered spec's name whenever the alphanumeric forms
     match ("TPUv4", "tpu-v4", "TPU_V4" → "tpu_v4"); otherwise returns a
     lower_snake_case normalization of the given name, so even unregistered
-    hardware gets a deterministic identity.
+    hardware gets a deterministic identity.  Memoized: the service hot
+    path normalizes the same few names on every request, and the regex
+    work shows up in profiles.
     """
+    cached = _NORMALIZE_CACHE.get(name) if isinstance(name, str) else None
+    if cached is not None:
+        return cached
     sq = _squash(name)
+    norm = None
     for canon in SPECS:
         if _squash(canon) == sq:
-            return canon
-    norm = re.sub(r"[^a-z0-9]+", "_", str(name).strip().lower()).strip("_")
-    return norm or "unknown"
+            norm = canon
+            break
+    if norm is None:
+        norm = re.sub(r"[^a-z0-9]+", "_",
+                      str(name).strip().lower()).strip("_") or "unknown"
+    if isinstance(name, str) and len(_NORMALIZE_CACHE) < 4096:
+        _NORMALIZE_CACHE[name] = norm
+    return norm
 
 
 def get(name: str) -> HardwareSpec:

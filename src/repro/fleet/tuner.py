@@ -56,7 +56,8 @@ from __future__ import annotations
 
 import dataclasses
 import queue
-from typing import Dict, List, Optional, Sequence, Tuple
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -122,6 +123,65 @@ class _InFlight:
     submitted_at: float      # absolute pool clock at submission
 
 
+class _TrainerThread:
+    """Background executor for the fleet's model work (ISSUE 9).
+
+    Two task kinds ride the same bounded queue: **prep** (warm-start
+    whole-space prediction for a job about to bind its searcher) and
+    **train** (the TP→PC model a finished cold job publishes).  Both are
+    pure compute over read-only inputs — every store read/write stays on
+    the event-loop thread, which applies completions via ``get``.  A
+    task that raises is delivered as an error, never as a dead thread:
+    the loop contains the failure to that one job/publish and keeps
+    dispatching (trainer-crash containment).
+    """
+
+    def __init__(self, maxsize: int = 8):
+        self._in: "queue.Queue" = queue.Queue(maxsize=maxsize)
+        self._out: "queue.Queue" = queue.Queue()
+        # submitted-not-yet-applied; touched only by the loop thread
+        self.pending = 0
+        self._thread = threading.Thread(target=self._loop,
+                                        name="fleet-trainer", daemon=True)
+        self._thread.start()
+
+    def submit(self, tag: str, js: "_JobState",
+               fn: Callable[[], Any]) -> None:
+        """Enqueue one task (blocks when the bounded queue is full —
+        backpressure on a loop outrunning the trainer)."""
+        self.pending += 1
+        self._in.put((tag, js, fn))
+
+    def _loop(self) -> None:
+        while True:
+            task = self._in.get()
+            if task is None:
+                return
+            tag, js, fn = task
+            try:
+                self._out.put((tag, js, fn(), None))
+            except BaseException as exc:
+                self._out.put((tag, js, None, exc))
+
+    def get(self, block: bool = False, timeout: Optional[float] = None):
+        """One ``(tag, js, result, error)`` completion, or None when
+        nothing is ready within the wait."""
+        try:
+            if block:
+                item = self._out.get(timeout=timeout)
+            else:
+                item = self._out.get_nowait()
+        except queue.Empty:
+            return None
+        self.pending -= 1
+        return item
+
+    def close(self, timeout: float = 5.0) -> None:
+        self._in.put(None)
+        if self._thread is not threading.current_thread():
+            self._thread.join(timeout=timeout)
+
+
 class _JobState:
     """Orchestrator-side bookkeeping for one job."""
 
@@ -131,6 +191,12 @@ class _JobState:
         self.searcher = None
         self.searcher_name = ""
         self.warm_started = False
+        # warm-start prep pipeline: None (not started) -> "pending"
+        # (whole-space prediction on the trainer thread) -> "done"
+        self.prep_state: Optional[str] = None
+        self.prep_model = None
+        self.prep_key: Optional[str] = None
+        self.pred = None
         self.submitted = 0
         self.pending = 0
         self.done = False
@@ -214,7 +280,9 @@ class FleetTuner:
                  in_flight_max: Optional[int] = None,
                  allow_empty: bool = False,
                  on_job_done=None,
-                 on_trial=None):
+                 on_trial=None,
+                 train_async: bool = True,
+                 train_queue: int = 8):
         if not jobs and not allow_empty:
             raise ValueError("FleetTuner needs at least one job "
                              "(allow_empty=True for a service fleet that "
@@ -259,34 +327,67 @@ class FleetTuner:
         self._t_start = 0.0
         self._elastic: Optional[ElasticInFlight] = None
         self._limit = self.in_flight
+        # off-loop model training (ISSUE 9): warm-start prediction and
+        # publish-time training run on a trainer thread; the loop keeps
+        # dispatching and applies completions between ticks
+        self.train_async = bool(train_async)
+        self.train_queue = int(train_queue)
+        self._trainer: Optional[_TrainerThread] = None
+        self.train_errors: List[Tuple[str, str]] = []
+        # (space, kind) -> publishes still training: jobs of that space
+        # defer binding until the model they would have seen is out
+        self._publish_keys: Dict[Tuple[str, str], int] = {}
 
     # -- per-job setup ---------------------------------------------------------
-    def _start(self, js: _JobState) -> None:
+    def _start(self, js: _JobState) -> bool:
         """Bind a searcher on first schedule: explicit name, or warm-start
         from the nearest stored artifact, or the cold fallback.  A loaded
         model also prices the job's predicted best runtime — the gain
-        estimate the priority scheduler and parking policy run on."""
+        estimate the priority scheduler and parking policy run on.
+
+        Returns False while the job is NOT yet schedulable: its
+        whole-space warm-start prediction is still on the trainer
+        thread, or a model publish for its (space, kind) is still
+        training (binding now would miss the artifact the synchronous
+        path would have seen).  The caller skips the job this tick and
+        the fleet keeps dispatching other work meanwhile."""
         if js.searcher is not None:
-            return
+            return True
         t0 = self.pool.elapsed()
         job = js.job
-        model = None
-        pred = None
-        if self.store is not None:
-            model, key = self.store.load_nearest_model(
-                job.space.name, job.bucket, js.hw_key, bind_space=job.space,
-                kind=job.kind)
+        if js.prep_state == "pending":
+            return False
+        if js.prep_state is None:
+            if self._trainer is not None and self._publish_keys.get(
+                    (job.space.name, job.kind), 0) > 0:
+                return False
+            model, key = (None, None)
+            if self.store is not None:
+                model, key = self.store.load_nearest_model(
+                    job.space.name, job.bucket, js.hw_key,
+                    bind_space=job.space, kind=job.kind)
+            js.prep_model, js.prep_key = model, key
+            if model is not None and self._trainer is not None:
+                space, hw = job.space, js.hw
+                js.prep_state = "pending"
+                self._trainer.submit(
+                    "prep", js,
+                    lambda: predicted_runtimes(model, space, hw))
+                return False
             if model is not None:
-                pred = predicted_runtimes(model, job.space, js.hw)
-                js.predicted_best = float(np.min(pred))
-                if self.verbose:
-                    print(f"[fleet] {job.name}: warm start from {key}")
+                js.pred = predicted_runtimes(model, job.space, js.hw)
+            js.prep_state = "done"
+        model, pred = js.prep_model, js.pred
+        if model is not None and pred is not None:
+            js.predicted_best = float(np.min(pred))
+            if self.verbose:
+                print(f"[fleet] {job.name}: warm start from {js.prep_key}")
         if job.searcher is not None:
             js.searcher_name = job.searcher
             js.searcher = make_searcher(
                 job.searcher, job.space, seed=job.seed,
                 model=model, cores=js.hw.cores)
-        elif model is not None:
+        elif model is not None and pred is not None:
             js.warm_started = True
             js.searcher_name = "warm_start"
             js.searcher = WarmStartSearcher(
@@ -297,7 +398,24 @@ class FleetTuner:
             js.searcher_name = job.cold_searcher
             js.searcher = make_searcher(job.cold_searcher, job.space,
                                         seed=job.seed)
+        js.prep_model = None          # the searcher owns it from here
+        js.pred = None
         self._absorb_stall(t0)
+        return True
+
+    def _apply_prep(self, js: _JobState, pred, error) -> None:
+        """Trainer completion for a warm-start prediction (loop thread).
+        A failed prediction falls back to the cold searcher — contained
+        to this job, recorded, never fatal to the loop."""
+        if error is not None:
+            self.train_errors.append((js.job.name, f"prep: {error!r}"))
+            if self.verbose:
+                print(f"[fleet] {js.job.name}: warm-start prep failed "
+                      f"({error!r}); going cold")
+            js.prep_model = None
+            pred = None
+        js.pred = pred
+        js.prep_state = "done"
 
     def _eval_fn(self, js: _JobState, index: int, profile: bool):
         """Pure measurement closure for in-process pools: the job's
@@ -324,13 +442,17 @@ class FleetTuner:
         return fn
 
     def _absorb_stall(self, t0: float) -> None:
-        """Expensive orchestrator work (training/publishing a model at
-        finalize, whole-space prediction at warm start) stalls the event
-        loop while in-flight tests keep aging on the real pool clock —
-        their results may already sit uncollected in the queue.  Shift
-        their submission stamps by the stall so the straggler timeout only
-        measures time the POOL spent, not time we did.  (Virtual pools
-        don't advance during orchestrator work, so this is a no-op there.)
+        """True orchestrator work (store put/save at finalize, searcher
+        binding) stalls the event loop while in-flight tests keep aging
+        on the real pool clock — their results may already sit
+        uncollected in the queue.  Shift their submission stamps by the
+        stall so the straggler timeout only measures time the POOL
+        spent, not time we did.  The former big offenders — model
+        training at finalize, whole-space prediction at warm start —
+        now run on the trainer thread and no longer stall the loop at
+        all (``train_async=False`` restores the inline behavior, still
+        covered here).  (Virtual pools don't advance during orchestrator
+        work, so this is a no-op there.)
         """
         stall = self.pool.elapsed() - t0
         if stall > 0.0:
@@ -393,7 +515,11 @@ class FleetTuner:
                 self._submit(js, index, profile, attempt, exclude)
                 js.last_pick = self._next_pick()
                 continue
-            self._start(js)
+            if not self._start(js):
+                # warm-start prep (or a blocking publish) still on the
+                # trainer thread: other jobs get the lanes meanwhile
+                skip.add(js)
+                continue
             cands = js.searcher.propose(1)
             if not cands:
                 # waiting on its batch (pending > 0) or exhausted
@@ -562,6 +688,9 @@ class FleetTuner:
                                             hi=self.in_flight_max)
         self._limit = self.in_flight
         self._stopping = False
+        if self.train_async and self._trainer is None:
+            self._trainer = _TrainerThread(maxsize=self.train_queue)
+        self._publish_keys = {}
         self._began = True
 
     def add_job(self, job: TuningJob) -> None:
@@ -619,9 +748,16 @@ class FleetTuner:
         deadline, or indefinitely), so a driving loop stays responsive to
         injected jobs and shutdown signals.
         """
+        self._drain_trainer()
         if not self._stopping:
             self._fill(self._limit)
         if not self._inflight:
+            if self._trainer is not None and self._trainer.pending > 0:
+                # nothing on the pool, but searchers/models are still
+                # training: wait for one completion so it can unblock
+                # scheduling, and report the fleet as busy
+                self._drain_trainer(block=True, max_wait=max_wait)
+                return True
             return False
         tick = self._collect_tick()
         if max_wait is not None:
@@ -639,9 +775,45 @@ class FleetTuner:
         self._check_stragglers(self._t_start)
         return True
 
+    def _drain_trainer(self, block: bool = False,
+                       max_wait: Optional[float] = None) -> None:
+        """Apply ready trainer completions on the loop thread (binds
+        searchers, publishes models).  ``block=True`` waits up to
+        ``max_wait`` for the first one; the rest drain opportunistically.
+        """
+        if self._trainer is None:
+            return
+        while self._trainer.pending > 0:
+            item = self._trainer.get(block=block, timeout=max_wait)
+            if item is None:
+                return
+            block = False
+            tag, js, out, err = item
+            if tag == "prep":
+                self._apply_prep(js, out, err)
+            else:
+                self._apply_publish(js, out, err)
+
+    def _drain_trainer_all(self) -> None:
+        """Block until every outstanding trainer task has been applied
+        (finish-time barrier: published models must be in the store
+        before the report returns, so a later run warm-starts)."""
+        if self._trainer is None:
+            return
+        while self._trainer.pending > 0:
+            item = self._trainer.get(block=True, timeout=30.0)
+            if item is None:          # wedged trainer: don't hang finish
+                break
+            tag, js, out, err = item
+            if tag == "prep":
+                self._apply_prep(js, out, err)
+            else:
+                self._apply_publish(js, out, err)
+
     def finish(self) -> FleetReport:
         """Drain straggler debts, finalize every remaining job, and build
         the report for everything since ``begin()``."""
+        self._drain_trainer_all()
         # drain abandoned stragglers still on the pool so their burned
         # lane-seconds are charged (and a reused pool starts clean);
         # a straggler that never returns (hung thread) is skipped
@@ -656,6 +828,16 @@ class FleetTuner:
         for js in self._states:   # parked jobs + searchers that dried up
             if not js.done:
                 self._finalize(js)
+        # finalizing above may have queued publish trainings; they must
+        # land before the report so the next run's warm starts see them
+        self._drain_trainer_all()
+        # the trainer thread ends with the run — ``begin()`` starts a
+        # fresh one, so a finished tuner never leaks a parked thread
+        # into the embedding process (one daemon per process is the
+        # norm, but benchmarks and tests cycle many)
+        if self._trainer is not None:
+            self._trainer.close()
+            self._trainer = None
         for js in self._states:
             # a straggler drained above may have charged abandoned cost
             # AFTER its job finalized — refresh the snapshot's accounting
@@ -808,6 +990,7 @@ class FleetTuner:
         # completion is measurable lock/IO churn on the event loop)
         was_autosave, self.store.autosave = self.store.autosave, False
         published = False
+        train_fn = None
         try:
             self.store.put(
                 job.space.name, job.bucket, js.hw_key,
@@ -824,18 +1007,33 @@ class FleetTuner:
                 # warm-starts from it
                 from repro.tuning.session import TuningSession
 
-                session = TuningSession(job.space, job.workload_fn,
-                                        hw=js.hw, seed=job.seed)
-                session.train(kind=self.model_kind, sample="deliberate")
-                session.save_model_to_store(self.store, job.bucket,
-                                            js.hw_key, kind=job.kind)
-                published = True
+                space, wl, hw = job.space, job.workload_fn, js.hw
+                seed, mk = job.seed, self.model_kind
+
+                def train_fn():
+                    session = TuningSession(space, wl, hw=hw, seed=seed)
+                    session.train(kind=mk, sample="deliberate")
+                    return session
+
+                if self._trainer is None:
+                    # synchronous fallback: train + publish inline
+                    session = train_fn()
+                    session.save_model_to_store(self.store, job.bucket,
+                                                js.hw_key, kind=job.kind)
+                    published = True
+                    train_fn = None
         finally:
             self.store.autosave = was_autosave
         if was_autosave and self.store.path is not None:
             self.store.save()
         if published:
             self._unpark_check(job.space.name, kind=job.kind)
+        if train_fn is not None:
+            # off-loop: the fleet keeps dispatching while the model
+            # trains; same-space jobs defer binding until it publishes
+            pk = (job.space.name, job.kind)
+            self._publish_keys[pk] = self._publish_keys.get(pk, 0) + 1
+            self._trainer.submit("train", js, train_fn)
         self._absorb_stall(t0)
         if self.verbose:
             print(f"[fleet] {job.name}: best {acct.best_runtime*1e3:.3f}ms "
@@ -843,3 +1041,33 @@ class FleetTuner:
                   f"({'warm' if js.warm_started else 'cold'})")
         if self.on_job_done is not None:
             self.on_job_done(js.result)
+
+    def _apply_publish(self, js: _JobState, session, error) -> None:
+        """Trainer completion for a publish training (loop thread): store
+        the artifact and re-check parked jobs, exactly as the synchronous
+        path did — or, on a training exception, record the failure
+        against this job and move on (the tuned entry already landed;
+        only the portable model is lost).  The daemon never dies to a
+        training crash."""
+        job = js.job
+        pk = (job.space.name, job.kind)
+        n = self._publish_keys.get(pk, 0)
+        if n <= 1:
+            self._publish_keys.pop(pk, None)
+        else:
+            self._publish_keys[pk] = n - 1
+        if error is not None:
+            self.train_errors.append((job.name, f"train: {error!r}"))
+            if self.verbose:
+                print(f"[fleet] {job.name}: model training failed "
+                      f"({error!r}); publish skipped")
+            return
+        was_autosave, self.store.autosave = self.store.autosave, False
+        try:
+            session.save_model_to_store(self.store, job.bucket,
+                                        js.hw_key, kind=job.kind)
+        finally:
+            self.store.autosave = was_autosave
+        if was_autosave and self.store.path is not None:
+            self.store.save()
+        self._unpark_check(job.space.name, kind=job.kind)

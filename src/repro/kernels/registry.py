@@ -35,6 +35,23 @@ class KernelBenchmark:
     make_args: Callable[[Any, Any], Tuple]
     run: Callable[..., Any]       # run(cfg, *args, interpret=...)
     ref: Callable[..., Any]       # ref(*args)
+    _space: TuningSpace = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def space(self) -> TuningSpace:
+        """Memoized ``make_space()``.
+
+        A registry space is deterministic and treated as read-only by
+        every consumer (its feature matrix is literally frozen), but
+        materializing one enumerates the whole constrained cross
+        product — ~1ms for the larger kernels.  Hot paths that build a
+        job per request (the service daemon's submit path) would
+        otherwise pay that on every submit; callers that need a private
+        mutable space can still call ``make_space()`` directly.
+        """
+        if self._space is None:
+            self._space = self.make_space()
+        return self._space
 
 
 _FACTORIES: Dict[str, Callable[[], KernelBenchmark]] = {}

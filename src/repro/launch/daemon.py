@@ -66,6 +66,14 @@ def main(argv=None) -> int:
                     "<store-dir>/journal.jsonl when using a store dir)")
     ap.add_argument("--no-journal", action="store_true",
                     help="disable the request journal entirely")
+    ap.add_argument("--fsync", default="batch",
+                    choices=("always", "batch", "off"),
+                    help="journal durability mode: 'always' fsyncs every "
+                    "record inline, 'batch' (default) group-commits — "
+                    "acks still wait for the fsync covering their "
+                    "records, but one flush covers a whole burst — "
+                    "'off' never fsyncs (machine-crash unsafe, "
+                    "process-kill safe)")
     ap.add_argument("--recover", action="store_true",
                     help="replay the journal on startup: restore "
                     "resolved requests, resubmit interrupted ones with "
@@ -76,6 +84,7 @@ def main(argv=None) -> int:
     from repro.launch.fleet import build_pool
     from repro.launch.signals import install_drain_handlers
     from repro.service import ShardedConfigStore, TuningDaemon
+    from repro.service.journal import RequestJournal
     from repro.service.tenants import TenantManager
     from repro.tuning import ConfigStore
 
@@ -88,7 +97,9 @@ def main(argv=None) -> int:
         store = ShardedConfigStore(store_root, n_shards=args.shards)
     journal = None
     if not args.no_journal:
-        journal = args.journal or os.path.join(store_root, "journal.jsonl")
+        journal = RequestJournal(
+            args.journal or os.path.join(store_root, "journal.jsonl"),
+            mode=args.fsync)
     if args.recover and journal is None:
         ap.error("--recover requires a journal (drop --no-journal)")
     pool = build_pool(args.backend, args.workers, args.devices_per_worker)

@@ -34,6 +34,9 @@ class HealthReport:
     journal_enabled: bool
     journal_fsync_lag_s: float = 0.0
     journal_appends: int = 0
+    journal_mode: Optional[str] = None
+    journal_commits: int = 0       # fsync-bearing writes (group commits)
+    journal_pending: int = 0       # enqueued records awaiting a commit
     loop_age_s: Optional[float] = None   # seconds since the last loop tick
     detail: str = ""
 
@@ -93,11 +96,18 @@ def assess(loop_age_s: Optional[float], loop_thread_alive: bool,
         detail.append("draining")
     if lag >= JOURNAL_LAG_S:
         detail.append(f"journal fsync lag {lag:.1f}s")
+    jstats: Dict[str, Any] = {}
+    if journal is not None and hasattr(journal, "stats"):
+        jstats = journal.stats()
     return HealthReport(
         live=loop_ok, ready=ready, fleet_loop_alive=loop_thread_alive,
         store_writable=writable, draining=draining,
         journal_enabled=journal is not None,
         journal_fsync_lag_s=lag,
         journal_appends=journal.appends if journal is not None else 0,
+        journal_mode=jstats.get("mode",
+                                getattr(journal, "mode", None)),
+        journal_commits=int(jstats.get("commits", 0)),
+        journal_pending=int(jstats.get("pending", 0)),
         loop_age_s=loop_age_s,
         detail="; ".join(detail))

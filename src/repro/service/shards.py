@@ -196,6 +196,7 @@ class ShardedConfigStore:
                 mine = dest._entries.get(k)
                 if mine is None or other.runtime < mine.runtime:
                     dest._entries[k] = other
+                    dest._dirty_entries.add(k)
                 touched.add(j)
             for k in bad_m:
                 j = shard_of(k, self.n_shards)
@@ -204,6 +205,7 @@ class ShardedConfigStore:
                 if mine is None or int(m.get("revision", 0)) \
                         > int(mine.get("revision", 0)):
                     dest._models[k] = m
+                    dest._dirty_models.add(k)
                 touched.add(j)
             for j in sorted(touched):
                 self._shards[j].save()
@@ -328,12 +330,33 @@ class ShardedConfigStore:
                                 kind=kk), key
 
     # -- persistence -----------------------------------------------------------
-    def save(self, merge: bool = True) -> str:
-        """Flush dirty shards (locked read-merge-write each); return root."""
+    def save(self, merge: bool = True, force: bool = False) -> str:
+        """Flush dirty shards (locked read-merge-write each); return root.
+
+        Each shard flush goes through ``ConfigStore.save``'s amortized
+        path — clean shards no-op, single-writer shards skip the
+        read-back, multi-writer shards delta-write only changed keys."""
         for i in sorted(self._dirty):
-            self._shards[i].save(merge=merge)
+            self._shards[i].save(merge=merge, force=force)
         self._dirty.clear()
         return self.root
+
+    @property
+    def save_stats(self) -> Dict[str, Any]:
+        """Save-path counters summed across shards (``last_s`` is the
+        slowest single shard save, not a sum)."""
+        totals: Dict[str, Any] = {"saves": 0, "noop": 0, "full": 0,
+                                  "delta": 0, "merged_reads": 0,
+                                  "last_s": 0.0, "total_s": 0.0}
+        for s in self._shards:
+            for k, v in s.save_stats.items():
+                if k == "last_s":
+                    totals[k] = max(totals[k], v)
+                else:
+                    totals[k] = totals.get(k, 0) + v
+        totals["last_s"] = round(totals["last_s"], 9)
+        totals["total_s"] = round(totals["total_s"], 9)
+        return totals
 
     def refresh(self) -> None:
         """Merge other processes' on-disk writes into memory, all shards.

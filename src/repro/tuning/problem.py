@@ -181,7 +181,7 @@ class KernelProblem(TuningProblem):
         self.bucket = input_key
 
     def space(self) -> TuningSpace:
-        return self._bm.make_space()
+        return self._bm.space()
 
     def workload_fn(self) -> Callable[[Config], Dict[str, float]]:
         bm, inp = self._bm, self._bm.inputs[self.input_key]

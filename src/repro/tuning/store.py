@@ -65,6 +65,7 @@ import json
 import os
 import sys
 import tempfile
+import time
 import zlib
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
@@ -240,6 +241,19 @@ class ConfigStore:
         self._entries: Dict[str, StoreEntry] = {}
         self._models: Dict[str, Dict] = {}
         self.quarantined: List[str] = []   # damaged files moved aside
+        # delta-save bookkeeping: keys mutated since the last save to
+        # self.path, and a stat token identifying our own last write
+        self._dirty_entries: set = set()
+        self._dirty_models: set = set()
+        self._disk_token: Optional[Tuple[int, int, int]] = None
+        self.save_stats: Dict[str, Any] = {
+            "saves": 0,        # save() calls
+            "noop": 0,         # clean saves skipped entirely
+            "full": 0,         # full serialize-everything writes
+            "delta": 0,        # dirty-key overlay writes
+            "merged_reads": 0,  # saves that read+merged a changed file
+            "last_s": 0.0, "total_s": 0.0,
+        }
         if path is not None and os.path.exists(path):
             self.load(path)
 
@@ -253,11 +267,23 @@ class ConfigStore:
             runtime: float, trials: int,
             meta: Optional[Dict[str, Any]] = None,
             kind: Optional[str] = None) -> StoreEntry:
+        """Record a tuned config; the merge rule applies at put time.
+
+        An existing entry with a strictly better (lower) runtime wins
+        over the incoming one — the same resolution ``_merge_from``
+        applies between files.  Resolving here keeps memory monotone,
+        which the own-write save fast path depends on: it serializes
+        memory without re-reading the file, so memory must never hold a
+        worse value than anything already persisted."""
         entry = StoreEntry(space=space, bucket=bucket, hardware=hardware,
                            config=dict(config), runtime=float(runtime),
                            trials=int(trials), meta=dict(meta or {}),
                            kind=kind or "")
+        prev = self._entries.get(entry.key)
+        if prev is not None and prev.runtime < entry.runtime:
+            return prev
         self._entries[entry.key] = entry
+        self._dirty_entries.add(entry.key)
         self._autosave()
         return entry
 
@@ -293,17 +319,26 @@ class ConfigStore:
         (defaults to ``existing revision + 1``, so retraining under the
         same key always moves forward) and optionally ``n_obs`` (how many
         observations trained it, informational).  ``_merge_from`` resolves
-        model conflicts by the higher revision.
+        model conflicts by the higher revision — and so does this method:
+        a put with an explicitly LOWER revision than the artifact already
+        in memory is a stale write and loses immediately, which keeps
+        memory monotone for the own-write save fast path (memory is
+        serialized without re-reading the file, so it must never hold a
+        lower revision than anything already persisted).
         """
         key = store_key(space, bucket, hardware, kind=kind)
         artifact = dict(artifact)
+        prev = self._models.get(key)
         if revision is None:
-            prev = self._models.get(key, {})
-            revision = int(prev.get("revision", 0)) + 1
+            revision = int((prev or {}).get("revision", 0)) + 1
         artifact["revision"] = int(revision)
         if n_obs is not None:
             artifact["n_obs"] = int(n_obs)
+        if prev is not None \
+                and int(prev.get("revision", 0)) > artifact["revision"]:
+            return
         self._models[key] = artifact
+        self._dirty_models.add(key)
         self._autosave()
 
     def load_model(self, space: str, bucket: str, hardware: str,
@@ -383,8 +418,8 @@ class ConfigStore:
         }
 
     def save(self, path: Optional[str] = None, merge: bool = True,
-             _post_merge=None) -> str:
-        """Locked read-merge-write, then atomic replace.
+             _post_merge=None, force: bool = False) -> str:
+        """Locked read-merge-write, then atomic replace — amortized.
 
         Under the file lock, entries/models persisted by OTHER writers since
         our last load are merged into memory first (``_merge_from``), so
@@ -394,28 +429,145 @@ class ConfigStore:
         ``_post_merge`` (internal) runs after the merge and before the
         write — ``prune`` uses it to re-apply its filter so the on-disk
         copy of a pruned key is not immediately re-adopted.
+
+        The store tracks which keys changed since the last save, which
+        buys three hot-path shortcuts (``force=True`` disables all of
+        them and always rewrites):
+
+        * **clean no-op** — nothing dirty means the locked
+          read-merge-write would only reproduce the file: skip it;
+        * **own-write fast path** — when the file's stat token still
+          matches our last write (single-writer case), skip the
+          read-back + checksum + merge and just serialize memory;
+        * **delta write** — when the file DID change under us, merge it
+          in, then build the new payload by overlaying only the dirty
+          keys onto the raw on-disk dicts, so unchanged entries/models
+          skip re-serialization.
         """
+        t0 = time.perf_counter()
         path = path if path is not None else self.path
         if path is None:
             raise ValueError("ConfigStore has no path; pass save(path=...)")
-        with _FileLock(path):
-            if merge and os.path.exists(path):
+        same = path == self.path
+        st = self.save_stats
+        st["saves"] += 1
+        dirty = bool(self._dirty_entries or self._dirty_models)
+        if same and not dirty and not force and merge \
+                and _post_merge is None and os.path.exists(path):
+            # nothing of ours needs writing.  If the file still carries
+            # our own last write, the whole call is a no-op; if another
+            # writer changed it, refresh memory from disk (the merge
+            # side effect callers rely on) but skip the rewrite — a
+            # merge-respecting peer never holds worse values than ours.
+            if self._disk_token is not None \
+                    and self._stat_token(path) == self._disk_token:
+                st["noop"] += 1
+                return path
+            with _FileLock(path):
                 on_disk = self._read_checked(path)
                 if on_disk is not None:
                     self._merge_from(on_disk)
+                    st["merged_reads"] += 1
+                self._disk_token = self._stat_token(path)
+            st["noop"] += 1
+            st["last_s"] = round(time.perf_counter() - t0, 9)
+            st["total_s"] = round(st["total_s"] + st["last_s"], 9)
+            return path
+        with _FileLock(path):
+            on_disk: Optional[Dict[str, Any]] = None
+            if merge and os.path.exists(path):
+                unchanged = (same and not force
+                             and self._disk_token is not None
+                             and self._stat_token(path) == self._disk_token)
+                if not unchanged:
+                    on_disk = self._read_checked(path)
+                    if on_disk is not None:
+                        self._merge_from(on_disk)
+                        st["merged_reads"] += 1
             if _post_merge is not None:
                 _post_merge()
-            d = os.path.dirname(os.path.abspath(path)) or "."
-            fd, tmp = tempfile.mkstemp(prefix=".config_store.", dir=d)
-            try:
-                with os.fdopen(fd, "w") as f:
-                    json.dump(self.to_dict(), f, indent=1)
-                os.replace(tmp, path)
-            except BaseException:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
-                raise
+            delta_ok = (same and not force and merge
+                        and _post_merge is None
+                        and on_disk is not None
+                        and on_disk.get("version") == VERSION)
+            if delta_ok:
+                payload = self._delta_payload(on_disk)
+                st["delta"] += 1
+            else:
+                payload = self.to_dict()
+                st["full"] += 1
+            self._write_atomic(path, payload)
+            if same:
+                self._dirty_entries.clear()
+                self._dirty_models.clear()
+                self._disk_token = self._stat_token(path)
+            else:
+                # a copy elsewhere must not launder dirtiness away from
+                # self.path — and keys adopted from the foreign file
+                # have to reach self.path on the next save too
+                self._dirty_entries |= set(self._entries)
+                self._dirty_models |= set(self._models)
+        st["last_s"] = round(time.perf_counter() - t0, 9)
+        st["total_s"] = round(st["total_s"] + st["last_s"], 9)
         return path
+
+    @staticmethod
+    def _stat_token(path: str) -> Optional[Tuple[int, int, int]]:
+        """Identity of the file's current bytes.
+
+        (inode, mtime_ns, size) alone is forgeable under rapid
+        alternating writers: mkstemp recycles the just-freed inode, the
+        kernel stamps mtime from the coarse (jiffy-granularity) clock,
+        and two writers' payloads can match in size — so
+        ``_write_atomic`` re-stamps every write with a true
+        nanosecond-resolution mtime, which makes a token collision
+        require two processes writing within the same nanosecond."""
+        try:
+            s = os.stat(path)
+            return (s.st_ino, s.st_mtime_ns, s.st_size)
+        except OSError:
+            return None
+
+    def _delta_payload(self, on_disk: Dict[str, Any]) -> Dict[str, Any]:
+        """Merged payload from overlaying only the DIRTY keys onto the
+        raw on-disk dicts (memory already holds the merged values, so a
+        dirty key that lost its conflict writes back the disk value).
+        A dirty key missing from memory (pruned, unsaved) is skipped —
+        same outcome a full merging save would produce."""
+        entries = dict(on_disk.get("entries", {}))
+        models = dict(on_disk.get("models", {}))
+        for k in self._dirty_entries:
+            e = self._entries.get(k)
+            if e is not None:
+                entries[k] = e.to_dict()
+        for k in self._dirty_models:
+            m = self._models.get(k)
+            if m is not None:
+                models[k] = m
+        entries = {k: entries[k] for k in sorted(entries)}
+        models = {k: models[k] for k in sorted(models)}
+        return {"format": FORMAT, "version": VERSION,
+                "crc": content_crc(entries, models),
+                "entries": entries, "models": models}
+
+    @staticmethod
+    def _write_atomic(path: str, payload: Dict[str, Any]) -> None:
+        d = os.path.dirname(os.path.abspath(path)) or "."
+        fd, tmp = tempfile.mkstemp(prefix=".config_store.", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            # the kernel's coarse clock can give back-to-back writes
+            # identical mtimes; a true-ns stamp (after the close-flush,
+            # which would re-stamp) keeps _stat_token honest (see its
+            # docstring)
+            t = time.time_ns()
+            os.utime(tmp, ns=(t, t))
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
 
     def _merge_from(self, d: Dict[str, Any]) -> None:
         """Fold another store's dict into memory (the read-merge step).
@@ -550,6 +702,10 @@ class ConfigStore:
         Version-1 keys upgrade to the ``kind|...`` schema on load (the
         next save persists them in version-2 form)."""
         d = self._read_checked(path)
+        if path == self.path:
+            self._dirty_entries.clear()
+            self._dirty_models.clear()
+            self._disk_token = None    # not set race-free; next save reads
         if d is None:
             self._entries, self._models = {}, {}
             return self

@@ -1,0 +1,396 @@
+"""Hot-path throughput overhaul: group commit, off-loop training, delta saves.
+
+The acceptance surface: the journal's ``batch`` mode never acks before
+durability (an ack returned to any thread implies its records survive a
+crash right now), group commit actually groups (commits ≪ appends under
+concurrency), a crashing trainer thread cannot take the fleet down, and
+the store's delta/no-op save fast paths write byte-equivalent corpora
+while skipping the work they claim to skip.
+"""
+import json
+import os
+import socket as socketlib
+import threading
+import time
+
+import pytest
+
+from repro.fleet import (FleetTuner, ThreadWorkerPool, VirtualWorkerPool,
+                         job_from_registry)
+from repro.service import (RequestJournal, ShardedConfigStore, TuningDaemon,
+                           validate_request)
+from repro.service import protocol as P
+from repro.service.journal import (EV_SUBMIT, MODE_ALWAYS, MODE_BATCH,
+                                   MODE_OFF, MODES, replay)
+from repro.tuning import ConfigStore
+
+HW = "tpu_v4"
+
+
+# =============================================================================
+# Journal modes: construction, validation, back-compat
+# =============================================================================
+def test_journal_mode_validation(tmp_path):
+    with pytest.raises(ValueError):
+        RequestJournal(str(tmp_path / "j.jsonl"), mode="sometimes")
+
+
+def test_journal_fsync_flag_backcompat(tmp_path):
+    with RequestJournal(str(tmp_path / "a.jsonl"), fsync=True) as j:
+        assert j.mode == MODE_ALWAYS and j.fsync
+    with RequestJournal(str(tmp_path / "b.jsonl"), fsync=False) as j:
+        assert j.mode == MODE_OFF and not j.fsync
+    with RequestJournal(str(tmp_path / "c.jsonl"), mode=MODE_BATCH) as j:
+        assert j.fsync     # batch IS durable; back-compat readers see True
+
+
+def test_journal_stats_expose_mode_and_commits(tmp_path):
+    with RequestJournal(str(tmp_path / "j.jsonl"), mode=MODE_BATCH) as j:
+        j.append(EV_SUBMIT, rid="r1", key="k")
+        st = j.stats()
+        assert st["mode"] == MODE_BATCH
+        assert st["commits"] >= 1
+        assert st["pending"] == 0
+        assert st["max_batch"] >= 1
+
+
+# =============================================================================
+# Group commit: ack-after-fsync ordering under a concurrent storm
+# =============================================================================
+def test_batch_append_returns_only_after_durable(tmp_path):
+    """Every append(wait=True) that returns implies the record's seq is
+    covered by a completed fsync — checked from 16 racing threads."""
+    path = str(tmp_path / "j.jsonl")
+    violations = []
+    with RequestJournal(path, mode=MODE_BATCH) as j:
+
+        def writer(t):
+            for n in range(25):
+                rec = j.append(EV_SUBMIT, rid=f"t{t}n{n}", key="k")
+                if j.durable_upto() < rec["seq"]:
+                    violations.append((t, n, rec["seq"]))
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(16)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not violations
+        assert j.appends == 16 * 25
+        # group commit did group: far fewer fsyncs than records
+        assert j.stats()["commits"] < j.appends
+    events, stats = replay(path)
+    assert stats.events == 16 * 25 and stats.corrupt == 0
+
+
+def test_batch_ticket_wait_durable(tmp_path):
+    with RequestJournal(str(tmp_path / "j.jsonl"), mode=MODE_BATCH) as j:
+        rec = j.append(EV_SUBMIT, wait=False, rid="r1", key="k")
+        gate = j.ticket()
+        assert gate >= rec["seq"]
+        j.wait_durable(gate)
+        assert j.durable_upto() >= gate
+
+
+def test_kick_ends_quiesce_early(tmp_path):
+    """With a long quiesce window, kick() forces the pending batch to
+    commit now instead of waiting out the window."""
+    j = RequestJournal(str(tmp_path / "j.jsonl"), mode=MODE_BATCH,
+                       batch_window_s=0.3, batch_max_delay_s=2.0)
+    try:
+        rec = j.append(EV_SUBMIT, wait=False, rid="r1", key="k")
+        t0 = time.monotonic()
+        j.kick()
+        j.wait_durable(rec["seq"])
+        assert time.monotonic() - t0 < 0.25   # far below the 0.3s window
+    finally:
+        j.close()
+
+
+def test_batch_mode_survives_closed_without_loss(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with RequestJournal(path, mode=MODE_BATCH) as j:
+        for n in range(10):
+            j.append(EV_SUBMIT, wait=False, rid=f"r{n}", key="k")
+    events, stats = replay(path)
+    assert stats.events == 10 and stats.corrupt == 0 and stats.torn == 0
+
+
+def _storm_daemon(tmp_path, mode):
+    store = ShardedConfigStore(str(tmp_path / "corpus"), n_shards=2)
+    job = job_from_registry("matmul", "2048", HW)
+    store.put(job.space.name, job.bucket, job.hardware_key,
+              config=dict(job.space[0]), runtime=1.0, trials=8)
+    store.save()
+    jpath = str(tmp_path / "journal.jsonl")
+    d = TuningDaemon(VirtualWorkerPool(workers=2), store,
+                     default_trial_budget=4,
+                     journal=RequestJournal(jpath, mode=mode))
+    d.start()
+    return d, jpath
+
+
+@pytest.mark.parametrize("mode", [MODE_ALWAYS, MODE_BATCH])
+def test_daemon_acked_submits_are_on_disk(tmp_path, mode):
+    """Socket storm: every acked store-first submit has its submit+done
+    records replayable from disk the moment the ack arrives — checked
+    while the daemon is still running (no clean-shutdown flush excuse)."""
+    d, jpath = _storm_daemon(tmp_path, mode)
+    acked = []
+    errors = []
+
+    def client(t):
+        try:
+            with socketlib.create_connection(d.address, timeout=30) as s:
+                f = s.makefile("rb")
+                for n in range(10):
+                    s.sendall(P.encode(dict(
+                        op="submit", kind="kernel", tenant=f"t{t}",
+                        kernel="matmul", input="2048", hardware=HW,
+                        budget=4, seed=7)))
+                    r = json.loads(f.readline())
+                    assert r["ok"] and r["state"] == "done"
+                    acked.append(r["request_id"])
+        except Exception as e:              # surface into the test thread
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=client, args=(t,)) for t in range(6)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    try:
+        assert not errors
+        events, stats = replay(jpath)       # daemon still live
+        assert stats.corrupt == 0
+        on_disk = {}
+        for e in events:
+            if e.get("rid"):
+                on_disk.setdefault(e["rid"], set()).add(e["ev"])
+        for rid in acked:
+            assert "submit" in on_disk.get(rid, set()), rid
+            assert "done" in on_disk.get(rid, set()), rid
+    finally:
+        d.shutdown(drain=False)
+        assert d.wait(timeout=60)
+
+
+def test_daemon_health_reports_journal_mode(tmp_path):
+    d, _ = _storm_daemon(tmp_path, MODE_BATCH)
+    try:
+        with socketlib.create_connection(d.address, timeout=30) as s:
+            f = s.makefile("rb")
+            s.sendall(P.encode({"op": "stats"}))
+            r = json.loads(f.readline())
+            assert r["ok"]
+            assert r["journal"]["mode"] == MODE_BATCH
+            assert "commits" in r["journal"]
+            assert r["store_saves"]["saves"] >= 0
+    finally:
+        d.shutdown(drain=False)
+        assert d.wait(timeout=60)
+
+
+# =============================================================================
+# Off-loop training: crash containment, thread hygiene, determinism
+# =============================================================================
+def _fleet_jobs(seed=3):
+    jobs = []
+    for k, inp, hw in (("matmul", "2048", "tpu_v4"),
+                       ("transpose", "8192", "tpu_v5e")):
+        job = job_from_registry(k, inp, hw, budget=6, seed=seed,
+                                searcher="random")
+
+        def eval_fn(index, profile, _n=len(job.space)):
+            return 1.0 + (index % _n) / _n, None, 1e-4
+
+        job.eval_fn = eval_fn
+        jobs.append(job)
+    return jobs
+
+
+def test_trainer_crash_is_contained(tmp_path, monkeypatch):
+    """A training closure that raises must not kill the fleet: the run
+    completes, results are intact, and the error is recorded."""
+    from repro.tuning.session import TuningSession
+
+    def boom(self, *a, **kw):
+        raise RuntimeError("trainer crashed")
+
+    monkeypatch.setattr(TuningSession, "train", boom)
+    store = ShardedConfigStore(str(tmp_path / "c"), n_shards=2)
+    pool = ThreadWorkerPool(workers=2)
+    try:
+        tuner = FleetTuner(_fleet_jobs(), pool, store=store,
+                           in_flight=2, train_async=True)
+        rep = tuner.run()
+    finally:
+        pool.close()
+    assert len(rep.results) == 2
+    assert all(r.best_index is not None for r in rep.results)
+    assert any("train" in msg for _, msg in tuner.train_errors)
+    assert sum(1 for _ in store.model_keys()) == 0
+
+
+def test_trainer_thread_does_not_leak(tmp_path):
+    """finish() joins the trainer thread — repeated fleets must not
+    accumulate background threads."""
+    store = ShardedConfigStore(str(tmp_path / "c"), n_shards=2)
+    pool = ThreadWorkerPool(workers=2)
+    try:
+        FleetTuner(_fleet_jobs(), pool, store=store, in_flight=2,
+                   train_async=True).run()
+        before = threading.active_count()
+        for i in range(3):
+            t = FleetTuner(_fleet_jobs(seed=4 + i), pool, store=store,
+                           in_flight=2, train_async=True)
+            t.run()
+            assert t._trainer is None
+        assert threading.active_count() <= before
+    finally:
+        pool.close()
+
+
+def test_async_training_matches_sync_results(tmp_path):
+    outcomes = {}
+    for train_async in (False, True):
+        store = ShardedConfigStore(
+            str(tmp_path / f"c{int(train_async)}"), n_shards=2)
+        pool = ThreadWorkerPool(workers=2)
+        try:
+            rep = FleetTuner(_fleet_jobs(), pool, store=store,
+                             in_flight=2, train_async=train_async).run()
+        finally:
+            pool.close()
+        outcomes[train_async] = sorted(
+            (r.job, r.trials, round(r.best_runtime, 12))
+            for r in rep.results)
+        assert sum(1 for _ in store.model_keys()) == 2
+    assert outcomes[False] == outcomes[True]
+
+
+# =============================================================================
+# Delta store saves: equivalence, clean no-op, counters
+# =============================================================================
+def _populate(store, n=40):
+    for i in range(n):
+        store.put(f"sp{i % 4}", f"b{i}", HW,
+                  config={"BM": 64, "i": i}, runtime=1.0 + i, trials=4)
+
+
+def test_clean_save_is_a_noop(tmp_path):
+    """Regression: a save with nothing dirty must not rewrite the file."""
+    path = str(tmp_path / "s.json")
+    store = ConfigStore(path)
+    store.autosave = False
+    _populate(store)
+    store.save()
+    st0 = os.stat(path)
+    before = store.save_stats["noop"]
+    store.save()
+    store.save()
+    st1 = os.stat(path)
+    assert store.save_stats["noop"] == before + 2
+    assert (st0.st_mtime_ns, st0.st_size) == (st1.st_mtime_ns, st1.st_size)
+
+
+def test_dirty_save_roundtrips_equivalent(tmp_path):
+    """Delta saves produce the same on-disk corpus as a forced full
+    save — byte-for-byte entry equivalence after reload."""
+    path = str(tmp_path / "s.json")
+    store = ConfigStore(path)
+    store.autosave = False
+    _populate(store)
+    store.save()
+    store.put("sp0", "b0", HW, config={"BM": 128, "i": -1},
+              runtime=0.25, trials=9)
+    store.put("sp1", "bNEW", HW, config={"BM": 32}, runtime=2.5, trials=1)
+    merged0 = store.save_stats["merged_reads"]
+    store.save()                          # own-write fast path: no read-back
+    assert store.save_stats["merged_reads"] == merged0
+    via_delta = ConfigStore(path).to_dict()["entries"]
+
+    store.save(force=True)                # full rewrite of the same state
+    via_full = ConfigStore(path).to_dict()["entries"]
+    assert via_delta == via_full
+    assert ConfigStore(path).get("sp0", "b0", HW).runtime == 0.25
+
+
+def test_put_applies_merge_rule_in_memory(tmp_path):
+    """The own-write save fast path serializes memory without re-reading
+    the file, so memory must never regress below what was persisted: a
+    put with a worse runtime or a lower model revision loses at put time
+    (the same resolution _merge_from applies between files)."""
+    store = ConfigStore(str(tmp_path / "s.json"))
+    store.autosave = False
+    store.put("sp", "b", HW, config={"BM": 64}, runtime=1.0, trials=4)
+    kept = store.put("sp", "b", HW, config={"BM": 8}, runtime=5.0, trials=1)
+    assert kept.runtime == 1.0 and kept.config == {"BM": 64}
+    # equal runtime: the fresh put wins (merge keeps "ours" on ties, and
+    # at put time ours is the incoming value)
+    store.put("sp", "b", HW, config={"BM": 32}, runtime=1.0, trials=9)
+    assert store.get("sp", "b", HW).config == {"BM": 32}
+
+    store.put_model_dict("sp", "b", HW, {"tag": "new"}, revision=7)
+    store.put_model_dict("sp", "b", HW, {"tag": "stale"}, revision=3)
+    assert store.get_model_dict("sp", "b", HW)["tag"] == "new"
+    store.put_model_dict("sp", "b", HW, {"tag": "newer"})   # auto: rev 8
+    assert store.get_model_dict("sp", "b", HW)["revision"] == 8
+
+
+def test_delta_save_skips_readback_but_merges_foreign_writes(tmp_path):
+    """Our own last write ⇒ no read-back; a foreign write to the same
+    file must still be merged, not clobbered."""
+    path = str(tmp_path / "s.json")
+    store = ConfigStore(path)
+    store.autosave = False
+    _populate(store, n=8)
+    store.save()
+    merged0 = store.save_stats["merged_reads"]
+    store.put("sp0", "b0", HW, config={"BM": 256}, runtime=0.5, trials=2)
+    store.save()
+    assert store.save_stats["merged_reads"] == merged0   # own write: no read
+
+    other = ConfigStore(path)             # second writer, same file
+    other.autosave = False
+    other.put("spX", "bX", HW, config={"BM": 8}, runtime=9.0, trials=1)
+    other.save()
+
+    store.put("sp1", "b1", HW, config={"BM": 512}, runtime=0.75, trials=2)
+    store.save()                          # stat token mismatch → merge
+    assert store.save_stats["merged_reads"] == merged0 + 1
+    assert store.save_stats["delta"] >= 1  # overlay write, not full dump
+    reread = ConfigStore(path)
+    assert reread.get("spX", "bX", HW).runtime == 9.0
+    assert reread.get("sp1", "b1", HW).runtime == 0.75
+
+
+# =============================================================================
+# Launch CLI: --fsync plumbs through, rejects unknown modes
+# =============================================================================
+def test_launch_fsync_choices():
+    import argparse
+
+    from repro.launch.daemon import main
+    with pytest.raises(SystemExit) as ei:
+        main(["--backend", "virtual", "--fsync", "sometimes",
+              "--port", "0"])
+    assert ei.value.code == 2             # argparse rejects the choice
+    assert "sometimes" not in MODES
+    assert isinstance(argparse.ArgumentParser, type)
+
+
+def test_daemon_accepts_journal_instance(tmp_path):
+    jpath = str(tmp_path / "j.jsonl")
+    d = TuningDaemon(VirtualWorkerPool(workers=2), ConfigStore(),
+                     default_trial_budget=4,
+                     journal=RequestJournal(jpath, mode=MODE_OFF))
+    d.tuner.begin()
+    r = d.handle(validate_request(dict(
+        op="submit", kind="kernel", tenant="t", kernel="matmul",
+        input="2048", hardware=HW, budget=4, seed=7, wait=False)))
+    assert r["ok"]
+    d.journal.close()
+    events, _ = replay(jpath)
+    assert any(e["ev"] == "submit" for e in events)
