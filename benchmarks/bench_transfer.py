@@ -1,0 +1,262 @@
+"""Cross-space model transfer benchmark: never-seen kernel, borrowed model.
+
+The acceptance experiment for structural-signature transfer (the fifth
+warm-start tier): a ``ConfigStore`` is seeded with TP→PC_ops models
+trained on SOURCE kernels only — the target kernel's space has never been
+tuned, so all four exact-space ladder tiers miss by construction.  For
+each seed, the held-out kernel is then tuned twice on the deterministic
+synthetic backend (cost-model priced, virtual clock — bit-reproducible):
+
+* **transferred** — ``transfer=True``: the store offers the most
+  structurally similar same-kind model (counter-Jaccard × parameter
+  overlap), rebound onto the target space through the shared-counter
+  intersection, driving a distrust-and-verify ``TransferredWarmStart``.
+* **cold** — ``transfer=False``: the legacy ladder alone, which misses,
+  so the job falls back to seeded random search.
+
+Convergence = completed trials until within ``WELL_FACTOR`` (1.1×) of the
+target's exhaustive best (the paper's well-performing criterion),
+censored at the budget.  Gates:
+
+1. **Transfer wins** — the transferred median trials-to-well across seeds
+   is strictly below the cold median.
+2. **Exact hits unchanged** — when the store DOES hold the target's own
+   model, the tuning trace with ``transfer=True`` is bit-identical to
+   ``transfer=False`` (the fifth tier is invisible unless all four legacy
+   tiers miss).
+
+Writes ``BENCH_transfer.json``; exits non-zero when a gate is violated.
+
+    PYTHONPATH=src python -m benchmarks.bench_transfer [--smoke]
+        [--out BENCH_transfer.json] [--budget 40] [--seeds 9]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import SPECS, record_space
+from repro.fleet import FleetTuner, VirtualWorkerPool, job_from_registry
+from repro.kernels.registry import BENCHMARKS
+from repro.tuning import ConfigStore, TuningSession
+
+SCHEMA = "repro.bench_transfer"
+VERSION = 1
+
+SOURCES = ("matmul", "transpose", "nbody", "attention", "coulomb")
+TARGET = ("conv2d", "4096")
+HW = "tpu_v5e"
+WELL_FACTOR = 1.1
+
+
+def _default_input(kernel: str) -> str:
+    bm = BENCHMARKS[kernel]
+    return next(k for k, v in bm.inputs.items() if v is bm.default_input)
+
+
+def build_corpus(sources) -> ConfigStore:
+    """Train one TP→PC_ops model per SOURCE kernel and publish it; the
+    target kernel's space is deliberately absent."""
+    store = ConfigStore()
+    for kernel in sources:
+        inp = _default_input(kernel)
+        bm = BENCHMARKS[kernel]
+        sp = bm.make_space()
+        sess = TuningSession(sp, lambda c, _bm=bm, _i=inp:
+                             _bm.workload_fn(c, _bm.inputs[_i]),
+                             hw=SPECS[HW], seed=0)
+        model = sess.train(kind="tree", sample="deliberate")
+        store.save_model(sp.name, inp, HW, model, sp, kind="kernel")
+    return store
+
+
+def _clone(store: ConfigStore) -> ConfigStore:
+    out = ConfigStore()
+    out._models = dict(store._models)
+    out._reindex_models()
+    return out
+
+
+def _run_target(store: ConfigStore, budget: int, seed: int,
+                transfer: bool):
+    pool = VirtualWorkerPool(workers=1)
+    try:
+        job = job_from_registry(TARGET[0], TARGET[1], HW, budget=budget,
+                                seed=seed)
+        ft = FleetTuner([job], pool, store=store, transfer=transfer,
+                        publish_models=False)
+        rep = ft.run()
+    finally:
+        pool.close()
+    if ft.train_errors:
+        raise RuntimeError(f"train errors: {ft.train_errors}")
+    return rep.results[0]
+
+
+def run_transfer(corpus: ConfigStore, budget: int, seeds: List[int],
+                 threshold_s: float) -> Dict:
+    rows = []
+    for seed in seeds:
+        tr = _run_target(_clone(corpus), budget, seed, transfer=True)
+        cold = _run_target(_clone(corpus), budget, seed, transfer=False)
+        if tr.searcher != "transfer_warm_start":
+            raise RuntimeError(
+                f"seed {seed}: transfer tier did not engage ({tr.searcher})")
+        if cold.searcher != "random":
+            raise RuntimeError(
+                f"seed {seed}: cold run was not cold ({cold.searcher})")
+
+        def t2w(r) -> int:
+            v = r.trials_to_threshold(threshold_s)
+            return int(v) if v is not None else int(budget)
+
+        rows.append({
+            "seed": seed,
+            "transfer_from": tr.transfer_from,
+            "similarity": tr.transfer_similarity,
+            "transferred_trials_to_well": t2w(tr),
+            "cold_trials_to_well": t2w(cold),
+            "transferred_best_s": tr.best_runtime,
+            "cold_best_s": cold.best_runtime,
+        })
+    t = [r["transferred_trials_to_well"] for r in rows]
+    c = [r["cold_trials_to_well"] for r in rows]
+    return {
+        "target": "/".join(TARGET),
+        "budget_per_run": budget,
+        "well_factor": WELL_FACTOR,
+        "well_threshold_s": threshold_s,
+        "seeds": list(seeds),
+        "runs": rows,
+        "transferred_trials_to_well": t,
+        "cold_trials_to_well": c,
+        "transferred_median": float(np.median(t)),
+        "cold_median": float(np.median(c)),
+        "transferred_mean": float(np.mean(t)),
+        "cold_mean": float(np.mean(c)),
+        "median_ratio": float(np.median(t) / max(np.median(c), 1e-12)),
+    }
+
+
+def run_exact_golden(corpus: ConfigStore, budget: int,
+                     seeds: List[int]) -> Dict:
+    """Store holds the TARGET's own model: transfer on/off must produce
+    bit-identical traces (the legacy ladder answers; tier five is idle)."""
+    bm = BENCHMARKS[TARGET[0]]
+    sp = bm.make_space()
+    sess = TuningSession(sp, lambda c: bm.workload_fn(
+        c, bm.inputs[TARGET[1]]), hw=SPECS[HW], seed=0)
+    model = sess.train(kind="tree", sample="deliberate")
+    base = _clone(corpus)
+    base.save_model(sp.name, TARGET[1], HW, model, sp, kind="kernel")
+
+    checked, identical = 0, True
+    details = []
+    for seed in seeds:
+        on = _run_target(_clone(base), budget, seed, transfer=True)
+        off = _run_target(_clone(base), budget, seed, transfer=False)
+        same = (on.trace == off.trace and on.history == off.history
+                and on.searcher == off.searcher == "warm_start"
+                and on.transfer_from is None)
+        identical = identical and same
+        checked += 1
+        details.append({"seed": seed, "identical": same,
+                        "searcher_on": on.searcher,
+                        "searcher_off": off.searcher})
+    return {"runs_checked": checked, "bit_identical": identical,
+            "details": details}
+
+
+def run_benchmark(budget: int, n_seeds: int) -> Dict:
+    corpus = build_corpus(SOURCES)
+    bm = BENCHMARKS[TARGET[0]]
+    rec = record_space(bm.make_space(),
+                       lambda c: bm.workload_fn(c, bm.inputs[TARGET[1]]),
+                       SPECS[HW])
+    threshold = float(rec.best_runtime) * WELL_FACTOR
+    seeds = list(range(n_seeds))
+    transfer = run_transfer(corpus, budget, seeds, threshold)
+    golden = run_exact_golden(corpus, budget, seeds[:max(3, n_seeds // 3)])
+    summary = {
+        "transferred_median_trials_to_well": transfer["transferred_median"],
+        "cold_median_trials_to_well": transfer["cold_median"],
+        "transfer_beats_cold":
+            transfer["transferred_median"] < transfer["cold_median"],
+        "exact_hits_bit_identical": golden["bit_identical"],
+    }
+    violations = []
+    if not summary["transfer_beats_cold"]:
+        violations.append(
+            f"transferred median trials-to-well "
+            f"{transfer['transferred_median']:.1f} is not below cold "
+            f"median {transfer['cold_median']:.1f}")
+    if not summary["exact_hits_bit_identical"]:
+        violations.append("an exact-space warm start changed its trace "
+                          "when transfer was enabled")
+    return {
+        "schema": SCHEMA,
+        "version": VERSION,
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "host": {"python": platform.python_version(),
+                 "numpy": np.__version__,
+                 "machine": platform.machine()},
+        "workload": {
+            "source_kernels": list(SOURCES),
+            "target": "/".join(TARGET),
+            "hardware": HW,
+            "budget": budget,
+            "n_seeds": n_seeds,
+        },
+        "transfer": transfer,
+        "exact_golden": golden,
+        "summary": summary,
+        "violations": violations,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="BENCH_transfer.json")
+    ap.add_argument("--budget", type=int, default=40,
+                    help="per-run trial budget (also the censoring point)")
+    ap.add_argument("--seeds", type=int, default=9,
+                    help="number of tuning seeds per arm")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: fewer seeds, smaller budget")
+    args = ap.parse_args(argv)
+
+    budget, n_seeds = args.budget, args.seeds
+    if args.smoke:
+        budget, n_seeds = 30, 5
+
+    result = run_benchmark(budget, n_seeds)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    s = result["summary"]
+    t = result["transfer"]
+    print(f"wrote {args.out}")
+    print(f"never-seen {t['target']} on {HW}: transferred median "
+          f"trials-to-well {s['transferred_median_trials_to_well']:.1f} vs "
+          f"cold {s['cold_median_trials_to_well']:.1f} "
+          f"(ratio {t['median_ratio']:.3f}; target < 1: "
+          f"{'PASS' if s['transfer_beats_cold'] else 'FAIL'})")
+    sims = sorted({r['transfer_from'] for r in t['runs']})
+    print(f"  source artifact(s): {', '.join(sims)} "
+          f"(similarity {t['runs'][0]['similarity']:.3f})")
+    print(f"exact-hit golden (transfer on vs off, warm_start): "
+          f"{'PASS' if s['exact_hits_bit_identical'] else 'FAIL'}")
+    if result["violations"]:
+        print("GATES VIOLATED:\n  " + "\n  ".join(result["violations"]),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -151,6 +151,12 @@ class JobResult:
     parked: bool = False         # scheduler parked it inside the well band
     cancelled: bool = False      # cancelled mid-run (service/drain path):
     #                              partial results, nothing published
+    # cross-space transfer provenance: set only when the warm start came
+    # from the store's compatible-space tier (all four exact-space tiers
+    # missed) — the source artifact's store key and the structural
+    # similarity that justified using it
+    transfer_from: Optional[str] = None
+    transfer_similarity: Optional[float] = None
 
     def trials_to_threshold(self, threshold: float) -> Optional[int]:
         """Completed trials until runtime <= threshold (None: never)."""

@@ -13,11 +13,15 @@ operationalizes that at deployment scale:
   TP→PC_ops model artifacts under ``(space, bucket, hardware)`` keys;
 * a job with no explicit searcher warm-starts from the NEAREST stored
   artifact (exact key → same bucket on other hardware → same hardware on
-  another bucket → same space), walking the model's predicted-runtime
-  ranking on its own hardware — so adding a device or a shape to the fleet
-  costs a handful of trials instead of a fresh search; with no artifact it
-  falls back to its ``cold_searcher`` and, on completion, trains and
-  publishes the missing model for the next arrival.
+  another bucket → same space → compatible spaces, each rebound through
+  the shared-counter intersection and blended as a similarity-weighted
+  committee), walking the prior's predicted-runtime ranking on its own
+  hardware — so adding a device or a shape to the fleet costs a handful
+  of trials instead of a fresh search; a CROSS-SPACE prior additionally
+  runs a distrust-and-verify first wave (``TransferredWarmStart``) so a
+  misleading transfer costs at most one wave.  With no artifact at all
+  the job falls back to its ``cold_searcher`` and, on completion, trains
+  and publishes the missing model for the next arrival.
 
 Scheduling is PRIORITY dispatch by predicted remaining gain: a job backed
 by a stored TP→PC artifact knows its model-predicted best runtime on its
@@ -65,9 +69,10 @@ from repro.core import costmodel, hwspec
 from repro.core.account import EvalAccount, Observation
 from repro.core.evaluate import ElasticInFlight
 from repro.core.hwspec import HardwareSpec
-from repro.core.model import TPPCModel
-from repro.core.searcher import WarmStartSearcher, make_searcher
-from repro.core.tuner import predicted_runtimes
+from repro.core.model import TPPCModel, TransferEnsemble
+from repro.core.searcher import (TransferredWarmStart, WarmStartSearcher,
+                                 make_searcher)
+from repro.core.tuner import ensemble_runtime_scores, predicted_runtimes
 from repro.core.tuning_space import TuningSpace
 from repro.fleet.job import JobResult, TuningJob
 from repro.fleet.pool import FAIL_TEST, WorkItem
@@ -88,6 +93,17 @@ def predicted_runtime_order(model: TPPCModel, space: TuningSpace,
     ranking a warm-started job walks."""
     return [int(i) for i in
             np.argsort(predicted_runtimes(model, space, hw), kind="stable")]
+
+
+def _whole_space_scores(model, space: TuningSpace,
+                        hw: HardwareSpec) -> np.ndarray:
+    """Warm-start ranking scores for either prior shape: absolute
+    predicted runtimes for a native/exact model, the committee's relative
+    scores for a cross-space ``TransferEnsemble`` (only the argsort of
+    the latter is meaningful — see ``ensemble_runtime_scores``)."""
+    if isinstance(model, TransferEnsemble):
+        return ensemble_runtime_scores(model, space, hw)
+    return predicted_runtimes(model, space, hw)
 
 
 @dataclasses.dataclass
@@ -197,6 +213,10 @@ class _JobState:
         self.prep_model = None
         self.prep_key: Optional[str] = None
         self.pred = None
+        # cross-space transfer provenance (set when the warm start came
+        # from the store's compatible-space tier)
+        self.transfer_key: Optional[str] = None
+        self.transfer_similarity: Optional[float] = None
         self.submitted = 0
         self.pending = 0
         self.done = False
@@ -282,7 +302,9 @@ class FleetTuner:
                  on_job_done=None,
                  on_trial=None,
                  train_async: bool = True,
-                 train_queue: int = 8):
+                 train_queue: int = 8,
+                 transfer: bool = True,
+                 transfer_threshold: Optional[float] = None):
         if not jobs and not allow_empty:
             raise ValueError("FleetTuner needs at least one job "
                              "(allow_empty=True for a service fleet that "
@@ -334,6 +356,14 @@ class FleetTuner:
         self.train_queue = int(train_queue)
         self._trainer: Optional[_TrainerThread] = None
         self.train_errors: List[Tuple[str, str]] = []
+        # cross-space model transfer: when ALL exact-space warm-start
+        # tiers miss, try the store's signature-indexed compatible-space
+        # tier before going cold (transfer=False pins the legacy ladder)
+        self.transfer = bool(transfer)
+        if transfer_threshold is None:
+            from repro.tuning.signature import DEFAULT_TRANSFER_THRESHOLD
+            transfer_threshold = DEFAULT_TRANSFER_THRESHOLD
+        self.transfer_threshold = float(transfer_threshold)
         # (space, kind) -> publishes still training: jobs of that space
         # defer binding until the model they would have seen is out
         self._publish_keys: Dict[Tuple[str, str], int] = {}
@@ -366,20 +396,30 @@ class FleetTuner:
                 model, key = self.store.load_nearest_model(
                     job.space.name, job.bucket, js.hw_key,
                     bind_space=job.space, kind=job.kind)
+            if model is None and job.searcher is None:
+                # all four exact-space tiers missed: try the store's
+                # signature-indexed compatible-space tier (a model from
+                # a structurally similar space, rebound through the
+                # shared-counter intersection)
+                model, key = self._load_transfer(js)
             js.prep_model, js.prep_key = model, key
             if model is not None and self._trainer is not None:
                 space, hw = job.space, js.hw
                 js.prep_state = "pending"
                 self._trainer.submit(
                     "prep", js,
-                    lambda: predicted_runtimes(model, space, hw))
+                    lambda: _whole_space_scores(model, space, hw))
                 return False
             if model is not None:
-                js.pred = predicted_runtimes(model, job.space, js.hw)
+                js.pred = _whole_space_scores(model, job.space, js.hw)
             js.prep_state = "done"
         model, pred = js.prep_model, js.pred
         if model is not None and pred is not None:
-            js.predicted_best = float(np.min(pred))
+            if js.transfer_key is None:
+                # a borrowed model's ABSOLUTE scale is not trustworthy on
+                # a space it was never fit on: transferred jobs keep gain
+                # unknown (rank like cold, never park on the prior)
+                js.predicted_best = float(np.min(pred))
             if self.verbose:
                 print(f"[fleet] {job.name}: warm start from {js.prep_key}")
         if job.searcher is not None:
@@ -389,12 +429,22 @@ class FleetTuner:
                 model=model, cores=js.hw.cores)
         elif model is not None and pred is not None:
             js.warm_started = True
-            js.searcher_name = "warm_start"
-            js.searcher = WarmStartSearcher(
-                job.space,
-                order=[int(i) for i in np.argsort(pred, kind="stable")],
-                seed=job.seed)
+            order = [int(i) for i in np.argsort(pred, kind="stable")]
+            if js.transfer_key is not None:
+                # transferred prior: distrust-and-verify first wave, so
+                # a misleading cross-space ranking costs at most one wave
+                js.searcher_name = "transfer_warm_start"
+                js.searcher = TransferredWarmStart(
+                    job.space, order=order, seed=job.seed)
+            else:
+                js.searcher_name = "warm_start"
+                js.searcher = WarmStartSearcher(
+                    job.space, order=order, seed=job.seed)
         else:
+            # going cold: any transfer candidacy died in prep (failed
+            # whole-space prediction) — drop the provenance with it
+            js.transfer_key = None
+            js.transfer_similarity = None
             js.searcher_name = job.cold_searcher
             js.searcher = make_searcher(job.cold_searcher, job.space,
                                         seed=job.seed)
@@ -402,6 +452,50 @@ class FleetTuner:
         js.pred = None
         self._absorb_stall(t0)
         return True
+
+    def _load_transfer(self, js: _JobState):
+        """Compatible-space prior for a job every exact tier missed:
+        sign the job's space (counters sampled from one pure workload
+        evaluation) and ask the store for the similarity-weighted
+        committee over EVERY same-kind artifact above the threshold
+        (``load_transfer_ensemble``; a store exposing only the single
+        best via ``load_transfer_model`` still works).  Provenance
+        reports the top member.  Failures are contained to this job
+        (recorded in ``train_errors``) — it just goes cold, exactly as
+        if the tier had missed."""
+        if not self.transfer or self.store is None \
+                or not (hasattr(self.store, "load_transfer_ensemble")
+                        or hasattr(self.store, "load_transfer_model")):
+            return None, None
+        job = js.job
+        try:
+            from repro.tuning.signature import SpaceSignature
+
+            counters = ()
+            if job.workload_fn is not None and len(job.space):
+                counters = sorted(job.workload_fn(job.space[0]))
+            sig = SpaceSignature.from_space(job.space, kind=job.kind,
+                                            counters=counters)
+            loader = getattr(self.store, "load_transfer_ensemble",
+                             self.store.load_transfer_model)
+            model, key, sim = loader(
+                sig, job.bucket, js.hw_key, bind_space=job.space,
+                threshold=self.transfer_threshold)
+        except Exception as exc:
+            self.train_errors.append((job.name, f"transfer: {exc!r}"))
+            if self.verbose:
+                print(f"[fleet] {job.name}: transfer lookup failed "
+                      f"({exc!r}); going cold")
+            return None, None
+        if model is None:
+            return None, None
+        js.transfer_key = key
+        js.transfer_similarity = float(sim)
+        if self.verbose:
+            n = len(model) if isinstance(model, TransferEnsemble) else 1
+            print(f"[fleet] {job.name}: cross-space transfer from {key} "
+                  f"(similarity {sim:.3f}, committee of {n})")
+        return model, key
 
     def _apply_prep(self, js: _JobState, pred, error) -> None:
         """Trainer completion for a warm-start prediction (loop thread).
@@ -946,7 +1040,9 @@ class FleetTuner:
             trace=list(acct.trace), history=list(acct.history),
             failures=js.failures, abandoned_s=acct.abandoned,
             known_bad=list(js.known_bad), parked=js.was_parked,
-            cancelled=True)
+            cancelled=True,
+            transfer_from=js.transfer_key,
+            transfer_similarity=js.transfer_similarity)
         if self.verbose:
             print(f"[fleet] {js.job.name}: cancelled after "
                   f"{acct.steps} trials")
@@ -975,7 +1071,9 @@ class FleetTuner:
             elapsed=acct.elapsed, busy=acct.busy,
             trace=list(acct.trace), history=list(acct.history),
             failures=js.failures, abandoned_s=acct.abandoned,
-            known_bad=list(js.known_bad), parked=js.was_parked)
+            known_bad=list(js.known_bad), parked=js.was_parked,
+            transfer_from=js.transfer_key,
+            transfer_similarity=js.transfer_similarity)
         if self._stopping and not js.was_parked \
                 and js.submitted < job.budget \
                 and not (js.searcher is not None and js.searcher.done):
@@ -997,7 +1095,10 @@ class FleetTuner:
                 config=js.result.best_config, runtime=acct.best_runtime,
                 trials=acct.steps,
                 meta={"job": job.name, "searcher": js.searcher_name,
-                      "warm_started": js.warm_started},
+                      "warm_started": js.warm_started,
+                      **({"transfer_from": js.transfer_key,
+                          "transfer_similarity": js.transfer_similarity}
+                         if js.transfer_key is not None else {})},
                 kind=job.kind)
             if self.publish_models and self.store.get_model_dict(
                     job.space.name, job.bucket, js.hw_key,

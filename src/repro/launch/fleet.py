@@ -98,6 +98,17 @@ def main(argv=None) -> int:
                     help="shared ConfigStore path (default: in-memory)")
     ap.add_argument("--no-publish", action="store_true",
                     help="do not train/publish missing model artifacts")
+    ap.add_argument("--transfer", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="when every exact-space stored model misses a "
+                    "job, warm-start it from the most structurally "
+                    "similar same-kind space's model (--no-transfer pins "
+                    "the legacy exact-space ladder)")
+    ap.add_argument("--transfer-threshold", type=float, default=None,
+                    help="minimum structural similarity (counter Jaccard "
+                    "x parameter overlap, in [0,1]) a cross-space model "
+                    "must clear to be used (default: the library's "
+                    "conservative threshold)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write a JSON report here")
     ap.add_argument("--verbose", action="store_true")
@@ -158,6 +169,8 @@ def main(argv=None) -> int:
                        straggler_factor=args.straggler_factor,
                        park_factor=args.park_factor,
                        publish_models=not args.no_publish,
+                       transfer=args.transfer,
+                       transfer_threshold=args.transfer_threshold,
                        verbose=args.verbose)
     # SIGINT/SIGTERM drain: stop filling, collect what is in flight,
     # publish/report the completed jobs (same contract as the daemon)
@@ -178,6 +191,9 @@ def main(argv=None) -> int:
           + ("  [DRAINED EARLY]" if draining() else ""))
     for r in sorted(report.results, key=lambda r: r.job):
         mark = " [cancelled]" if r.cancelled else ""
+        if r.transfer_from is not None:
+            mark += (f" [transfer {r.transfer_from} "
+                     f"~{r.transfer_similarity:.2f}]")
         print(f"  {r.job:40s} {'warm' if r.warm_started else 'cold':4s} "
               f"{r.trials:3d} trials  best {r.best_runtime*1e3:9.3f}ms  "
               f"{r.best_config}{mark}")
@@ -214,6 +230,8 @@ def main(argv=None) -> int:
                     "best_config": r.best_config,
                     "failures": r.failures, "known_bad": r.known_bad,
                     "parked": r.parked, "cancelled": r.cancelled,
+                    "transfer_from": r.transfer_from,
+                    "transfer_similarity": r.transfer_similarity,
                 } for r in report.results],
             }, f, indent=2)
         print(f"[fleet] -> {args.out}")

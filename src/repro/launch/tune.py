@@ -39,12 +39,19 @@ def _tune_problem(args) -> int:
     store = ConfigStore(args.store)
     pool = VirtualWorkerPool(workers=1)
     try:
-        report = FleetTuner([job], pool, store=store).run()
+        report = FleetTuner([job], pool, store=store,
+                            transfer=args.transfer,
+                            transfer_threshold=args.transfer_threshold).run()
     finally:
         pool.close()
     r = report.results[0]
-    print(f"[tune] {problem.spec} on {args.hw} ({r.searcher}"
-          f"{', warm' if r.warm_started else ''}): "
+    warm = ""
+    if r.transfer_from is not None:
+        warm = (f", transfer from {r.transfer_from} "
+                f"(similarity {r.transfer_similarity:.3f})")
+    elif r.warm_started:
+        warm = ", warm"
+    print(f"[tune] {problem.spec} on {args.hw} ({r.searcher}{warm}): "
           f"best {r.best_runtime*1e3:.3f}ms after {r.trials} tests")
     print(f"[tune] best config: {r.best_config}")
     if args.store:
@@ -74,6 +81,18 @@ def main():
                     help="hardware target for --problem mode")
     ap.add_argument("--store", default=None,
                     help="ConfigStore path for --problem mode artifacts")
+    from repro.tuning.signature import DEFAULT_TRANSFER_THRESHOLD
+    ap.add_argument("--transfer", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="--problem mode: when every exact-space stored "
+                    "model misses, warm-start from the most structurally "
+                    "similar same-kind space's model (--no-transfer pins "
+                    "the legacy exact-space ladder)")
+    ap.add_argument("--transfer-threshold", type=float,
+                    default=DEFAULT_TRANSFER_THRESHOLD,
+                    help="minimum structural similarity (counter Jaccard "
+                    "x parameter overlap, in [0,1]) a cross-space model "
+                    "must clear to be used")
     ap.add_argument("--searcher", default=None,
                     choices=sorted(SEARCHERS))
     ap.add_argument("--budget", type=int, default=10)

@@ -81,7 +81,8 @@ class RequestRecord:
     snap: Optional[AccountSnapshot] = None   # metering baseline
     spent_s: float = 0.0          # worker-seconds billed to this request
     trials: int = 0               # live trials this request paid for
-    source: Optional[str] = None  # "store" | "tuned" | "coalesced"
+    source: Optional[str] = None  # "store" | "tuned" | "transfer"
+    #                               | "coalesced"
     primary: Optional[str] = None  # rid this request coalesced onto
     followers: List[str] = dataclasses.field(default_factory=list)
     result: Optional[Dict[str, Any]] = None
@@ -392,14 +393,22 @@ class TuningDaemon:
                     frid, f"primary {rec.rid} was cancelled")
         else:
             rec.state = DONE
-            rec.source = "tuned"
+            # a job warm-started from the cross-space transfer tier is
+            # still live-tuned, but callers reading `source` learn the
+            # prior came from ANOTHER space's model — with the source
+            # key and similarity to judge it by
+            rec.source = "transfer" if jr.transfer_from is not None \
+                else "tuned"
             rec.trials = jr.trials + rec.resumed_trials
             rec.result = {
                 "key": rec.key, "config": dict(jr.best_config),
                 "runtime": jr.best_runtime, "trials": rec.trials,
                 "searcher": jr.searcher, "warm_started": jr.warm_started,
-                "source": "tuned",
+                "source": rec.source,
             }
+            if jr.transfer_from is not None:
+                rec.result["transfer_from"] = jr.transfer_from
+                rec.result["similarity"] = jr.transfer_similarity
             self._j(EV_DONE, rid=rec.rid, result=rec.result,
                     spent=round(rec.spent_s, 9))
             for frid in rec.followers:
@@ -696,14 +705,19 @@ class TuningDaemon:
 
     def _op_stats(self) -> Dict[str, Any]:
         by_state: Dict[str, int] = {}
+        by_source: Dict[str, int] = {}
         for rec in self._records.values():
             by_state[rec.state] = by_state.get(rec.state, 0) + 1
+            if rec.source is not None:
+                by_source[rec.source] = by_source.get(rec.source, 0) + 1
         return P.ok(
             protocol=P.PROTOCOL, version=P.PROTOCOL_VERSION,
             draining=self._draining,
             fleet=self.tuner.progress(),
             tenants=self.tenants.snapshot(),
             requests=by_state,
+            sources=by_source,
+            transfers=by_source.get("transfer", 0),
             store_entries=len(self.store),
             gc=self.gc_stats,
             journal=(None if self.journal is None

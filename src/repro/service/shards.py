@@ -35,8 +35,12 @@ import os
 import zlib
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
-from repro.core.model import TPPCModel
+from repro.core.model import TPPCModel, TransferredModel
 from repro.core.tuning_space import Config, TuningSpace
+from repro.tuning.serialize import rebind_model_dict
+from repro.tuning.signature import (DEFAULT_TRANSFER_THRESHOLD,
+                                    SpaceSignature, similarity,
+                                    transfer_compatible)
 from repro.tuning.store import (ConfigStore, StoreEntry, _FileLock,
                                 quarantine_file, split_key, store_key)
 
@@ -187,7 +191,8 @@ class ShardedConfigStore:
                 for k in bad_e:
                     shard._entries.pop(k, None)
                 for k in bad_m:
-                    shard._models.pop(k, None)
+                    if shard._models.pop(k, None) is not None:
+                        shard._index_discard(k)
 
             touched = set()
             for k in bad_e:
@@ -205,6 +210,7 @@ class ShardedConfigStore:
                 if mine is None or int(m.get("revision", 0)) \
                         > int(mine.get("revision", 0)):
                     dest._models[k] = m
+                    dest._index_add(k)
                     dest._dirty_models.add(k)
                 touched.add(j)
             for j in sorted(touched):
@@ -301,21 +307,64 @@ class ShardedConfigStore:
         if shard.get_model_dict(space, bucket, hardware,
                                 kind=kind) is not None:
             return exact
-        same_bucket, same_hw, same_space = [], [], []
-        for k in sorted(self.model_keys()):
-            kk, s, b, h = split_key(k)
-            if kk != want_kind or s != space:
-                continue
+        # union of the shards' (kind, space) index buckets — only keys
+        # that can possibly match, sorted so ties break identically to
+        # the single-file store
+        first_bucket = first_hw = first_space = None
+        for k in sorted(k for s_ in self._shards
+                        for k in s_._model_index.get((want_kind, space), ())):
+            _, _, b, h = split_key(k)
             if b == bucket:
-                same_bucket.append(k)
+                if first_bucket is None:
+                    first_bucket = k
+                    break
             elif h == hardware:
-                same_hw.append(k)
-            else:
-                same_space.append(k)
-        for tier in (same_bucket, same_hw, same_space):
-            if tier:
-                return tier[0]
+                if first_hw is None:
+                    first_hw = k
+            elif first_space is None:
+                first_space = k
+        for k in (first_bucket, first_hw, first_space):
+            if k is not None:
+                return k
         return None
+
+    def transfer_candidates(self, signature: SpaceSignature,
+                            bucket: str, hardware: str,
+                            threshold: float = DEFAULT_TRANSFER_THRESHOLD
+                            ) -> List[Tuple[str, float]]:
+        """Every compatible-space model key over ALL shards, most
+        preferred first — same contract as
+        ``ConfigStore.transfer_candidates`` (similarity rank, ties
+        toward same bucket, then same hardware, then sorted key order;
+        shard layout never affects the ranking)."""
+        found: List[Tuple[Tuple, str, float]] = []
+        for shard in self._shards:
+            for (kk, s), keys in sorted(shard._model_index.items()):
+                if kk != signature.kind or s == signature.space:
+                    continue
+                for k in keys:
+                    sig = shard.model_signature(k)
+                    if sig is None \
+                            or not transfer_compatible(sig, signature,
+                                                       threshold=threshold):
+                        continue
+                    sim = similarity(sig, signature)
+                    _, _, b, h = split_key(k)
+                    rank = (-sim, 0 if b == bucket else 1,
+                            0 if h == hardware else 1, k)
+                    found.append((rank, k, sim))
+        found.sort(key=lambda t: t[0])
+        return [(k, sim) for _, k, sim in found]
+
+    def nearest_transfer_key(self, signature: SpaceSignature,
+                             bucket: str, hardware: str,
+                             threshold: float = DEFAULT_TRANSFER_THRESHOLD
+                             ) -> Optional[Tuple[str, float]]:
+        """Fifth warm-start tier over ALL shards — same contract as
+        ``ConfigStore.nearest_transfer_key``."""
+        cands = self.transfer_candidates(signature, bucket, hardware,
+                                         threshold=threshold)
+        return cands[0] if cands else None
 
     def load_nearest_model(self, space: str, bucket: str, hardware: str,
                            bind_space: Optional[TuningSpace] = None,
@@ -328,6 +377,59 @@ class ShardedConfigStore:
         shard, _ = self._shard(key)
         return shard.load_model(s, b, h, bind_space=bind_space,
                                 kind=kk), key
+
+    def load_transfer_model(self, signature: SpaceSignature,
+                            bucket: str, hardware: str,
+                            bind_space: TuningSpace,
+                            threshold: float = DEFAULT_TRANSFER_THRESHOLD
+                            ) -> Tuple[Optional[TransferredModel],
+                                       Optional[str], float]:
+        """``(model, key, similarity)`` — sharded twin of
+        ``ConfigStore.load_transfer_model``."""
+        found = self.nearest_transfer_key(signature, bucket, hardware,
+                                          threshold=threshold)
+        if found is None:
+            return None, None, 0.0
+        key, sim = found
+        shard, _ = self._shard(key)
+        try:
+            model = rebind_model_dict(shard._models[key], bind_space,
+                                      signature, source_key=key,
+                                      similarity=sim)
+        except (ValueError, KeyError, TypeError):
+            return None, None, 0.0
+        return model, key, sim
+
+    def load_transfer_ensemble(self, signature: SpaceSignature,
+                               bucket: str, hardware: str,
+                               bind_space: TuningSpace,
+                               threshold: float
+                               = DEFAULT_TRANSFER_THRESHOLD,
+                               limit: Optional[int] = None
+                               ) -> Tuple[Optional["TransferEnsemble"],
+                                          Optional[str], float]:
+        """Similarity-weighted committee over every compatible artifact
+        across ALL shards — sharded twin of
+        ``ConfigStore.load_transfer_ensemble``."""
+        from repro.core.model import TransferEnsemble
+
+        members = []
+        for key, sim in self.transfer_candidates(signature, bucket,
+                                                 hardware,
+                                                 threshold=threshold):
+            shard, _ = self._shard(key)
+            try:
+                members.append((rebind_model_dict(
+                    shard._models[key], bind_space, signature,
+                    source_key=key, similarity=sim), sim))
+            except (ValueError, KeyError, TypeError):
+                continue
+            if limit is not None and len(members) >= limit:
+                break
+        if not members:
+            return None, None, 0.0
+        return TransferEnsemble(members), members[0][0].source_key, \
+            members[0][1]
 
     # -- persistence -----------------------------------------------------------
     def save(self, merge: bool = True, force: bool = False) -> str:

@@ -38,8 +38,13 @@ from repro.core.searcher import (SEARCHERS, Searcher, make_searcher,
                                  register_searcher, resolve_searcher,
                                  run_search, sequential_run_search)
 from repro.core.tuner import TuneResult, train_model, train_model_deliberate
-from repro.tuning.serialize import (model_from_dict, model_to_dict,
-                                    space_from_dict, space_to_dict)
+from repro.tuning.serialize import (artifact_signature, ensure_signature,
+                                    model_from_dict, model_to_dict,
+                                    rebind_model_dict, space_from_dict,
+                                    space_to_dict)
+from repro.tuning.signature import (DEFAULT_TRANSFER_THRESHOLD, ParamSlot,
+                                    SpaceSignature, map_parameters,
+                                    similarity, transfer_compatible)
 from repro.tuning.problem import (KernelProblem, TuningProblem, list_problems,
                                   make_problem, parse_problem, problem_kinds,
                                   register_problem_kind)
@@ -48,15 +53,18 @@ from repro.tuning.store import (ConfigStore, StoreEntry, legacy_kind,
                                 split_key, store_key, upgrade_key)
 
 __all__ = [
-    "Candidate", "ConfigStore", "CostModelEvaluator", "EvalAccount",
+    "Candidate", "ConfigStore", "CostModelEvaluator",
+    "DEFAULT_TRANSFER_THRESHOLD", "EvalAccount",
     "Evaluator", "FunctionEvaluator", "KernelProblem", "Observation",
-    "ProfilingUnsupported", "RecordedSpace", "ReplayEvaluator", "SEARCHERS",
-    "Searcher", "StoreEntry", "Ticket", "TuneResult", "TuningProblem",
-    "TuningSession", "VirtualAsyncEvaluator", "legacy_kind", "list_problems",
-    "make_problem", "make_searcher", "model_from_dict",
-    "model_to_dict", "parse_problem", "problem_kinds", "record_space",
-    "register_problem_kind", "register_searcher",
-    "resolve_searcher", "run_search", "sequential_run_search", "split_key",
-    "space_from_dict", "space_to_dict", "store_key", "train_model",
-    "train_model_deliberate", "upgrade_key",
+    "ParamSlot", "ProfilingUnsupported", "RecordedSpace", "ReplayEvaluator",
+    "SEARCHERS", "Searcher", "SpaceSignature", "StoreEntry", "Ticket",
+    "TuneResult", "TuningProblem", "TuningSession", "VirtualAsyncEvaluator",
+    "artifact_signature", "ensure_signature", "legacy_kind", "list_problems",
+    "make_problem", "make_searcher", "map_parameters", "model_from_dict",
+    "model_to_dict", "parse_problem", "problem_kinds", "rebind_model_dict",
+    "record_space", "register_problem_kind", "register_searcher",
+    "resolve_searcher", "run_search", "sequential_run_search", "similarity",
+    "split_key", "space_from_dict", "space_to_dict", "store_key",
+    "train_model", "train_model_deliberate", "transfer_compatible",
+    "upgrade_key",
 ]

@@ -13,13 +13,15 @@ explicit (config, counters) pairs, so reconstruction is faithful either way.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.model import (DecisionTreeModel, ExactCounterModel,
-                              QuadraticRegressionModel, TPPCModel, _Node)
+                              QuadraticRegressionModel, TPPCModel,
+                              TransferredModel, _Node)
 from repro.core.tuning_space import TuningParameter, TuningSpace
+from repro.tuning.signature import SpaceSignature, map_parameters
 
 FORMAT = "repro.tppc_model"
 VERSION = 1
@@ -78,10 +80,99 @@ def _check_space_compatible(space: TuningSpace, space_dict: Dict) -> None:
             f"artifact parameters {theirs} vs target space {ours}")
 
 
+# -- structural signatures on artifacts ----------------------------------------
+def artifact_counter_names(d: Dict) -> List[str]:
+    """The counter names a serialized model predicts, by artifact kind —
+    the counter half of an artifact's signature, recoverable from any
+    legacy (signature-less) artifact."""
+    kind = d.get("kind")
+    if kind == "tree":
+        return sorted(d.get("trees", {}))
+    if kind == "quadratic":
+        return sorted(d.get("counter_names", []))
+    if kind == "exact":
+        names: set = set()
+        for rec in d.get("counters", []):
+            names.update(rec)
+        return sorted(names)
+    return []
+
+
+def artifact_signature(d: Dict, kind: Optional[str] = None
+                       ) -> Optional[SpaceSignature]:
+    """The structural signature of a serialized model artifact.
+
+    Reads the embedded ``signature`` dict when the artifact carries one;
+    otherwise recomputes it from the recorded space parameters and the
+    model's counter names (the v2→v3 store upgrade path for legacy
+    artifacts).  ``kind`` overrides/supplies the problem kind — pass the
+    store key's kind so legacy artifacts sign under the right registry
+    string.  Returns None when the artifact has no recoverable structure.
+    """
+    sig_d = d.get("signature")
+    if isinstance(sig_d, dict):
+        try:
+            sig = SpaceSignature.from_dict(sig_d)
+            if kind is not None and sig.kind != kind:
+                sig = SpaceSignature(kind=str(kind), space=sig.space,
+                                     slots=sig.slots, counters=sig.counters)
+            return sig
+        except (ValueError, KeyError, TypeError):
+            pass
+    space_d = d.get("space")
+    if not isinstance(space_d, dict) or "parameters" not in space_d:
+        return None
+    try:
+        space = space_from_dict(space_d)
+    except (KeyError, TypeError, ValueError):
+        return None
+    return SpaceSignature.from_space(
+        space, kind=str(kind) if kind is not None else "kernel",
+        counters=artifact_counter_names(d))
+
+
+def ensure_signature(d: Dict, kind: Optional[str] = None) -> Dict:
+    """Return ``d`` with an embedded ``signature`` dict, computing one for
+    legacy artifacts.  Tolerant: an artifact whose structure cannot be
+    signed is returned unchanged (it simply never matches a transfer
+    tier)."""
+    if isinstance(d.get("signature"), dict):
+        return d
+    sig = artifact_signature(d, kind=kind)
+    if sig is None:
+        return d
+    out = dict(d)
+    out["signature"] = sig.to_dict()
+    return out
+
+
+def rebind_model_dict(d: Dict, target_space: TuningSpace,
+                      target_signature: SpaceSignature,
+                      source_key: Optional[str] = None,
+                      similarity: float = 0.0) -> TransferredModel:
+    """Load a serialized model and rebind it onto a *different* space: the
+    cross-space transfer read path.  Parameters map via hashed slots
+    (``map_parameters``), predictions flow through the shared-counter
+    intersection."""
+    source = model_from_dict(d)     # bound to its own recorded space
+    sig = artifact_signature(d, kind=target_signature.kind)
+    if sig is None:
+        raise ValueError("artifact has no recoverable space signature; "
+                         "cannot rebind it onto another space")
+    return TransferredModel(
+        source, target_space,
+        param_map=map_parameters(sig, target_signature),
+        counters=target_signature.counters or None,
+        similarity=similarity, source_key=source_key)
+
+
 # -- model <-> dict ------------------------------------------------------------
-def model_to_dict(model: TPPCModel, space: Optional[TuningSpace] = None) -> Dict:
+def model_to_dict(model: TPPCModel, space: Optional[TuningSpace] = None,
+                  kind: Optional[str] = None) -> Dict:
     """Serialize a trained model (plus its space's parameters) to JSON-safe
-    primitives.  ``space`` defaults to the model's own space."""
+    primitives.  ``space`` defaults to the model's own space; ``kind`` is
+    the problem kind recorded in the artifact's structural signature
+    (store save paths pass their key's kind)."""
     space = space if space is not None else model.space
     out = {"format": FORMAT, "version": VERSION,
            "space": space_to_dict(space)}
@@ -116,6 +207,15 @@ def model_to_dict(model: TPPCModel, space: Optional[TuningSpace] = None) -> Dict
         ]
     else:
         raise TypeError(f"cannot serialize model type {type(model).__name__}")
+    sig = getattr(model, "signature", None)
+    if isinstance(sig, SpaceSignature) and (kind is None or sig.kind == kind):
+        out["signature"] = sig.to_dict()
+    else:
+        base_kind = kind if kind is not None else \
+            (sig.kind if isinstance(sig, SpaceSignature) else "kernel")
+        out["signature"] = SpaceSignature.from_space(
+            space, kind=str(base_kind),
+            counters=model.counter_names).to_dict()
     return out
 
 
@@ -135,8 +235,8 @@ def model_from_dict(d: Dict, space: Optional[TuningSpace] = None) -> TPPCModel:
     if kind == "tree":
         trees = {name: _node_from_dict(t) for name, t in d["trees"].items()}
         scale = {name: float(s) for name, s in d["scale"].items()}
-        return DecisionTreeModel.from_state(space, trees, scale)
-    if kind == "quadratic":
+        model: TPPCModel = DecisionTreeModel.from_state(space, trees, scale)
+    elif kind == "quadratic":
         coefs = {
             tuple(int(b) for b in key.split(",") if b != ""): {
                 name: np.asarray(coef, dtype=np.float64)
@@ -144,8 +244,11 @@ def model_from_dict(d: Dict, space: Optional[TuningSpace] = None) -> TPPCModel:
             }
             for key, per_counter in d["coefs"].items()
         }
-        return QuadraticRegressionModel.from_state(
+        model = QuadraticRegressionModel.from_state(
             space, d["counter_names"], coefs, d["fallback"])
-    if kind == "exact":
-        return ExactCounterModel.from_pairs(space, d["configs"], d["counters"])
-    raise ValueError(f"unknown model kind {kind!r}")
+    elif kind == "exact":
+        model = ExactCounterModel.from_pairs(space, d["configs"], d["counters"])
+    else:
+        raise ValueError(f"unknown model kind {kind!r}")
+    model.signature = artifact_signature(d)
+    return model

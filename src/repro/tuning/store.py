@@ -22,7 +22,17 @@ The store is one JSON file holding two artifact kinds under the same key
   ancestor instead of tying.  ``prune(keep_hardware=..., keep_spaces=...,
   keep_buckets=...)`` GCs artifacts for fleet members that no longer exist.
 
-Schema (``format: repro.config_store``, version 2)::
+Model artifacts carry a structural **space signature**
+(``repro.tuning.signature``) so the warm-start ladder has a fifth,
+cross-space tier: when no model of the exact space exists, the most
+*structurally similar* same-kind space's model is rebound onto the new
+space through the shared-counter intersection
+(``nearest_transfer_key`` / ``load_transfer_model``).  Version-2 files
+(signature-less artifacts) load fine — signatures are recomputed from
+the recorded space parameters on the way in and persisted by the next
+save.
+
+Schema (``format: repro.config_store``, version 3)::
 
     {
       "format": "repro.config_store",
@@ -60,6 +70,7 @@ fleet of tuner processes sharing one store never clobber each other.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import json
 import os
@@ -74,14 +85,20 @@ try:
 except ImportError:          # non-POSIX: degrade to atomic-replace only
     fcntl = None
 
-from repro.core.model import TPPCModel
+from repro.core.model import TPPCModel, TransferredModel
 from repro.core.tuning_space import Config, TuningSpace
-from repro.tuning.serialize import model_from_dict, model_to_dict
+from repro.tuning.serialize import (artifact_signature, ensure_signature,
+                                    model_from_dict, model_to_dict,
+                                    rebind_model_dict)
+from repro.tuning.signature import (DEFAULT_TRANSFER_THRESHOLD,
+                                    SpaceSignature, similarity,
+                                    transfer_compatible)
 
 FORMAT = "repro.config_store"
-VERSION = 2
-# versions this code can read and merge (v1: 3-part keys, no kind)
-READABLE_VERSIONS = (1, 2)
+VERSION = 3
+# versions this code can read and merge (v1: 3-part keys, no kind;
+# v2: kind|space|bucket|hardware keys, signature-less model artifacts)
+READABLE_VERSIONS = (1, 2, 3)
 _SEP = "|"
 DEFAULT_KIND = "kernel"
 
@@ -240,6 +257,12 @@ class ConfigStore:
         self.autosave = autosave
         self._entries: Dict[str, StoreEntry] = {}
         self._models: Dict[str, Dict] = {}
+        # (kind, space) -> sorted model keys: nearest_model_key and the
+        # transfer tier scan one bucket instead of the whole corpus
+        self._model_index: Dict[Tuple[str, str], List[str]] = {}
+        # model key -> parsed SpaceSignature (or None when unsignable),
+        # invalidated whenever the key mutates
+        self._sig_cache: Dict[str, Optional[SpaceSignature]] = {}
         self.quarantined: List[str] = []   # damaged files moved aside
         # delta-save bookkeeping: keys mutated since the last save to
         # self.path, and a stat token identifying our own last write
@@ -296,6 +319,51 @@ class ConfigStore:
     def __contains__(self, key: str) -> bool:
         return key in self._entries
 
+    # -- model index -----------------------------------------------------------
+    # The model corpus is bucketed by (kind, space) and each bucket kept
+    # sorted, so every warm-start lookup — and the cross-space transfer
+    # scan — walks only the keys that can possibly match instead of
+    # re-sorting and re-splitting the whole corpus per call.  ALL
+    # ``self._models`` mutations must go through these helpers (or
+    # ``_reindex_models`` after a bulk swap).
+    def _index_add(self, key: str) -> None:
+        kind, space, _, _ = split_key(key)
+        keys = self._model_index.setdefault((kind, space), [])
+        i = bisect.bisect_left(keys, key)
+        if i >= len(keys) or keys[i] != key:
+            keys.insert(i, key)
+        self._sig_cache.pop(key, None)
+
+    def _index_discard(self, key: str) -> None:
+        kind, space, _, _ = split_key(key)
+        keys = self._model_index.get((kind, space))
+        if keys:
+            i = bisect.bisect_left(keys, key)
+            if i < len(keys) and keys[i] == key:
+                keys.pop(i)
+            if not keys:
+                del self._model_index[(kind, space)]
+        self._sig_cache.pop(key, None)
+
+    def _reindex_models(self) -> None:
+        self._model_index = {}
+        self._sig_cache = {}
+        for k in sorted(self._models):
+            kind, space, _, _ = split_key(k)
+            self._model_index.setdefault((kind, space), []).append(k)
+
+    def model_signature(self, key: str) -> Optional[SpaceSignature]:
+        """Parsed structural signature of a stored artifact (cached), or
+        None when the key is absent or the artifact has no recoverable
+        structure."""
+        if key not in self._models:
+            return None
+        if key in self._sig_cache:
+            return self._sig_cache[key]
+        sig = artifact_signature(self._models[key], kind=split_key(key)[0])
+        self._sig_cache[key] = sig
+        return sig
+
     # -- model artifacts -------------------------------------------------------
     def get_model_dict(self, space: str, bucket: str, hardware: str,
                        kind: Optional[str] = None) -> Optional[Dict]:
@@ -327,7 +395,7 @@ class ConfigStore:
         lower revision than anything already persisted).
         """
         key = store_key(space, bucket, hardware, kind=kind)
-        artifact = dict(artifact)
+        artifact = ensure_signature(dict(artifact), kind=split_key(key)[0])
         prev = self._models.get(key)
         if revision is None:
             revision = int((prev or {}).get("revision", 0)) + 1
@@ -338,6 +406,7 @@ class ConfigStore:
                 and int(prev.get("revision", 0)) > artifact["revision"]:
             return
         self._models[key] = artifact
+        self._index_add(key)
         self._dirty_models.add(key)
         self._autosave()
 
@@ -357,9 +426,12 @@ class ConfigStore:
                    revision: Optional[int] = None,
                    n_obs: Optional[int] = None,
                    kind: Optional[str] = None) -> None:
-        self.put_model_dict(space, bucket, hardware,
-                            model_to_dict(model, model_space),
-                            revision=revision, n_obs=n_obs, kind=kind)
+        self.put_model_dict(
+            space, bucket, hardware,
+            model_to_dict(model, model_space,
+                          kind=kind if kind is not None
+                          else legacy_kind(space)),
+            revision=revision, n_obs=n_obs, kind=kind)
 
     def nearest_model_key(self, space: str, bucket: str, hardware: str,
                           kind: Optional[str] = None) -> Optional[str]:
@@ -378,21 +450,67 @@ class ConfigStore:
         exact = store_key(space, bucket, hardware, kind=kind)
         if exact in self._models:
             return exact
-        same_bucket, same_hw, same_space = [], [], []
-        for k in sorted(self._models):
-            kk, s, b, h = split_key(k)
-            if kk != kind or s != space:
-                continue
+        first_bucket = first_hw = first_space = None
+        # one index bucket holds exactly the kind+space keys, pre-sorted,
+        # so the legacy tie-break (first key in sorted order per tier)
+        # is preserved without touching the rest of the corpus
+        for k in self._model_index.get((kind, space), ()):
+            _, _, b, h = split_key(k)
             if b == bucket:
-                same_bucket.append(k)
+                if first_bucket is None:
+                    first_bucket = k
+                    break                      # best possible tier: done
             elif h == hardware:
-                same_hw.append(k)
-            else:
-                same_space.append(k)
-        for tier in (same_bucket, same_hw, same_space):
-            if tier:
-                return tier[0]
+                if first_hw is None:
+                    first_hw = k
+            elif first_space is None:
+                first_space = k
+        for k in (first_bucket, first_hw, first_space):
+            if k is not None:
+                return k
         return None
+
+    def transfer_candidates(self, signature: SpaceSignature,
+                            bucket: str, hardware: str,
+                            threshold: float = DEFAULT_TRANSFER_THRESHOLD
+                            ) -> List[Tuple[str, float]]:
+        """Every compatible-space model key, most preferred first.
+
+        Scans same-kind index buckets for OTHER spaces (the four legacy
+        tiers own the exact space), gates each artifact through
+        ``transfer_compatible`` and ranks survivors by similarity — ties
+        broken toward the same bucket, then the same hardware, then
+        sorted key order.  One entry per (space, bucket, hardware) key;
+        empty when nothing clears the threshold (transfer never engages
+        on a weak match)."""
+        found: List[Tuple[Tuple, str, float]] = []
+        for (kk, s), keys in sorted(self._model_index.items()):
+            if kk != signature.kind or s == signature.space:
+                continue
+            for k in keys:
+                sig = self.model_signature(k)
+                if sig is None \
+                        or not transfer_compatible(sig, signature,
+                                                   threshold=threshold):
+                    continue
+                sim = similarity(sig, signature)
+                _, _, b, h = split_key(k)
+                rank = (-sim, 0 if b == bucket else 1,
+                        0 if h == hardware else 1, k)
+                found.append((rank, k, sim))
+        found.sort(key=lambda t: t[0])
+        return [(k, sim) for _, k, sim in found]
+
+    def nearest_transfer_key(self, signature: SpaceSignature,
+                             bucket: str, hardware: str,
+                             threshold: float = DEFAULT_TRANSFER_THRESHOLD
+                             ) -> Optional[Tuple[str, float]]:
+        """Fifth warm-start tier: best *compatible-space* model key, or
+        ``None`` when nothing clears the threshold (see
+        ``transfer_candidates`` for the full ranking)."""
+        cands = self.transfer_candidates(signature, bucket, hardware,
+                                         threshold=threshold)
+        return cands[0] if cands else None
 
     def load_nearest_model(self, space: str, bucket: str, hardware: str,
                            bind_space: Optional[TuningSpace] = None,
@@ -404,6 +522,69 @@ class ConfigStore:
         if key is None:
             return None, None
         return model_from_dict(self._models[key], space=bind_space), key
+
+    def load_transfer_model(self, signature: SpaceSignature,
+                            bucket: str, hardware: str,
+                            bind_space: TuningSpace,
+                            threshold: float = DEFAULT_TRANSFER_THRESHOLD
+                            ) -> Tuple[Optional[TransferredModel],
+                                       Optional[str], float]:
+        """``(model, key, similarity)`` for the best compatible-space
+        artifact, rebound onto ``bind_space`` through the shared-counter
+        intersection — ``(None, None, 0.0)`` when no stored model clears
+        the threshold.  Only consulted after all four exact-space tiers
+        miss, so exact warm-start behavior is untouched."""
+        found = self.nearest_transfer_key(signature, bucket, hardware,
+                                          threshold=threshold)
+        if found is None:
+            return None, None, 0.0
+        key, sim = found
+        try:
+            model = rebind_model_dict(self._models[key], bind_space,
+                                      signature, source_key=key,
+                                      similarity=sim)
+        except (ValueError, KeyError, TypeError):
+            # an artifact that gates as compatible but cannot rebind
+            # (e.g. empty shared-counter set) is a miss, not a crash
+            return None, None, 0.0
+        return model, key, sim
+
+    def load_transfer_ensemble(self, signature: SpaceSignature,
+                               bucket: str, hardware: str,
+                               bind_space: TuningSpace,
+                               threshold: float
+                               = DEFAULT_TRANSFER_THRESHOLD,
+                               limit: Optional[int] = None
+                               ) -> Tuple[Optional["TransferEnsemble"],
+                                          Optional[str], float]:
+        """``(ensemble, top_key, top_similarity)`` over EVERY
+        compatible-space artifact, each rebound onto ``bind_space`` —
+        ``(None, None, 0.0)`` when no stored model clears the threshold.
+
+        The similarity-weighted committee beats the single most-similar
+        source at the head of the ranking (where a warm start spends its
+        trials): structure every compatible space agrees on is exactly
+        what generalizes.  Candidates that gate as compatible but cannot
+        rebind are skipped, not fatal.  ``limit`` caps the committee at
+        the N most preferred sources (None: all)."""
+        from repro.core.model import TransferEnsemble
+
+        members = []
+        for key, sim in self.transfer_candidates(signature, bucket,
+                                                 hardware,
+                                                 threshold=threshold):
+            try:
+                members.append((rebind_model_dict(
+                    self._models[key], bind_space, signature,
+                    source_key=key, similarity=sim), sim))
+            except (ValueError, KeyError, TypeError):
+                continue
+            if limit is not None and len(members) >= limit:
+                break
+        if not members:
+            return None, None, 0.0
+        return TransferEnsemble(members), members[0][0].source_key, \
+            members[0][1]
 
     # -- persistence -----------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -600,7 +781,10 @@ class ConfigStore:
             mine = self._models.get(k)
             if mine is None or int(m.get("revision", 0)) \
                     > int(mine.get("revision", 0)):
-                self._models[k] = m
+                # pre-v3 artifacts carry no signature: compute one from
+                # the recorded parameters so the transfer tier sees them
+                self._models[k] = ensure_signature(m, kind=split_key(k)[0])
+                self._index_add(k)
 
     def prune(self, keep_hardware=None, keep_spaces=None,
               keep_buckets=None, keep_kinds=None,
@@ -642,6 +826,7 @@ class ConfigStore:
                     del self._entries[k]
                 for k in doomed_m:
                     del self._models[k]
+                    self._index_discard(k)
             return {
                 "dropped_entries": len(doomed_e),
                 "kept_entries": len(self._entries) - (len(doomed_e)
@@ -708,11 +893,17 @@ class ConfigStore:
             self._disk_token = None    # not set race-free; next save reads
         if d is None:
             self._entries, self._models = {}, {}
+            self._reindex_models()
             return self
         self._entries = {upgrade_key(k): StoreEntry.from_dict(e)
                          for k, e in d.get("entries", {}).items()}
-        self._models = {upgrade_key(k): m
-                        for k, m in d.get("models", {}).items()}
+        self._models = {}
+        for k, m in d.get("models", {}).items():
+            k = upgrade_key(k)
+            # pre-v3 artifacts gain a signature on the way in; the next
+            # save persists it (a version bump forces a full write)
+            self._models[k] = ensure_signature(m, kind=split_key(k)[0])
+        self._reindex_models()
         return self
 
     def _autosave(self) -> None:

@@ -130,10 +130,11 @@ def test_store_loads_pre_refactor_v1_file(tmp_path):
     assert store.get("serve_online", "p1n1", "tpu_v5e") is None
     assert store.get("gemm", "2048", "tpu_v4") is not None
 
-    # the autosaved file is now version 2 with 4-part keys throughout
+    # the autosaved file is now the current version with 4-part keys
+    # throughout
     with open(path) as f:
         d = json.load(f)
-    assert d["version"] == VERSION == 2
+    assert d["version"] == VERSION == 3
     assert set(d["entries"]) == {"kernel|gemm|2048|tpu_v4"}
     assert set(d["models"]) == {"kernel|gemm|2048|tpu_v4"}
     reopened = ConfigStore(path)

@@ -83,10 +83,10 @@ def test_config_store_round_trip(tmp_path):
     assert got.trials == 6
     assert got.meta["history"] == [[15, 0.012]]
     assert again.get("serve_online", "p9n9", "tpu_v4") is None
-    # the file is schema-tagged JSON with kind-namespaced (v2) keys
+    # the file is schema-tagged JSON with kind-namespaced keys
     with open(path) as f:
         d = json.load(f)
-    assert d["format"] == "repro.config_store" and d["version"] == 2
+    assert d["format"] == "repro.config_store" and d["version"] == 3
     assert set(d["entries"]) == {"serve|serve_online|p1n1|tpu_v4"}
 
 

@@ -1,0 +1,523 @@
+"""Cross-space model transfer (ISSUE 10).
+
+The acceptance surface: structural space signatures key TP→PC models by
+what they ARE (hashed parameter slots + counter sets + problem kind)
+instead of what they're named; the store grows a fifth, compatible-space
+warm-start tier BELOW the four exact-space tiers (which must stay
+bit-identical); transfer never crosses problem kinds; signature-less v2
+store files upgrade in place; and the fleet threads a distrust-and-verify
+``TransferredWarmStart`` through its warm-start path, surfacing
+``source:"transfer"`` + similarity in service responses.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import hwspec
+from repro.core.model import TransferredModel
+from repro.core.searcher import TransferredWarmStart
+from repro.core.tuning_space import TuningParameter, TuningSpace
+from repro.fleet import (FleetTuner, VirtualWorkerPool, job_from_registry)
+from repro.service import ShardedConfigStore, TuningDaemon, validate_request
+from repro.tuning import ConfigStore, TuningSession
+from repro.tuning.problem import make_problem
+from repro.tuning.serialize import (artifact_signature, ensure_signature,
+                                    model_from_dict, model_to_dict,
+                                    rebind_model_dict)
+from repro.tuning.signature import (DEFAULT_TRANSFER_THRESHOLD, ParamSlot,
+                                    SpaceSignature, map_parameters,
+                                    match_slots, similarity,
+                                    transfer_compatible)
+from repro.tuning.store import content_crc, store_key
+
+HW = hwspec.PRODUCTION
+
+
+def _kernel_sig(name):
+    return SpaceSignature.from_problem(make_problem("kernel", name))
+
+
+def _trained(kernel, model_kind="tree"):
+    p = make_problem("kernel", kernel)
+    sp = p.space()
+    sess = TuningSession(sp, p.workload_fn(), hw=HW, seed=0)
+    return sess.train(kind=model_kind, sample="deliberate"), sp
+
+
+# =============================================================================
+# Signatures: structure, matching, similarity
+# =============================================================================
+def test_signature_roundtrip_and_hash_stability():
+    sig = _kernel_sig("conv2d/4096")
+    again = SpaceSignature.from_dict(sig.to_dict())
+    assert again == sig
+    assert again.sig_hash == sig.sig_hash
+    assert sig.kind == "kernel" and sig.counters   # workload counters sampled
+
+
+def test_signature_rejects_wrong_format_and_version():
+    d = _kernel_sig("matmul").to_dict()
+    with pytest.raises(ValueError):
+        SpaceSignature.from_dict(dict(d, format="other"))
+    with pytest.raises(ValueError):
+        SpaceSignature.from_dict(dict(d, version=99))
+
+
+def test_match_slots_renamed_and_extended_parameters():
+    a = [ParamSlot.of(TuningParameter("BLOCK", (8, 16, 32))),
+         ParamSlot.of(TuningParameter("FLAG", (False, True)))]
+    # BLOCK renamed to TILE (same values: pairs by structure hash);
+    # FLAG extended is impossible (binary), keep it named
+    b = [ParamSlot.of(TuningParameter("FLAG", (False, True))),
+         ParamSlot.of(TuningParameter("TILE", (8, 16, 32)))]
+    pairs = {(i, j): s for i, j, s in match_slots(a, b)}
+    assert pairs[(0, 1)] == 1.0          # renamed, identical value set
+    assert pairs[(1, 0)] == 1.0          # same name
+    # extended value list: same name pairs with partial-credit Jaccard
+    c = [ParamSlot.of(TuningParameter("BLOCK", (8, 16, 32, 64)))]
+    pairs2 = match_slots(a, c)
+    (i, j, s), = [p for p in pairs2 if p[0] == 0]
+    assert j == 0 and s == pytest.approx(3 / 4)
+
+
+def test_similarity_symmetric_and_bounded():
+    sigs = [_kernel_sig(n) for n in ("matmul", "conv2d/4096", "nbody")]
+    for a in sigs:
+        assert similarity(a, a) == pytest.approx(1.0)
+        for b in sigs:
+            s = similarity(a, b)
+            assert 0.0 <= s <= 1.0
+            assert s == pytest.approx(similarity(b, a))
+
+
+def test_transfer_compatible_never_crosses_kinds():
+    sig = _kernel_sig("conv2d/4096")
+    # identical structure under a different kind must NOT be compatible,
+    # at any threshold
+    other = SpaceSignature(kind="serve", space=sig.space, slots=sig.slots,
+                           counters=sig.counters)
+    assert similarity(sig, other) == pytest.approx(1.0)
+    assert not transfer_compatible(sig, other, threshold=0.0)
+    assert transfer_compatible(sig, sig)
+
+
+def test_kernel_pairs_clear_threshold_serve_does_not():
+    """The conservative default separates sibling kernel spaces from the
+    serve geometry space — the empirical basis of the default."""
+    conv = _kernel_sig("conv2d/4096")
+    for name in ("matmul", "nbody", "coulomb", "transpose", "attention"):
+        assert similarity(conv, _kernel_sig(name)) \
+            >= DEFAULT_TRANSFER_THRESHOLD, name
+    serve = SpaceSignature.from_problem(make_problem("serve", "p1n1"))
+    kernelized = SpaceSignature(kind="kernel", space=serve.space,
+                                slots=serve.slots, counters=serve.counters)
+    assert similarity(conv, kernelized) < DEFAULT_TRANSFER_THRESHOLD
+
+
+# =============================================================================
+# Serializer: signature-carrying artifacts + rebinding
+# =============================================================================
+@pytest.mark.parametrize("model_kind", ["tree", "quadratic", "exact"])
+def test_artifact_carries_signature_and_roundtrips(model_kind):
+    model, sp = _trained("matmul", model_kind)
+    d = model_to_dict(model, sp, kind="kernel")
+    assert d["signature"]["format"] == "repro.space_signature"
+    sig = artifact_signature(d)
+    assert sig is not None and sig.kind == "kernel"
+    assert set(sig.counters) == set(model.counter_names)
+    m2 = model_from_dict(d)
+    assert m2.signature == sig
+    # byte-level round trip through JSON
+    d2 = json.loads(json.dumps(d))
+    assert artifact_signature(d2) == sig
+
+
+def test_ensure_signature_upgrades_legacy_artifacts():
+    model, sp = _trained("matmul")
+    d = model_to_dict(model, sp, kind="kernel")
+    legacy = {k: v for k, v in d.items() if k != "signature"}
+    fixed = ensure_signature(legacy, kind="kernel")
+    assert artifact_signature(fixed) == artifact_signature(d)
+    # already-signed artifacts come back unchanged (same object)
+    assert ensure_signature(fixed, kind="kernel") is fixed
+    # unsignable artifacts pass through untouched instead of raising
+    junk = {"format": "repro.tppc_model"}
+    assert ensure_signature(junk) is junk
+
+
+def test_rebind_model_dict_predicts_shared_counters():
+    model, sp = _trained("matmul")
+    d = model_to_dict(model, sp, kind="kernel")
+    target = make_problem("kernel", "conv2d/4096")
+    tsp, tsig = target.space(), SpaceSignature.from_problem(target)
+    tm = rebind_model_dict(d, tsp, tsig, source_key="k", similarity=0.5)
+    assert isinstance(tm, TransferredModel)
+    assert set(tm.counter_names) <= set(model.counter_names)
+    assert set(tm.counter_names) <= set(tsig.counters)
+    # scalar and batched paths agree, over the whole target space
+    mat = tm.predict_matrix(tsp)
+    assert mat.shape == (len(tsp), len(tm.counter_names))
+    for i in (0, len(tsp) // 2, len(tsp) - 1):
+        p = tm.predict(tsp[i])
+        for j, n in enumerate(tm.counter_names):
+            assert mat[i, j] == pytest.approx(p[n])
+    # translated configs always hold DECLARED source values
+    src_by_name = {pp.name: set(pp.values) for pp in sp.parameters}
+    cfg = tm.translate(tsp[0])
+    assert set(cfg) == set(src_by_name)
+    for name, v in cfg.items():
+        assert v in src_by_name[name]
+
+
+# =============================================================================
+# Store: fifth tier below the untouched legacy four
+# =============================================================================
+def _store_with_kernel_models(*kernels):
+    store = ConfigStore()
+    for k in kernels:
+        model, sp = _trained(k)
+        store.save_model(sp.name, "default", "tpu_v5e", model, sp,
+                         kind="kernel")
+    return store
+
+
+def test_transfer_tier_engages_only_after_legacy_tiers_miss():
+    store = _store_with_kernel_models("matmul", "transpose")
+    conv = make_problem("kernel", "conv2d/4096")
+    sig = SpaceSignature.from_problem(conv)
+    # never-seen space: legacy ladder misses, transfer tier hits
+    assert store.nearest_model_key("conv2d", "4096", "tpu_v5e",
+                                   kind="kernel") is None
+    found = store.nearest_transfer_key(sig, "4096", "tpu_v5e")
+    assert found is not None
+    key, sim = found
+    assert sim >= DEFAULT_TRANSFER_THRESHOLD
+    model, mkey, msim = store.load_transfer_model(sig, "4096", "tpu_v5e",
+                                                  conv.space())
+    assert (mkey, msim) == (key, sim)
+    assert isinstance(model, TransferredModel)
+    assert model.source_key == key
+    # once a model exists for the exact space, the legacy ladder answers
+    # and transfer no longer offers anything new for that space
+    cmodel, csp = _trained("conv2d/4096")
+    store.save_model(csp.name, "4096", "tpu_v5e", cmodel, csp,
+                     kind="kernel")
+    assert store.nearest_model_key(csp.name, "4096", "tpu_v5e",
+                                   kind="kernel") \
+        == store_key(csp.name, "4096", "tpu_v5e", kind="kernel")
+    refound = store.nearest_transfer_key(sig, "4096", "tpu_v5e")
+    assert refound is not None and refound[0] != \
+        store_key(csp.name, "4096", "tpu_v5e", kind="kernel")
+
+
+def test_transfer_tier_kind_isolation_in_store():
+    """A serve-kind artifact with a signature IDENTICAL to the kernel
+    job's space must never cross kinds through the transfer tier."""
+    store = ConfigStore()
+    model, sp = _trained("matmul")
+    d = model_to_dict(model, sp, kind="kernel")
+    # forge the same artifact under the serve kind (space renamed so the
+    # key parses as a different space of that kind)
+    forged = dict(d, space=dict(d["space"], name="serve_gemmish"))
+    forged.pop("signature")
+    store.put_model_dict("serve_gemmish", "default", "tpu_v5e", forged,
+                         kind="serve")
+    sig = _kernel_sig("matmul")
+    sig = SpaceSignature(kind="kernel", space="somewhere_else",
+                         slots=sig.slots, counters=sig.counters)
+    assert store.nearest_transfer_key(sig, "default", "tpu_v5e",
+                                      threshold=0.0) is None
+    # the same structure under the matching kind IS offered
+    store.put_model_dict("gemmish", "default", "tpu_v5e",
+                         dict(d, space=dict(d["space"], name="gemmish")),
+                         kind="kernel")
+    assert store.nearest_transfer_key(sig, "default", "tpu_v5e") is not None
+
+
+def test_store_v2_file_upgrades_to_v3_with_signatures(tmp_path):
+    store = _store_with_kernel_models("matmul")
+    path = str(tmp_path / "store.json")
+    store.save(path)
+    d = json.load(open(path))
+    assert d["version"] == 3
+    # regress the file to version 2: signature-less artifacts
+    for m in d["models"].values():
+        m.pop("signature", None)
+    d["version"] = 2
+    d["crc"] = content_crc(d["entries"], d["models"])
+    with open(path, "w") as f:
+        json.dump(d, f)
+    # v2 loads; signatures recomputed in memory; transfer tier works
+    s2 = ConfigStore(path)
+    conv = make_problem("kernel", "conv2d/4096")
+    sig = SpaceSignature.from_problem(conv)
+    assert s2.nearest_transfer_key(sig, "4096", "tpu_v5e") is not None
+    # any write persists the upgrade: v3 on disk, signatures embedded
+    s2.put(space="x", bucket="b", hardware="h", config={"A": 1},
+           runtime=1.0, trials=1, kind="kernel")
+    d2 = json.load(open(path))
+    assert d2["version"] == 3
+    assert all("signature" in m for m in d2["models"].values())
+    # and reloads cleanly
+    s3 = ConfigStore(path)
+    assert s3.nearest_transfer_key(sig, "4096", "tpu_v5e") is not None
+
+
+def test_model_index_matches_brute_force_through_mutations():
+    """The (kind, space)-bucketed index must stay exact through put,
+    merge, prune and reload — nearest_model_key answers must equal the
+    pre-index brute-force scan."""
+    art = {"format": "repro.tppc_model"}
+    store = ConfigStore()
+    keys = [("spA", "b1", "h1", "kernel"), ("spA", "b2", "h1", "kernel"),
+            ("spA", "b1", "h2", "kernel"), ("spB", "b1", "h1", "kernel"),
+            ("serve_x", "b1", "h1", "serve"), ("spA", "b3", "h3", "sharding")]
+    for s, b, h, kk in keys:
+        store.put_model_dict(s, b, h, dict(art), kind=kk)
+
+    def brute(space, bucket, hardware, kind):
+        from repro.tuning.store import split_key
+        exact = store_key(space, bucket, hardware, kind=kind)
+        if exact in store._models:
+            return exact
+        tiers = ([], [], [])
+        for k in sorted(store._models):
+            kk, s, b, h = split_key(k)
+            if kk != kind or s != space:
+                continue
+            if b == bucket:
+                tiers[0].append(k)
+            elif h == hardware:
+                tiers[1].append(k)
+            else:
+                tiers[2].append(k)
+        for t in tiers:
+            if t:
+                return t[0]
+        return None
+
+    probes = [("spA", "b1", "h1", "kernel"), ("spA", "b9", "h1", "kernel"),
+              ("spA", "b9", "h9", "kernel"), ("spA", "b1", "h1", "serve"),
+              ("spB", "b9", "h9", "kernel"), ("spC", "b1", "h1", "kernel"),
+              ("serve_x", "zz", "h1", "serve")]
+
+    def check():
+        for s, b, h, kk in probes:
+            assert store.nearest_model_key(s, b, h, kind=kk) \
+                == brute(s, b, h, kk), (s, b, h, kk)
+
+    check()
+    store.prune(keep_spaces={"spA", "serve_x"})
+    check()
+    store._merge_from({"format": "repro.config_store", "version": 3,
+                       "entries": {},
+                       "models": {"kernel|spB|b7|h7": dict(art)}})
+    check()
+    store.put_model_dict("spA", "b1", "h1", dict(art), kind="kernel")
+    check()
+
+
+def test_sharded_store_transfer_tier_and_rebalance_index(tmp_path):
+    store = ShardedConfigStore(str(tmp_path / "c"), n_shards=3)
+    model, sp = _trained("matmul")
+    store.save_model(sp.name, "default", "tpu_v5e", model, sp,
+                     kind="kernel")
+    conv = make_problem("kernel", "conv2d/4096")
+    sig = SpaceSignature.from_problem(conv)
+    found = store.nearest_transfer_key(sig, "4096", "tpu_v5e")
+    assert found is not None and found[1] >= DEFAULT_TRANSFER_THRESHOLD
+    m, key, sim = store.load_transfer_model(sig, "4096", "tpu_v5e",
+                                            conv.space())
+    assert isinstance(m, TransferredModel) and (key, sim) == found
+    # reopen: per-shard indexes rebuilt from disk, same answers
+    s2 = ShardedConfigStore(str(tmp_path / "c"), n_shards=3)
+    assert s2.nearest_transfer_key(sig, "4096", "tpu_v5e") == found
+    # kind isolation holds across shards too
+    bad = SpaceSignature(kind="serve", space=sig.space, slots=sig.slots,
+                         counters=sig.counters)
+    assert s2.nearest_transfer_key(bad, "4096", "tpu_v5e",
+                                   threshold=0.0) is None
+
+
+def test_load_transfer_ensemble_blends_all_compatible_sources():
+    store = _store_with_kernel_models("matmul", "transpose", "nbody")
+    conv = make_problem("kernel", "conv2d/4096")
+    sig = SpaceSignature.from_problem(conv)
+    ens, key, sim = store.load_transfer_ensemble(sig, "4096", "tpu_v5e",
+                                                 conv.space())
+    assert ens is not None and len(ens) == 3
+    # best-first: member similarities descend, top is the provenance
+    sims = [s for _, s in ens.members]
+    assert sims == sorted(sims, reverse=True)
+    assert (ens.source_key, ens.similarity) == (key, sim)
+    assert store.nearest_transfer_key(sig, "4096", "tpu_v5e") == (key, sim)
+    for m, _ in ens.members:
+        assert isinstance(m, TransferredModel)
+    # limit caps the committee at the most preferred sources
+    ens2, key2, _ = store.load_transfer_ensemble(
+        sig, "4096", "tpu_v5e", conv.space(), limit=2)
+    assert len(ens2) == 2 and key2 == key
+
+    from repro.core.tuner import ensemble_runtime_scores
+    scores = ensemble_runtime_scores(ens, conv.space(), HW)
+    assert scores.shape == (len(conv.space()),)
+    assert np.all(scores >= 1.0 - 1e-12)     # relative: 1.0 = consensus best
+    # deterministic: same committee, same ranking
+    again = ensemble_runtime_scores(ens, conv.space(), HW)
+    assert np.array_equal(np.argsort(scores, kind="stable"),
+                          np.argsort(again, kind="stable"))
+
+
+# =============================================================================
+# TransferredWarmStart: distrust-and-verify
+# =============================================================================
+def _drain(searcher, runtime_of):
+    """Run the ask-tell protocol to exhaustion; return visit order."""
+    from repro.core.account import Observation
+
+    visited = []
+    while not searcher.done:
+        cands = searcher.propose(4)
+        if not cands:
+            if searcher.done:
+                break
+            continue
+        obs = [Observation(index=c.index, runtime=runtime_of(c.index))
+               for c in cands]
+        visited.extend(c.index for c in cands)
+        searcher.observe(obs)
+    return visited
+
+
+def test_transferred_warm_start_trusts_a_good_order():
+    space = TuningSpace([TuningParameter("X", tuple(range(16)))], name="s")
+    order = list(range(16))              # exactly the true ranking
+    s = TransferredWarmStart(space, order=order, seed=0, verify=3)
+    visited = _drain(s, runtime_of=lambda i: float(i + 1))
+    assert s.trusted is True
+    assert visited[:3] == order[:3]      # head of the prior first
+    probes = visited[3:6]
+    # after the wave: the REST of the transferred order, in order
+    rest = [i for i in order if i not in set(visited[:6])]
+    assert visited[6:6 + len(rest)] == rest
+    assert sorted(visited) == list(range(16))      # full coverage
+    assert len(visited) == 16                      # no repeats
+
+
+def test_transferred_warm_start_distrusts_a_bad_order():
+    space = TuningSpace([TuningParameter("X", tuple(range(16)))], name="s")
+    order = list(range(15, -1, -1))      # exactly backwards: worst first
+    s = TransferredWarmStart(space, order=order, seed=0, verify=3)
+    visited = _drain(s, runtime_of=lambda i: float(i + 1))
+    assert s.trusted is False
+    # after the wave the searcher abandons the transferred order for the
+    # seed-shuffled walk — NOT the prior's (bad) continuation
+    wave = visited[:6]
+    after = visited[6:]
+    assert after != [i for i in order if i not in set(wave)]
+    assert sorted(visited) == list(range(16))
+    assert len(visited) == 16
+
+
+def test_transferred_warm_start_empty_order_is_plain_walk():
+    space = TuningSpace([TuningParameter("X", tuple(range(8)))], name="s")
+    s = TransferredWarmStart(space, seed=3)
+    visited = _drain(s, runtime_of=float)
+    assert sorted(visited) == list(range(8))
+
+
+# =============================================================================
+# Fleet integration + exact-path golden
+# =============================================================================
+def _run_fleet(store, transfer=True, kernel="conv2d", inp="4096", seed=0):
+    pool = VirtualWorkerPool(workers=4)
+    try:
+        ft = FleetTuner(
+            [job_from_registry(kernel, inp, "tpu_v5e", budget=20,
+                               seed=seed)],
+            pool, store=store, transfer=transfer, publish_models=False)
+        report = ft.run()
+    finally:
+        pool.close()
+    assert ft.train_errors == [], ft.train_errors
+    return report.results[0]
+
+
+def test_fleet_transfers_onto_never_seen_kernel():
+    store = _store_with_kernel_models("matmul")
+    res = _run_fleet(store, transfer=True)
+    assert res.searcher == "transfer_warm_start"
+    assert res.warm_started
+    assert res.transfer_from is not None
+    assert res.transfer_similarity >= DEFAULT_TRANSFER_THRESHOLD
+    # the published entry records the provenance
+    e = store.get("conv2d", "4096", "tpu_v5e", kind="kernel")
+    assert e is not None
+    assert e.meta["transfer_from"] == res.transfer_from
+    assert e.meta["transfer_similarity"] == res.transfer_similarity
+
+
+def test_fleet_no_transfer_flag_pins_legacy_ladder():
+    store = _store_with_kernel_models("matmul")
+    res = _run_fleet(store, transfer=False)
+    assert res.searcher == "random"
+    assert res.transfer_from is None and res.transfer_similarity is None
+
+
+def test_exact_warm_start_trace_identical_with_transfer_enabled():
+    """The transfer tier must be invisible when any legacy tier hits:
+    bit-identical traces with transfer on and off."""
+    base = _store_with_kernel_models("conv2d/4096")
+    runs = {}
+    for flag in (True, False):
+        store = ConfigStore()
+        store._models = dict(base._models)
+        store._reindex_models()
+        runs[flag] = _run_fleet(store, transfer=flag)
+    on, off = runs[True], runs[False]
+    assert on.searcher == off.searcher == "warm_start"
+    assert on.trace == off.trace
+    assert on.history == off.history
+    assert on.best_index == off.best_index
+    assert on.transfer_from is None and off.transfer_from is None
+
+
+def test_cold_fleet_trace_identical_with_transfer_enabled():
+    """Empty store: transfer enabled must change nothing about a cold
+    run (there is nothing to transfer from)."""
+    on = _run_fleet(ConfigStore(), transfer=True)
+    off = _run_fleet(ConfigStore(), transfer=False)
+    assert on.searcher == off.searcher == "random"
+    assert on.trace == off.trace
+
+
+# =============================================================================
+# Service: source:"transfer" + similarity on the wire
+# =============================================================================
+def test_daemon_surfaces_transfer_source_and_stats():
+    store = _store_with_kernel_models("matmul")
+    d = TuningDaemon(VirtualWorkerPool(workers=4), store,
+                     default_trial_budget=6)
+    d.tuner.begin()
+    r = d.handle(validate_request(dict(
+        op="submit", kind="kernel", tenant="t", kernel="conv2d",
+        input="4096", hardware="tpu_v5e")))
+    assert r["ok"]
+    rid = r["request_id"]
+    for _ in range(2000):
+        if d._records[rid].state == "done":
+            break
+        d._admit_pending()
+        d.tuner.step(max_wait=0.01)
+        d._meter()
+    res = d.handle({"op": "result", "request_id": rid})
+    assert res["ok"]
+    assert res["source"] == "transfer"
+    assert res["transfer_from"] is not None
+    assert res["similarity"] >= DEFAULT_TRANSFER_THRESHOLD
+    assert res["warm_started"]
+    stats = d.handle({"op": "stats"})
+    assert stats["transfers"] == 1
+    assert stats["sources"].get("transfer") == 1
